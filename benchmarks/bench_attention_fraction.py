@@ -1,0 +1,53 @@
+"""Paper Fig. 3: fraction of query-response time spent in the attention
+mechanism.
+
+Measured the way the paper frames it: MemN2N query response = embedding
+of the question + attention hops + final projection; the attention
+mechanism (score, softmax, weighted sum over n memories) is timed
+against the total. The paper reports >70% for MemN2N query response at
+n<=320 on CPU; we sweep n.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.models import memn2n
+
+
+def run() -> List[dict]:
+    rows: List[dict] = []
+    for n in [64, 320, 1024]:
+        cfg = memn2n.MemN2NConfig(vocab_size=512, d_embed=64, num_hops=3,
+                                  max_sentences=n, max_words=8)
+        params = memn2n.init_params(jax.random.PRNGKey(0), cfg)
+        key = jax.random.PRNGKey(1)
+        sents = jax.random.randint(key, (16, n, 8), 1, 512)
+        quest = jax.random.randint(key, (16, 8), 1, 512)
+
+        full = jax.jit(lambda s, q: jax.vmap(
+            lambda ss, qq: memn2n.answer(params, ss, qq, cfg))(s, q))
+        t_full = time_fn(full, sents, quest, iters=10)
+
+        # attention-free variant: embedding + final projection only
+        def no_attn(s, q):
+            u = jnp.sum(params["query_embed"][q]
+                        * (q > 0)[:, None].astype(jnp.float32), axis=0)
+            return u @ params["w_final"]
+
+        nofn = jax.jit(lambda s, q: jax.vmap(
+            lambda ss, qq: no_attn(ss, qq))(s, q))
+        t_no = time_fn(nofn, sents, quest, iters=10)
+        frac = max(0.0, (t_full - t_no) / t_full)
+        rows.append({"name": "fig3_attention_fraction",
+                     "metric": f"memn2n_attn_share_n{n}",
+                     "value": f"{frac:.3f}"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,59 @@
+"""Paper SSVI-B quantization study + SSIII-A footnote-1 LUT error bound.
+
+(a) f-bit sweep: quantize MemN2N attention inputs to i=4, f in
+    {2,3,4,6} and measure accuracy delta (paper: f=4 costs <0.1%).
+(b) 2-LUT exponent decomposition: max |e^x - lut(x)| over the valid
+    input range, checked against the analytic epsilon bound.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import trained_memn2n
+from repro.config import A3Config, A3Mode
+from repro.models import memn2n
+from repro.core.quantization import make_lut_exp, quantize_fixed_point
+
+
+def run(num_statements: int = 48) -> List[dict]:
+    params, cfg, task, test = trained_memn2n(num_statements)
+    rows: List[dict] = []
+    base = float(memn2n.accuracy(params, test, cfg))
+
+    for f in [2, 3, 4, 6]:
+        a3 = A3Config(mode=A3Mode.CUSTOM, m_fraction=1.0,
+                      threshold_pct=1e-6, int_bits=4, frac_bits=f)
+        acc = float(memn2n.accuracy(params, test, cfg, a3))
+        rows.append({"name": "sec6b_quantization",
+                     "metric": f"acc_delta_pct_f={f}",
+                     "value": f"{100*(acc-base):.2f}"})
+
+    # LUT exponent error (fn.1: |e^{x+eps} - e^x| < |eps| for x <= 0):
+    # the two-LUT path quantizes x to 2f fraction bits (eps = 2^-2f / 2)
+    # and the error after exp must stay below eps.
+    for f in [4, 8]:
+        # index width must cover the [-8, 0] input range: 2f fraction
+        # bits + 3 integer bits
+        lut = make_lut_exp(frac_bits=2 * f, total_bits=2 * f + 3,
+                           out_frac_bits=24)
+        xs = jnp.linspace(-8.0, 0.0, 20001)
+        err = float(jnp.max(jnp.abs(lut(xs) - jnp.exp(xs))))
+        eps = 2.0 ** (-2 * f) / 2
+        rows.append({"name": "fn1_lut_exponent",
+                     "metric": f"max_abs_err_2f={2*f}",
+                     "value": f"{err:.2e}"})
+        rows.append({"name": "fn1_lut_exponent",
+                     "metric": f"bound_eps_2f={2*f}",
+                     "value": f"{eps:.2e}"})
+        rows.append({"name": "fn1_lut_exponent",
+                     "metric": f"bound_ok_2f={2*f}",
+                     "value": str(err <= eps + 1e-9)})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,61 @@
+"""Paper Fig. 14: throughput/latency of the attention operation —
+exact vs approximate (conservative / aggressive).
+
+On real TPU hardware the win comes from the block-sparse kernel skipping
+candidate-free tiles. This container is CPU-only, so we report BOTH:
+  * measured wall time of the jitted reference paths (CPU; indicative),
+  * the FLOP-reduction accounting (`flop_savings`) that determines the
+    TPU-side speedup of the score/output stages (paper's operation-count
+    argument, SSVI-C).
+Shapes follow the paper: n=320, d=64 (BERT/SQuAD-like self-attention),
+and a batched single-query (MemN2N-like) case.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.config import A3Config
+from repro.core.a3_attention import a3_self_attention, flop_savings
+
+
+def run(n: int = 320, d: int = 64) -> List[dict]:
+    rows: List[dict] = []
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (n, d)) * 0.5
+    k = jax.random.normal(kk, (n, d)) * 0.5
+    v = jax.random.normal(kv, (n, d)) * 0.5
+
+    configs = [("exact", A3Config()),
+               ("conservative", A3Config.conservative()),
+               ("aggressive", A3Config.aggressive())]
+    base_t = None
+    for label, a3 in configs:
+        fn = jax.jit(lambda q, k, v, a3=a3: a3_self_attention(q, k, v, a3)[0])
+        t = time_fn(fn, q, k, v, iters=10)
+        rows.append({"name": "fig14_throughput",
+                     "metric": f"self_attn_us_{label}",
+                     "value": f"{t*1e6:.1f}"})
+        if base_t is None:
+            base_t = t
+        _, aux = a3_self_attention(q, k, v, a3)
+        sav = flop_savings(aux, n, d)
+        rows.append({"name": "fig14_throughput",
+                     "metric": f"score_flop_fraction_{label}",
+                     "value": f"{float(sav['score_flop_fraction']):.3f}"})
+        rows.append({"name": "fig14_throughput",
+                     "metric": f"output_flop_fraction_{label}",
+                     "value": f"{float(sav['output_flop_fraction']):.3f}"})
+        rows.append({"name": "fig14_throughput",
+                     "metric": f"mean_candidates_{label}",
+                     "value": f"{float(sav['mean_candidates']):.1f}"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,63 @@
+"""Recompute roofline terms from saved compiled-HLO artifacts (no
+recompilation): keeps the analysis iterable as ``hlo_analysis`` improves.
+
+  PYTHONPATH=src:. python -m benchmarks.reanalyze \
+      experiments_dryrun_16x16.json experiments/hlo [out.json]
+"""
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+import sys
+
+from repro.launch.hlo_analysis import HloModule
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def main():
+    json_path, hlo_dir = sys.argv[1], sys.argv[2]
+    out_path = sys.argv[3] if len(sys.argv) > 3 else json_path
+    records = json.load(open(json_path))
+    n_updated = 0
+    for r in records:
+        if "error" in r:
+            continue
+        fn = f"{r['arch']}_{r['shape']}_{r['mesh']}"
+        if r.get("a3_mode", "off") != "off":
+            fn += f"_a3-{r['a3_mode']}"
+        path = os.path.join(hlo_dir, fn + ".hlo.gz")
+        if not os.path.exists(path):
+            continue
+        with gzip.open(path, "rt") as f:
+            mod = HloModule(f.read())
+        flops = mod.dot_flops()
+        bts = mod.hbm_bytes()
+        ob, oc, wire = mod.collectives()
+        coll = sum(ob.values())
+        r.update(
+            flops_per_device=flops, bytes_per_device=bts,
+            collective_bytes=coll, wire_bytes=wire,
+            compute_s=flops / PEAK_FLOPS_BF16,
+            memory_s=bts / HBM_BW,
+            collective_s=coll / ICI_BW,
+            op_counts=oc,
+        )
+        terms = {"compute": r["compute_s"], "memory": r["memory_s"],
+                 "collective": r["collective_s"]}
+        r["bottleneck"] = max(terms, key=terms.get)
+        total = flops * r["chips"]
+        r["useful_flop_ratio"] = r["model_flops"] / total if total else 0.0
+        t = max(terms.values())
+        r["roofline_fraction"] = (r["model_flops"] /
+                                  (r["chips"] * PEAK_FLOPS_BF16 * t)
+                                  if t > 0 else 0.0)
+        n_updated += 1
+    with open(out_path, "w") as f:
+        json.dump(records, f, indent=1)
+    print(f"re-analyzed {n_updated}/{len(records)} records -> {out_path}")
+
+
+if __name__ == "__main__":
+    main()

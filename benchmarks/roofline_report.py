@@ -1,0 +1,68 @@
+"""Render the EXPERIMENTS.md SSRoofline table from dry-run JSON records.
+
+  PYTHONPATH=src:. python -m benchmarks.roofline_report \
+      experiments_dryrun_16x16.json [experiments_dryrun_2x16x16.json ...]
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import List
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def render(records: List[dict]) -> str:
+    rows = []
+    hdr = ("| arch | shape | mesh | compute | memory | collective | "
+           "bottleneck | peak GiB/dev | useful/HLO | roofline frac |")
+    sep = "|" + "---|" * 10
+    rows.append(hdr)
+    rows.append(sep)
+    for r in records:
+        if "error" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"ERROR: {r['error'][:40]} |" + " |" * 6)
+            continue
+        peak = r["memory"]["peak_device_bytes"] / 2 ** 30
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {_fmt_s(r['compute_s'])} | {_fmt_s(r['memory_s'])} "
+            f"| {_fmt_s(r['collective_s'])} | **{r['bottleneck']}** "
+            f"| {peak:.1f} | {r['useful_flop_ratio']:.3f} "
+            f"| {r['roofline_fraction']:.4f} |")
+    return "\n".join(rows)
+
+
+def summarize(records: List[dict]) -> str:
+    ok = [r for r in records if "error" not in r]
+    bn = {}
+    for r in ok:
+        bn[r["bottleneck"]] = bn.get(r["bottleneck"], 0) + 1
+    lines = [f"cells OK: {len(ok)}/{len(records)}; bottlenecks: {bn}"]
+    over = [r for r in ok
+            if r["memory"]["peak_device_bytes"] > 16 * 2 ** 30]
+    if over:
+        lines.append("cells over 16 GiB v5e HBM: " + ", ".join(
+            f"{r['arch']}x{r['shape']}({r['mesh']})" for r in over))
+    return "\n".join(lines)
+
+
+def main():
+    records = []
+    for path in sys.argv[1:]:
+        with open(path) as f:
+            records.extend(json.load(f))
+    print(render(records))
+    print()
+    print(summarize(records))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  python -m benchmarks.run              # all (trains the MemN2N once)
+  python -m benchmarks.run --only fig11,fig14
+Output: ``name,metric,value`` CSV on stdout.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks.common import rows_to_csv
+
+_BENCHES = {
+    "fig3": ("benchmarks.bench_attention_fraction", "attention runtime share"),
+    "fig11": ("benchmarks.bench_m_sweep", "candidate-selection M sweep"),
+    "fig12": ("benchmarks.bench_t_sweep", "post-scoring T sweep"),
+    "fig13": ("benchmarks.bench_approx_configs", "conservative/aggressive"),
+    "fig14": ("benchmarks.bench_throughput", "throughput/latency + FLOPs"),
+    "sec6b": ("benchmarks.bench_quantization", "quantization + LUT bound"),
+    "kernels": ("benchmarks.bench_kernels", "kernel block-skip + select"),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated keys: " + ",".join(_BENCHES))
+    args = ap.parse_args()
+    keys = list(_BENCHES) if not args.only else args.only.split(",")
+
+    all_rows = []
+    failures = 0
+    for k in keys:
+        mod_name, desc = _BENCHES[k]
+        t0 = time.time()
+        print(f"# running {k}: {desc} ...", file=sys.stderr)
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            rows = mod.run()
+            all_rows.extend(rows)
+            print(f"#   {k} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"#   {k} FAILED", file=sys.stderr)
+    print(rows_to_csv(all_rows))
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Serving example: batched requests through the slot engine with the
+A^3 approximate decode path, comparing exact vs approximate outputs and
+reporting agreement + engine stats.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch phi4-mini-3.8b]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.config import A3Config, get_arch, smoke_variant
+from repro.models import decoder
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi4-mini-3.8b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = smoke_variant(get_arch(args.arch))
+    params = decoder.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=args.prompt_len)
+               for _ in range(args.requests)]
+
+    results = {}
+    for label, a3 in [("exact", A3Config()),
+                      ("a3-conservative", A3Config.conservative())]:
+        eng = ServeEngine(params, cfg, slots=4, max_len=256, a3=a3)
+        uids = [eng.submit(p, max_new_tokens=args.max_new) for p in prompts]
+        eng.run_to_completion()
+        results[label] = [eng.result(u) for u in uids]
+        total = sum(len(r) for r in results[label])
+        print(f"{label:16s}: {total} tokens generated, stats={eng.stats}")
+
+    agree = np.mean([
+        np.mean(np.asarray(a) == np.asarray(b))
+        for a, b in zip(results["exact"], results["a3-conservative"])])
+    print(f"\nexact vs A3-conservative token agreement: {agree:.2%}")
+    print("sample exact      :", results["exact"][0])
+    print("sample a3-conserv :", results["a3-conservative"][0])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,357 @@
+"""Configuration system for the repro framework.
+
+Plain dataclasses (no external deps), a registry for named architecture
+configs, and the shape suites assigned to this paper. Everything the
+launcher / dry-run / tests consume flows through these types.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Attention / block variants
+# ---------------------------------------------------------------------------
+
+class AttentionKind(str, enum.Enum):
+    FULL = "full"                  # global causal attention
+    SLIDING = "sliding"            # sliding-window attention
+    LOCAL_GLOBAL = "local_global"  # pattern of local + global layers (gemma3)
+
+
+class BlockKind(str, enum.Enum):
+    ATTENTION = "attention"
+    RGLRU = "rglru"        # RecurrentGemma RG-LRU block
+    MLSTM = "mlstm"        # xLSTM matrix-memory block
+    SLSTM = "slstm"        # xLSTM scalar-memory block
+
+
+class A3Mode(str, enum.Enum):
+    OFF = "off"                     # exact attention
+    CONSERVATIVE = "conservative"   # paper: M = n/2, T = 5%
+    AGGRESSIVE = "aggressive"       # paper: M = n/8, T = 10%
+    CUSTOM = "custom"
+
+
+@dataclass(frozen=True)
+class A3Config:
+    """Configuration for the paper's approximation scheme."""
+    mode: A3Mode = A3Mode.OFF
+    # M: candidate-selection iteration count. In the paper M is given as a
+    # fraction of n; `m_fraction` expresses that; `m_absolute` overrides.
+    m_fraction: float = 0.5
+    m_absolute: Optional[int] = None
+    # T (%): post-scoring threshold. t = -ln(T/100).
+    threshold_pct: float = 5.0
+    # Fixed-point quantization (paper: i=4, f=4). None disables fake-quant.
+    int_bits: Optional[int] = None
+    frac_bits: Optional[int] = None
+    # Use the 2-LUT exponent decomposition numerics for softmax.
+    lut_exponent: bool = False
+    # Block size used by the block-sparse TPU kernel (MXU granularity).
+    block_q: int = 128
+    block_k: int = 128
+    # Distributed selection (SSPerf H3.v4): the KV ring is split into
+    # ``select_shards`` blocks (aligned with the model mesh axis), keys
+    # are column-sorted per block at comprehension time, and each shard
+    # runs the greedy walk + top-(C/NS) gather locally — no global
+    # top_k collectives. 1 = single-shard (paper-literal) selection.
+    select_shards: int = 1
+
+    def m_for(self, n: int) -> int:
+        if self.m_absolute is not None:
+            return min(self.m_absolute, n)
+        return max(1, int(round(self.m_fraction * n)))
+
+    @property
+    def threshold_nats(self) -> float:
+        import math
+        return -math.log(self.threshold_pct / 100.0)
+
+    @staticmethod
+    def conservative() -> "A3Config":
+        return A3Config(mode=A3Mode.CONSERVATIVE, m_fraction=0.5, threshold_pct=5.0)
+
+    @staticmethod
+    def aggressive() -> "A3Config":
+        return A3Config(mode=A3Mode.AGGRESSIVE, m_fraction=0.125, threshold_pct=10.0)
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int            # routed experts
+    num_shared: int = 0         # always-on shared experts (deepseek-moe)
+    top_k: int = 2
+    d_expert: int = 0           # per-expert FFN hidden dim (0 -> d_ff)
+    router_jitter: float = 0.0
+    load_balance_coef: float = 0.01
+    # First k dense layers (deepseek-moe uses 1 dense layer at the bottom).
+    num_dense_layers: int = 0
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # moe | dense | hybrid | ssm | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None  # default d_model // num_heads
+    max_seq_len: int = 131072
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    attention_kind: AttentionKind = AttentionKind.FULL
+    window_size: int = 4096                  # for sliding / local layers
+    local_global_pattern: int = 0            # gemma3: 5 => 5 local : 1 global
+    # Block layout. Empty -> all attention. Otherwise a repeating pattern,
+    # e.g. recurrentgemma (rglru, rglru, attention).
+    block_pattern: Tuple[BlockKind, ...] = ()
+    moe: Optional[MoEConfig] = None
+    # Modality frontend stub: tokens are replaced by precomputed embeddings.
+    frontend: Optional[str] = None           # None | "audio_frames" | "vision_patches"
+    num_codebooks: int = 1                   # musicgen parallel codebooks
+    # activation / misc
+    act: str = "swiglu"                      # swiglu | gelu
+    logit_softcap: float = 0.0
+    dtype: str = "bfloat16"
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.num_heads
+
+    def block_kind(self, layer_idx: int) -> BlockKind:
+        if not self.block_pattern:
+            return BlockKind.ATTENTION
+        return self.block_pattern[layer_idx % len(self.block_pattern)]
+
+    def layer_is_global(self, layer_idx: int) -> bool:
+        """For LOCAL_GLOBAL patterns: every (pattern+1)-th layer is global."""
+        if self.attention_kind != AttentionKind.LOCAL_GLOBAL:
+            return self.attention_kind == AttentionKind.FULL
+        p = self.local_global_pattern
+        return (layer_idx % (p + 1)) == p
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for roofline MODEL_FLOPS)."""
+        d, h = self.d_model, self.resolved_head_dim
+        n_q, n_kv = self.num_heads, self.num_kv_heads
+        attn = d * (n_q * h) + 2 * d * (n_kv * h) + (n_q * h) * d
+        if self.act == "swiglu":
+            ffn_dense = 3 * self.d_model * self.d_ff
+        else:
+            ffn_dense = 2 * self.d_model * self.d_ff
+        total = 0
+        for i in range(self.num_layers):
+            kind = self.block_kind(i)
+            if kind == BlockKind.ATTENTION:
+                total += attn
+            elif kind == BlockKind.RGLRU:
+                # conv1d + gates: in/out proj (d->d_rnn->d), rg-lru params
+                d_rnn = n_q * h
+                total += 2 * d * d_rnn + 4 * d_rnn
+            elif kind == BlockKind.MLSTM:
+                total += d * (n_q * h) * 3 + (n_q * h) * d + 2 * d * 2 * d
+            elif kind == BlockKind.SLSTM:
+                total += 4 * d * d + 4 * d * d
+            # FFN
+            if kind in (BlockKind.MLSTM, BlockKind.SLSTM) and self.d_ff == 0:
+                pass  # xlstm has no separate FFN
+            elif self.moe is not None and i >= self.moe.num_dense_layers:
+                de = self.moe.d_expert or self.d_ff
+                n_exp = self.moe.num_experts + self.moe.num_shared
+                total += 3 * self.d_model * de * n_exp + d * self.moe.num_experts
+            else:
+                total += ffn_dense
+            total += 2 * d  # norms
+        total += self.vocab_size * d  # embedding
+        if not self.tie_embeddings:
+            total += self.vocab_size * d
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: shared + top_k experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        de = self.moe.d_expert or self.d_ff
+        n_exp = self.moe.num_experts + self.moe.num_shared
+        n_act = self.moe.top_k + self.moe.num_shared
+        moe_layers = self.num_layers - self.moe.num_dense_layers
+        dead = 3 * self.d_model * de * (n_exp - n_act) * moe_layers
+        return self.param_count() - dead
+
+
+# ---------------------------------------------------------------------------
+# Shapes (assigned suites)
+# ---------------------------------------------------------------------------
+
+class ShapeKind(str, enum.Enum):
+    TRAIN = "train"
+    PREFILL = "prefill"
+    DECODE = "decode"
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: ShapeKind
+    seq_len: int
+    global_batch: int
+
+    @property
+    def tokens_per_step(self) -> int:
+        if self.kind == ShapeKind.DECODE:
+            return self.global_batch  # one new token per sequence
+        return self.seq_len * self.global_batch
+
+
+SHAPE_SUITE: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", ShapeKind.TRAIN, 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", ShapeKind.PREFILL, 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", ShapeKind.DECODE, 32768, 128),
+    "long_500k": ShapeConfig("long_500k", ShapeKind.DECODE, 524288, 1),
+}
+
+# Archs allowed to run long_500k (sub-quadratic attention); see DESIGN.md §6.
+LONG_CONTEXT_ARCHS = frozenset(
+    {"recurrentgemma-2b", "xlstm-350m", "h2o-danube-1.8b", "gemma3-4b"}
+)
+
+
+def applicable_shapes(arch: str) -> List[str]:
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch in LONG_CONTEXT_ARCHS:
+        names.append("long_500k")
+    return names
+
+
+# ---------------------------------------------------------------------------
+# Training / runtime configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    # dtypes for optimizer state ("float32" | "bfloat16")
+    m_dtype: str = "float32"
+    v_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class ShardingConfig:
+    # logical parallelism knobs
+    fsdp: bool = True            # shard params/opt-state over the data axis
+    tensor_parallel: bool = True
+    expert_parallel: bool = True
+    sequence_parallel: bool = False   # shard sequence/KV over the data axis
+    remat: str = "full"          # none | full | dots
+    grad_compression: bool = False    # int8 + error-feedback on the pod axis
+    microbatches: int = 1             # >1 enables gradient accumulation
+    # perf knobs (SSPerf hillclimbs)
+    attn_chunk: int = 1024            # flash-attention KV chunk length
+    ce_chunk: int = 512               # chunked cross-entropy tokens/chunk
+    attn_dtype: str = "float32"       # score/accumulator dtype in attention
+    # mesh-axis name mapping (alternative mesh factorizations, SSPerf H2):
+    # logical role -> mesh axis name(s). Defaults match the production
+    # (pod, data, model) mesh.
+    dp_axes: Tuple[str, ...] = ("pod", "data", "ep")
+    fsdp_axis: str = "data"
+    tp_axis: str = "model"
+    ep_axis: str = "model"
+
+
+@dataclass(frozen=True)
+class CheckpointConfig:
+    directory: str = "/tmp/repro_ckpt"
+    save_every: int = 100
+    keep: int = 3
+    async_save: bool = True
+
+
+@dataclass(frozen=True)
+class FaultToleranceConfig:
+    step_timeout_s: float = 1800.0     # watchdog deadline per step
+    max_restarts: int = 10
+    elastic: bool = True               # allow restore onto a different mesh
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    a3: A3Config = field(default_factory=A3Config)
+    optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
+    sharding: ShardingConfig = field(default_factory=ShardingConfig)
+    checkpoint: CheckpointConfig = field(default_factory=CheckpointConfig)
+    fault: FaultToleranceConfig = field(default_factory=FaultToleranceConfig)
+    seed: int = 0
+
+    def replace(self, **kw) -> "RunConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register_arch(name: str):
+    def deco(fn: Callable[[], ModelConfig]):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_arch(name: str) -> ModelConfig:
+    import repro.configs  # noqa: F401  (populates the registry)
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs() -> List[str]:
+    import repro.configs  # noqa: F401
+    return sorted(_REGISTRY)
+
+
+def smoke_variant(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    kw: Dict[str, Any] = dict(
+        num_layers=min(cfg.num_layers, 2 if not cfg.block_pattern
+                       else len(cfg.block_pattern)),
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 2) if cfg.num_kv_heads < cfg.num_heads else 4,
+        head_dim=32,
+        d_ff=256 if cfg.d_ff else 0,
+        vocab_size=512,
+        max_seq_len=512,
+        window_size=64,
+    )
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=4, top_k=min(cfg.moe.top_k, 2),
+            d_expert=64 if cfg.moe.d_expert else 0,
+            num_dense_layers=min(cfg.moe.num_dense_layers, 1))
+    return dataclasses.replace(cfg, **kw)

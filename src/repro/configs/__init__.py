@@ -1,0 +1,14 @@
+"""Assigned architecture configs. Importing this package populates the
+registry used by ``repro.config.get_arch`` / ``--arch`` flags."""
+from repro.configs import (  # noqa: F401
+    deepseek_moe_16b,
+    grok_1_314b,
+    gemma3_4b,
+    phi4_mini_3_8b,
+    h2o_danube_1_8b,
+    internlm2_1_8b,
+    recurrentgemma_2b,
+    xlstm_350m,
+    musicgen_medium,
+    internvl2_2b,
+)

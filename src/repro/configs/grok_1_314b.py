@@ -1,0 +1,27 @@
+"""grok-1-314b [hf:xai-org/grok-1; unverified].
+
+8 experts top-2, 64L, d_model 6144, 48 heads (GQA kv=8), expert FFN
+32768, vocab 131072, logit softcap 30. The 8-expert stack does not divide
+the 16-way model axis, so the sharding rules fall back to TP *inside*
+each expert (DESIGN.md SS4) — exercised by the dry-run.
+"""
+from repro.config import ModelConfig, MoEConfig, register_arch
+
+
+@register_arch("grok-1-314b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="grok-1-314b",
+        family="moe",
+        num_layers=64,
+        d_model=6144,
+        num_heads=48,
+        num_kv_heads=8,
+        d_ff=32768,
+        vocab_size=131072,
+        head_dim=128,
+        rope_theta=10000.0,
+        logit_softcap=30.0,
+        moe=MoEConfig(num_experts=8, num_shared=0, top_k=2,
+                      d_expert=32768, num_dense_layers=0),
+    )

@@ -1,0 +1,26 @@
+"""h2o-danube-1.8b [arXiv:2401.16818; hf].
+
+Llama/Mistral-style dense decoder with sliding-window attention
+(window 4096), 24L, d_model 2560, 32 heads (GQA kv=8, head_dim 80),
+vocab 32000. The SWA window bounds the KV working set, which is what
+makes long_500k runnable (ring cache of 4096).
+"""
+from repro.config import AttentionKind, ModelConfig, register_arch
+
+
+@register_arch("h2o-danube-1.8b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="h2o-danube-1.8b",
+        family="dense",
+        num_layers=24,
+        d_model=2560,
+        num_heads=32,
+        num_kv_heads=8,
+        d_ff=6912,
+        vocab_size=32000,
+        head_dim=80,
+        rope_theta=10000.0,
+        attention_kind=AttentionKind.SLIDING,
+        window_size=4096,
+    )

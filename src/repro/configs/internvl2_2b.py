@@ -1,0 +1,25 @@
+"""internvl2-2b [arXiv:2404.16821; hf].
+
+InternViT-300M (STUB frontend: precomputed patch embeddings) +
+InternLM2-1.8B language backbone: 24L, d_model 2048, 16H kv=8, d_ff
+8192, vocab 92553 (padded to 92672 = next multiple of 128 for MXU/mesh
+divisibility; see decoder.padded_vocab).
+"""
+from repro.config import ModelConfig, register_arch
+
+
+@register_arch("internvl2-2b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-2b",
+        family="vlm",
+        num_layers=24,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=8,
+        d_ff=8192,
+        vocab_size=92553,
+        head_dim=128,
+        rope_theta=1_000_000.0,
+        frontend="vision_patches",
+    )

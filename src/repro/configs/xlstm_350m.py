@@ -1,0 +1,28 @@
+"""xlstm-350m [arXiv:2405.04517; unverified].
+
+xLSTM[7:1]: 7 mLSTM blocks per sLSTM block, 24L, d_model 1024, 4 heads,
+no separate FFN (d_ff=0 — the blocks carry their own projections),
+vocab 50304. No softmax score vector over n keys exists in either block
+type, so A^3 is inapplicable by construction (DESIGN.md SS5) — the arch
+runs WITHOUT the technique.
+"""
+from repro.config import BlockKind, ModelConfig, register_arch
+
+_PATTERN = (BlockKind.MLSTM,) * 7 + (BlockKind.SLSTM,)
+
+
+@register_arch("xlstm-350m")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-350m",
+        family="ssm",
+        num_layers=24,
+        d_model=1024,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=0,
+        vocab_size=50304,
+        head_dim=256,
+        block_pattern=_PATTERN,
+        tie_embeddings=True,
+    )

@@ -1,0 +1,33 @@
+"""Core A³ algorithm: candidate selection, post-scoring, quantization."""
+from repro.core.a3_attention import (
+    A3State,
+    a3_attention_batch,
+    a3_attention_single,
+    a3_self_attention,
+    candidate_block_map,
+    flop_savings,
+    preprocess,
+)
+from repro.core.candidate_selection import (
+    SortedKeys,
+    select_candidates,
+    select_candidates_batch,
+    select_candidates_oracle,
+    sort_key_columns,
+)
+from repro.core.post_scoring import masked_softmax, post_scoring_mask, top_weight_stats
+from repro.core.quantization import (
+    LutExp,
+    make_lut_exp,
+    quantize_fixed_point,
+    softmax_fixed_point,
+)
+
+__all__ = [
+    "A3State", "a3_attention_batch", "a3_attention_single", "a3_self_attention",
+    "candidate_block_map", "flop_savings", "preprocess",
+    "SortedKeys", "select_candidates", "select_candidates_batch",
+    "select_candidates_oracle", "sort_key_columns",
+    "masked_softmax", "post_scoring_mask", "top_weight_stats",
+    "LutExp", "make_lut_exp", "quantize_fixed_point", "softmax_fixed_point",
+]

@@ -1,0 +1,193 @@
+"""A³ attention — the paper's full pipeline as a composable JAX module.
+
+Pipeline (paper Fig. 10):
+
+    sorted keys --(candidate selection, §IV-C)--> candidate mask
+    q·Kᵀ on candidates --(post-scoring, §IV-D)--> kept mask
+    masked softmax (optionally quantized 2-LUT path, §III) --> weights
+    weights · V --> output
+
+This module is the *semantic reference*: it computes dense-masked math so
+it is exact, differentiable where applicable, and trivially shardable. The
+FLOP savings the ASIC realizes by skipping rows are realized on TPU by the
+block-sparse Pallas kernel in ``repro.kernels.a3_attention``, which consumes
+the same candidate masks at block granularity.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import A3Config, A3Mode
+from repro.core.candidate_selection import (
+    SortedKeys,
+    select_candidates,
+    select_candidates_batch,
+    sort_key_columns,
+)
+from repro.core.post_scoring import masked_softmax, post_scoring_mask
+from repro.core.quantization import (
+    LutExp,
+    make_lut_exp,
+    quantize_fixed_point,
+    softmax_fixed_point,
+)
+
+
+class A3State(NamedTuple):
+    """Comprehension-time state: the preprocessed (sorted) key matrix."""
+    sorted_keys: SortedKeys
+    key: jax.Array
+    value: jax.Array
+
+
+def preprocess(key: jax.Array, value: jax.Array) -> A3State:
+    """Comprehension-time preprocessing (off the critical path)."""
+    return A3State(sorted_keys=sort_key_columns(key), key=key, value=value)
+
+
+def _maybe_quantize(x: jax.Array, cfg: A3Config) -> jax.Array:
+    if cfg.int_bits is not None and cfg.frac_bits is not None:
+        return quantize_fixed_point(x, cfg.int_bits, cfg.frac_bits)
+    return x
+
+
+def a3_attention_single(
+    state: A3State,
+    query: jax.Array,
+    cfg: A3Config,
+    lut: Optional[LutExp] = None,
+) -> Tuple[jax.Array, dict]:
+    """One query against one (key, value) memory — the accelerator's unit op.
+
+    Returns (output [d_v], aux dict with masks/weights for analysis).
+    """
+    key, value = state.key, state.value
+    n = key.shape[0]
+    q = _maybe_quantize(query, cfg)
+    k = _maybe_quantize(key, cfg)
+
+    if cfg.mode == A3Mode.OFF:
+        cand = jnp.ones((n,), dtype=bool)
+        greedy = jnp.zeros((n,), dtype=jnp.float32)
+    else:
+        m = cfg.m_for(n)
+        cand, greedy = select_candidates(state.sorted_keys, q, m)
+
+    scores = k @ q                                         # [n]
+    if cfg.frac_bits is not None:
+        scores = quantize_fixed_point(
+            scores, 2 * (cfg.int_bits or 4) + int(math.ceil(math.log2(max(key.shape[1], 2)))),
+            2 * cfg.frac_bits)
+
+    if cfg.mode == A3Mode.OFF:
+        keep = cand
+    else:
+        keep = post_scoring_mask(scores, cfg.threshold_nats, cand)
+
+    if cfg.lut_exponent and cfg.frac_bits is not None:
+        weights = softmax_fixed_point(scores, cfg.frac_bits, lut=lut, mask=keep)
+    else:
+        weights = masked_softmax(scores, keep)
+
+    out = weights @ _maybe_quantize(value, cfg)
+    aux = dict(candidates=cand, kept=keep, weights=weights,
+               greedy_score=greedy, scores=scores)
+    return out, aux
+
+
+def a3_attention_batch(
+    state: A3State, queries: jax.Array, cfg: A3Config
+) -> Tuple[jax.Array, dict]:
+    """vmap of the unit op over a [q, d] query batch (pipelined queries)."""
+    lut = make_lut_exp(2 * cfg.frac_bits, 2 * cfg.frac_bits + 5) if (
+        cfg.lut_exponent and cfg.frac_bits is not None) else None
+    fn = lambda q: a3_attention_single(state, q, cfg, lut)
+    return jax.vmap(fn)(queries)
+
+
+# ---------------------------------------------------------------------------
+# Self-attention integration (BERT/LM case, paper §VI — n queries share K)
+# ---------------------------------------------------------------------------
+
+def candidate_block_map(
+    cand_mask: jax.Array, block_q: int, block_k: int
+) -> jax.Array:
+    """Reduce a per-(query, key) candidate mask to block granularity.
+
+    cand_mask: [q, n] bool. Returns [q/block_q, n/block_k] bool where a
+    block is live iff any (query, key) pair within it is a candidate. This
+    is the TPU-granularity analogue of the ASIC's per-row skipping and is
+    what the Pallas kernel's scalar-prefetch grid consumes.
+    """
+    qlen, n = cand_mask.shape
+    nq, nk = qlen // block_q, n // block_k
+    m = cand_mask[: nq * block_q, : nk * block_k]
+    m = m.reshape(nq, block_q, nk, block_k)
+    return jnp.any(m, axis=(1, 3))
+
+
+def a3_self_attention(
+    q: jax.Array,      # [q, d]
+    k: jax.Array,      # [n, d]
+    v: jax.Array,      # [n, d_v]
+    cfg: A3Config,
+    causal: bool = False,
+    scale: Optional[float] = None,
+) -> Tuple[jax.Array, dict]:
+    """Self-attention with the A³ pipeline applied per query.
+
+    Scores are scaled by 1/sqrt(d) as in standard attention; the A³
+    selection runs on the *scaled* score space so that threshold_nats keeps
+    its paper meaning (post-softmax relative weight).
+    """
+    qlen, d = q.shape
+    n = k.shape[0]
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    qs = q * scale
+
+    if cfg.mode == A3Mode.OFF:
+        cand = jnp.ones((qlen, n), dtype=bool)
+    else:
+        sk = sort_key_columns(k)
+        m = cfg.m_for(n)
+        cand, _ = select_candidates_batch(sk, qs, m)
+
+    scores = qs @ k.T                                      # [q, n]
+    if causal:
+        pos_q = jnp.arange(qlen)[:, None]
+        pos_k = jnp.arange(n)[None, :]
+        causal_mask = pos_k <= pos_q + (n - qlen)
+        cand = cand & causal_mask
+
+    if cfg.mode == A3Mode.OFF:
+        keep = cand
+    else:
+        keep = post_scoring_mask(scores, cfg.threshold_nats, cand)
+
+    weights = masked_softmax(scores, keep)
+    out = weights @ v
+    aux = dict(candidates=cand, kept=keep, weights=weights)
+    return out, aux
+
+
+def flop_savings(aux: dict, n: int, d: int) -> dict:
+    """Accounting used by the Fig. 14 benchmark: avoided MACs per query."""
+    cand = aux["candidates"]
+    kept = aux["kept"]
+    c = jnp.sum(cand, axis=-1).astype(jnp.float32)
+    kk = jnp.sum(kept, axis=-1).astype(jnp.float32)
+    full = float(2 * n * d)
+    approx = 2.0 * c * d / full
+    out_frac = kk * d / (n * d)
+    return dict(
+        mean_candidates=jnp.mean(c),
+        mean_kept=jnp.mean(kk),
+        score_flop_fraction=jnp.mean(approx),
+        output_flop_fraction=jnp.mean(out_frac),
+    )

@@ -1,0 +1,77 @@
+"""A³ post-scoring selection (paper §IV-D).
+
+After exact scores are computed for the candidate rows, drop any row whose
+score trails the max by more than ``t`` nats — i.e. whose post-softmax
+weight would be below ``T% = 100·e^{-t}`` of the top row's weight. This is
+the dynamic scheme the paper argues for (a static top-k misbehaves when the
+score distribution is flat or peaky).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def post_scoring_mask(
+    scores: jax.Array,
+    threshold_nats: float,
+    candidate_mask: Optional[jax.Array] = None,
+    axis: int = -1,
+) -> jax.Array:
+    """Boolean mask of rows kept by post-scoring selection.
+
+    scores: [..., n] exact dot-product scores.
+    candidate_mask: rows already selected by candidate selection; rows
+        outside it are ignored both for the max and the output.
+    """
+    neg_inf = jnp.finfo(jnp.float32).min
+    s = scores.astype(jnp.float32)
+    if candidate_mask is not None:
+        s = jnp.where(candidate_mask, s, neg_inf)
+    mx = jnp.max(s, axis=axis, keepdims=True)
+    keep = s >= (mx - threshold_nats)
+    if candidate_mask is not None:
+        keep = keep & candidate_mask
+    return keep
+
+
+def masked_softmax(
+    scores: jax.Array,
+    mask: Optional[jax.Array],
+    axis: int = -1,
+) -> jax.Array:
+    """Numerically-stable softmax over ``mask``-selected entries.
+
+    Rows with an all-False mask return all-zero weights (the engine treats
+    such queries as "no relevant memory", matching the accelerator's
+    behaviour of emitting a zero output vector).
+    """
+    s = scores.astype(jnp.float32)
+    neg_inf = jnp.finfo(jnp.float32).min
+    if mask is not None:
+        s = jnp.where(mask, s, neg_inf)
+    mx = jnp.max(s, axis=axis, keepdims=True)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    e = jnp.exp(s - mx)
+    if mask is not None:
+        e = jnp.where(mask, e, 0.0)
+    denom = jnp.sum(e, axis=axis, keepdims=True)
+    return e / jnp.maximum(denom, jnp.finfo(jnp.float32).tiny)
+
+
+def top_weight_stats(
+    weights: jax.Array, true_weights: jax.Array, k: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Fig. 13b metric: fraction of the true top-k entries kept.
+
+    Returns (recall_at_k, kept_fraction).
+    """
+    n = weights.shape[-1]
+    k = min(k, n)
+    _, true_top = jax.lax.top_k(true_weights, k)
+    kept = jnp.take_along_axis(weights, true_top, axis=-1) > 0
+    recall = jnp.mean(kept.astype(jnp.float32), axis=-1)
+    kept_fraction = jnp.mean((weights > 0).astype(jnp.float32), axis=-1)
+    return recall, kept_fraction

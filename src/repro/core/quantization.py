@@ -1,0 +1,136 @@
+"""A³ fixed-point quantization and the two-LUT exponent (paper §III-A/B).
+
+The ASIC computes in fixed point with ``i`` integer and ``f`` fraction bits
+(plus sign) for inputs, widening per stage so that *no additional* precision
+is lost after input quantization:
+
+    temp      = key*query      -> 2i int, 2f frac
+    dot       = sum_d temp     -> 2i + log2(d) int, 2f frac
+    dot - max                  -> one extra int bit
+    score     = exp(dot-max)   -> in (0, 1], 2f frac
+    expsum    = sum_n score    -> log2(n) int bits
+    weight    = score/expsum   -> in [0, 1], 2f frac
+    output    = sum weight*val -> i + log2(n) int, 3f frac
+
+On TPU we *simulate* these numerics with fake quantization (values stay in
+f32 but are rounded/clipped to the fixed-point grid), which is bit-faithful
+for accuracy studies while the deployment dtype remains bf16.
+
+The exponent unit decomposes ``e^x = e^{x_hi} * e^{x_lo}`` over the split
+fixed-point fraction so two small LUTs replace one huge one (§III-A).
+Footnote 1's error bound (quantization error shrinks through exp for
+non-positive inputs) is verified in tests/test_quantization.py.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_fixed_point(
+    x: jax.Array, int_bits: int, frac_bits: int
+) -> jax.Array:
+    """Round-to-nearest fixed point with ``int_bits``/``frac_bits`` + sign.
+
+    Representable range: [-(2^i - 2^-f), 2^i - 2^-f].
+    """
+    scale = 2.0 ** frac_bits
+    limit = 2.0 ** int_bits - 2.0 ** (-frac_bits)
+    q = jnp.round(x * scale) / scale
+    return jnp.clip(q, -limit, limit)
+
+
+class LutExp(NamedTuple):
+    """Two-LUT exponent for non-positive fixed-point inputs.
+
+    The input ``x <= 0`` is represented as ``-k * 2^-frac_bits`` with
+    ``k`` an unsigned integer of ``total_bits`` bits. ``k`` is split into
+    high/low halves; each half indexes a small table and the results are
+    multiplied:  e^{-(hi+lo)·2^-f} = LUT_hi[hi] · LUT_lo[lo].
+    """
+    hi_table: jax.Array          # [2^hi_bits]
+    lo_table: jax.Array          # [2^lo_bits]
+    frac_bits: int
+    lo_bits: int
+    total_bits: int
+    out_frac_bits: int
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """exp(x) for x <= 0 via the two tables (vectorized)."""
+        scale = 2.0 ** self.frac_bits
+        kmax = 2 ** self.total_bits - 1
+        k = jnp.clip(jnp.round(-x * scale), 0, kmax).astype(jnp.int32)
+        lo = k & ((1 << self.lo_bits) - 1)
+        hi = k >> self.lo_bits
+        y = self.hi_table[hi] * self.lo_table[lo]
+        # the ASIC multiplier output register keeps out_frac_bits fraction bits
+        oscale = 2.0 ** self.out_frac_bits
+        return jnp.round(y * oscale) / oscale
+
+    @property
+    def table_entries(self) -> int:
+        return self.hi_table.shape[0] + self.lo_table.shape[0]
+
+
+def make_lut_exp(
+    frac_bits: int,
+    total_bits: int,
+    lo_bits: Optional[int] = None,
+    out_frac_bits: Optional[int] = None,
+    dtype=jnp.float32,
+) -> LutExp:
+    """Build the two tables.
+
+    frac_bits: fraction bits of the (non-positive) input representation —
+        the paper uses 2f here (the dot-product register width).
+    total_bits: total index width; 2^total_bits entries would be the naive
+        single-table size the decomposition avoids.
+    """
+    if lo_bits is None:
+        lo_bits = total_bits // 2
+    hi_bits = total_bits - lo_bits
+    if out_frac_bits is None:
+        out_frac_bits = frac_bits
+    step = 2.0 ** (-frac_bits)
+    lo_idx = jnp.arange(2 ** lo_bits, dtype=dtype)
+    hi_idx = jnp.arange(2 ** hi_bits, dtype=dtype)
+    lo_table = jnp.exp(-lo_idx * step)
+    hi_table = jnp.exp(-hi_idx * step * (2.0 ** lo_bits))
+    return LutExp(hi_table=hi_table, lo_table=lo_table, frac_bits=frac_bits,
+                  lo_bits=lo_bits, total_bits=total_bits,
+                  out_frac_bits=out_frac_bits)
+
+
+def softmax_fixed_point(
+    scores: jax.Array,
+    frac_bits: int,
+    lut: Optional[LutExp] = None,
+    mask: Optional[jax.Array] = None,
+    axis: int = -1,
+) -> jax.Array:
+    """Softmax with the paper's quantized exponent path.
+
+    scores are assumed already quantized to 2*frac_bits fraction bits
+    (the dot-product register). The max is subtracted (overflow guard,
+    §III-A), the exponent computed via the LUT pair, and the weights kept
+    at 2*frac_bits fraction bits.
+    """
+    if lut is None:
+        # Index width = fraction bits of the score register + enough integer
+        # bits to cover the useful exponent range (e^-32 ~ 1e-14 underflows
+        # any fixed-point weight register, so 5 integer bits suffice).
+        lut = make_lut_exp(frac_bits=2 * frac_bits, total_bits=2 * frac_bits + 5)
+    neg_inf = jnp.finfo(scores.dtype).min
+    if mask is not None:
+        scores = jnp.where(mask, scores, neg_inf)
+    mx = jnp.max(scores, axis=axis, keepdims=True)
+    shifted = scores - mx
+    e = lut(shifted)
+    if mask is not None:
+        e = jnp.where(mask, e, 0.0)
+    denom = jnp.sum(e, axis=axis, keepdims=True)
+    w = e / jnp.maximum(denom, jnp.finfo(scores.dtype).tiny)
+    scale = 2.0 ** (2 * frac_bits)
+    return jnp.round(w * scale) / scale

@@ -1,0 +1,4 @@
+from repro.data.synthetic import SyntheticLM, make_lm_batch
+from repro.data.babi import BabiTask, generate_babi
+
+__all__ = ["SyntheticLM", "make_lm_batch", "BabiTask", "generate_babi"]

@@ -1,0 +1,230 @@
+"""A³ block-sparse attention Pallas TPU kernel.
+
+The TPU realization of the paper's compute-skipping (DESIGN.md §2): the
+candidate-selection mask is reduced to kv-block granularity, and the
+kernel's grid — built with ``PrefetchScalarGridSpec`` — visits only the
+live kv blocks of each query block (``kv_indices``/``kv_counts``). The
+QKᵀ and PV MACs for dead blocks are never issued, which is the MXU-aligned
+analogue of the ASIC skipping non-candidate rows.
+
+Post-scoring selection (§IV-D) is exact: a first (half-cost: no PV matmul)
+pass computes the true masked row max over live blocks, and the second pass
+drops every entry whose score trails it by more than ``threshold`` nats
+before the weighted sum — precisely the accelerator's subtract-and-compare
+module, fused into the softmax.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _block_mask(iq, jk_abs, *, block_q, block_k, seq_q, seq_k, causal,
+                window):
+    rows = iq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0) + (seq_k - seq_q)
+    cols = jk_abs * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), dtype=jnp.bool_)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    return mask
+
+
+def _sparse_rowmax_kernel(
+    idx_ref, cnt_ref,               # scalar prefetch
+    q_ref, k_ref,                   # inputs
+    m_out,                          # output [1, 1, bq]
+    m_scr,                          # scratch [bq, 1]
+    *, scale, causal, window, block_q, block_k, seq_q, seq_k,
+):
+    b, h, iq, j = (pl.program_id(i) for i in range(4))
+    nj = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+
+    live = j < cnt_ref[b, h, iq]
+    jk_abs = idx_ref[b, h, iq, j]
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = _block_mask(iq, jk_abs, block_q=block_q, block_k=block_k,
+                           seq_q=seq_q, seq_k=seq_k, causal=causal,
+                           window=window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_scr[...] = jnp.maximum(m_scr[...], jnp.max(s, -1, keepdims=True))
+
+    @pl.when(j == nj - 1)
+    def _emit():
+        m_out[0, 0] = m_scr[...][:, 0]
+
+
+def _sparse_attend_kernel(
+    idx_ref, cnt_ref,               # scalar prefetch
+    q_ref, k_ref, v_ref, rowmax_ref,
+    o_ref,
+    l_scr, acc_scr,
+    *, scale, causal, window, threshold, block_q, block_k, seq_q, seq_k,
+):
+    b, h, iq, j = (pl.program_id(i) for i in range(4))
+    nj = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    live = j < cnt_ref[b, h, iq]
+    jk_abs = idx_ref[b, h, iq, j]
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        rm = rowmax_ref[0, 0][:, None]                   # [bq, 1]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = _block_mask(iq, jk_abs, block_q=block_q, block_k=block_k,
+                           seq_q=seq_q, seq_k=seq_k, causal=causal,
+                           window=window)
+        if threshold is not None:
+            # post-scoring selection: drop entries > threshold nats below max
+            mask &= s >= rm - threshold
+        p = jnp.where(mask, jnp.exp(s - rm), 0.0)
+        l_scr[...] += jnp.sum(p, -1, keepdims=True)
+        acc_scr[...] += jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == nj - 1)
+    def _emit():
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = jnp.where(l == 0.0, 0.0,
+                                acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "threshold", "scale",
+                     "block_q", "block_k", "interpret"),
+)
+def a3_sparse_attention(
+    q: jax.Array,                   # [B, Hq, Sq, D]
+    k: jax.Array,                   # [B, Hkv, Sk, D]
+    v: jax.Array,                   # [B, Hkv, Sk, Dv]
+    kv_indices: jax.Array,          # [B, Hq, nq_blocks, max_blocks] int32
+    kv_counts: jax.Array,           # [B, Hq, nq_blocks] int32
+    *,
+    threshold: Optional[float] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, sq, d = q.shape
+    _, hkv, sk, dv = v.shape
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    bq, bk = min(block_q, sq), min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0
+    nq = sq // bq
+    maxb = kv_indices.shape[-1]
+    assert kv_indices.shape == (b, hq, nq, maxb)
+    assert kv_counts.shape == (b, hq, nq)
+
+    grid = (b, hq, nq, maxb)
+
+    def q_map(b_, h, iq, j, idx, cnt):
+        return (b_, h, iq, 0)
+
+    def kv_map(b_, h, iq, j, idx, cnt):
+        return (b_, h // group, idx[b_, h, iq, j], 0)
+
+    def rm_map(b_, h, iq, j, idx, cnt):
+        return (b_, h, iq)
+
+    # ---- pass 1: true row max over live candidate blocks ----
+    rowmax = pl.pallas_call(
+        functools.partial(
+            _sparse_rowmax_kernel, scale=scale, causal=causal, window=window,
+            block_q=bq, block_k=bk, seq_q=sq, seq_k=sk),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, bq, d), q_map),
+                pl.BlockSpec((1, 1, bk, d), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, bq), rm_map),
+            scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),
+        interpret=interpret,
+    )(kv_indices, kv_counts, q, k)
+
+    # ---- pass 2: post-scoring mask + weighted sum ----
+    out = pl.pallas_call(
+        functools.partial(
+            _sparse_attend_kernel, scale=scale, causal=causal, window=window,
+            threshold=threshold, block_q=bq, block_k=bk, seq_q=sq, seq_k=sk),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, bq, d), q_map),
+                pl.BlockSpec((1, 1, bk, d), kv_map),
+                pl.BlockSpec((1, 1, bk, dv), kv_map),
+                pl.BlockSpec((1, 1, bq), rm_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, bq, dv), q_map),
+            scratch_shapes=[
+                pltpu.VMEM((bq, 1), jnp.float32),
+                pltpu.VMEM((bq, dv), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, dv), q.dtype),
+        interpret=interpret,
+    )(kv_indices, kv_counts, q, k, v, rowmax)
+    return out
+
+
+def build_block_map(
+    block_mask: jax.Array,          # [B, Hq, nq, nk] bool
+    max_blocks: Optional[int] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Pack a boolean block mask into (kv_indices, kv_counts) for the kernel.
+
+    Live block ids are compacted to the front (stable order); padding points
+    at block 0 and is masked by kv_counts inside the kernel.
+    """
+    b, h, nq, nk = block_mask.shape
+    if max_blocks is None:
+        max_blocks = nk
+    order = jnp.argsort(~block_mask, axis=-1, stable=True)     # live first
+    counts = jnp.sum(block_mask, axis=-1).astype(jnp.int32)
+    idx = order[..., :max_blocks].astype(jnp.int32)
+    idx = jnp.where(
+        jnp.arange(max_blocks)[None, None, None, :] < counts[..., None],
+        idx, 0)
+    counts = jnp.minimum(counts, max_blocks)
+    return idx, counts

@@ -1,0 +1,70 @@
+"""Public entry point: A³-approximate attention with block skipping.
+
+Builds the candidate block map from the core greedy selection and invokes
+either the Pallas kernel (deployment) or the jnp reference (analyzable
+HLO / CPU validation).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import A3Config, A3Mode
+from repro.core.candidate_selection import select_candidates_batch, sort_key_columns
+from repro.kernels.a3_attention.kernel import a3_sparse_attention, build_block_map
+from repro.kernels.a3_attention.ref import a3_sparse_attention_ref
+
+
+def candidate_block_map_for_heads(
+    q: jax.Array,                   # [B, Hq, Sq, D]
+    k: jax.Array,                   # [B, Hkv, Sk, D]
+    cfg: A3Config,
+) -> Tuple[jax.Array, jax.Array]:
+    """Run greedy candidate selection per (batch, head, query) and reduce to
+    kv-block granularity. Returns (kv_indices, kv_counts)."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    scale = d ** -0.5
+    m = cfg.m_for(sk)
+
+    def per_bh(qh, kh):             # qh [Sq, d], kh [Sk, d]
+        sk_sorted = sort_key_columns(kh)
+        mask, _ = select_candidates_batch(sk_sorted, qh * scale, m)
+        return mask                  # [Sq, Sk]
+
+    kq = jnp.repeat(k, group, axis=1)
+    masks = jax.vmap(jax.vmap(per_bh))(q, kq)            # [B, Hq, Sq, Sk]
+    bq, bk = min(cfg.block_q, sq), min(cfg.block_k, sk)
+    nq, nk = sq // bq, sk // bk
+    bm = masks.reshape(b, hq, nq, bq, nk, bk).any(axis=(3, 5))
+    return build_block_map(bm)
+
+
+def a3_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    cfg: A3Config,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    use_kernel: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """A³-approximate (or exact when cfg.mode == OFF) fused attention."""
+    if cfg.mode == A3Mode.OFF:
+        from repro.kernels.flash_attention.ops import fused_attention
+        return fused_attention(q, k, v, causal=causal, window=window,
+                               use_kernel=use_kernel, interpret=interpret)
+
+    kv_indices, kv_counts = candidate_block_map_for_heads(q, k, cfg)
+    threshold = cfg.threshold_nats
+    fn = a3_sparse_attention if use_kernel else a3_sparse_attention_ref
+    kw = dict(threshold=threshold, causal=causal, window=window,
+              block_q=cfg.block_q, block_k=cfg.block_k)
+    if use_kernel:
+        kw["interpret"] = interpret
+    return fn(q, k, v, kv_indices, kv_counts, **kw)

@@ -1,0 +1,70 @@
+"""Pure-jnp oracle for the A³ block-sparse attention kernel.
+
+Implements the *block-dilated* candidate semantics the kernel computes: a
+key position participates iff its kv block is live for the query's block,
+the causal/window mask admits it, and (optionally) its score is within
+``threshold`` nats of the row max over participating positions.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def a3_sparse_attention_ref(
+    q: jnp.ndarray,                 # [B, Hq, Sq, D]
+    k: jnp.ndarray,                 # [B, Hkv, Sk, D]
+    v: jnp.ndarray,                 # [B, Hkv, Sk, Dv]
+    kv_indices: jnp.ndarray,        # [B, Hq, nq, maxb] int32
+    kv_counts: jnp.ndarray,         # [B, Hq, nq] int32
+    *,
+    threshold: Optional[float] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jnp.ndarray:
+    b, hq, sq, d = q.shape
+    _, hkv, sk, dv = v.shape
+    group = hq // hkv
+    bq, bk = min(block_q, sq), min(block_k, sk)
+    nq, nk = sq // bq, sk // bk
+    maxb = kv_indices.shape[-1]
+    if scale is None:
+        scale = d ** -0.5
+
+    # expand (indices, counts) back to a dense [B, Hq, nq, nk] block mask
+    live = jnp.arange(maxb)[None, None, None, :] < kv_counts[..., None]
+    bm = jnp.zeros((b, hq, nq, nk), dtype=bool)
+    bi, hi, qi = jnp.meshgrid(jnp.arange(b), jnp.arange(hq), jnp.arange(nq),
+                              indexing="ij")
+    bi = jnp.broadcast_to(bi[..., None], kv_indices.shape)
+    hi = jnp.broadcast_to(hi[..., None], kv_indices.shape)
+    qi = jnp.broadcast_to(qi[..., None], kv_indices.shape)
+    bm = bm.at[bi, hi, qi, kv_indices].max(live)
+
+    # element-level mask
+    elem = jnp.repeat(jnp.repeat(bm, bq, axis=2), bk, axis=3)  # [B,Hq,Sq,Sk]
+    rows = jnp.arange(sq)[:, None] + (sk - sq)
+    cols = jnp.arange(sk)[None, :]
+    if causal:
+        elem &= (cols <= rows)[None, None]
+    if window is not None:
+        elem &= (cols > rows - window)[None, None]
+
+    kq = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vq = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kq) * scale
+    s = jnp.where(elem, s, -jnp.inf)
+
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    if threshold is not None:
+        elem &= s >= m - threshold
+        s = jnp.where(elem, s, -jnp.inf)
+    p = jnp.where(elem, jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    w = p / jnp.maximum(l, 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, vq).astype(q.dtype)

@@ -1,0 +1,132 @@
+"""Single-token decode attention Pallas TPU kernel with A³ masking.
+
+Decode is the accelerator's home turf: one query vector against an n-row
+KV memory — exactly the paper's Figure 1 unit op. On TPU the op is
+HBM-bandwidth-bound (the KV cache streams through VMEM once), so the
+MXU-friendly layout puts the GQA *query-head group* in the sublane
+dimension: each grid step computes a [G, bk] score tile with one
+[G, D]·[D, bk] matmul.
+
+A³ enters as a per-position candidate mask (row-granular — decode is
+bandwidth- not MXU-bound, so row granularity costs nothing here) plus the
+exact two-pass post-scoring threshold, mirroring the ASIC pipeline:
+pass 1 = dot-product + max modules, pass 2 = exponent + output modules.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _rowmax_kernel(q_ref, k_ref, mask_ref, m_out, m_scr, *, scale):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+
+    q = q_ref[0].astype(jnp.float32)                     # [G, D]
+    k = k_ref[0, 0].astype(jnp.float32)                  # [bk, D]
+    mask = mask_ref[0]                                   # [G, bk]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+    m_scr[...] = jnp.maximum(m_scr[...], jnp.max(s, -1, keepdims=True))
+
+    @pl.when(ik == nk - 1)
+    def _emit():
+        m_out[0] = m_scr[...][:, 0]
+
+
+def _attend_kernel(q_ref, k_ref, v_ref, mask_ref, rm_ref, o_ref,
+                   l_scr, acc_scr, *, scale, threshold):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                     # [G, D]
+    k = k_ref[0, 0].astype(jnp.float32)                  # [bk, D]
+    v = v_ref[0, 0].astype(jnp.float32)                  # [bk, Dv]
+    mask = mask_ref[0]                                   # [G, bk]
+    rm = rm_ref[0][:, None]                              # [G, 1]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if threshold is not None:
+        mask &= s >= rm - threshold
+    p = jnp.where(mask, jnp.exp(s - rm), 0.0)
+    l_scr[...] += jnp.sum(p, -1, keepdims=True)
+    acc_scr[...] += jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _emit():
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = jnp.where(l == 0.0, 0.0, acc_scr[...] / safe
+                             ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("threshold", "scale", "block_k", "interpret"))
+def decode_attention(
+    q: jax.Array,                   # [B, Hq, D] one new token per sequence
+    k: jax.Array,                   # [B, Hkv, S, D]
+    v: jax.Array,                   # [B, Hkv, S, Dv]
+    mask: jax.Array,                # [B, Hq, S] candidates & cache validity
+    *,
+    threshold: Optional[float] = None,
+    scale: Optional[float] = None,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, d = q.shape
+    _, hkv, s, dv = v.shape
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    bk = min(block_k, s)
+    assert s % bk == 0
+
+    grid = (b, hkv, s // bk)
+
+    q_spec = pl.BlockSpec((1, group, d), lambda b_, h, ik: (b_, h, 0))
+    kv_spec = pl.BlockSpec((1, 1, bk, d), lambda b_, h, ik: (b_, h, ik, 0))
+    vv_spec = pl.BlockSpec((1, 1, bk, dv), lambda b_, h, ik: (b_, h, ik, 0))
+    mask_spec = pl.BlockSpec((1, group, bk), lambda b_, h, ik: (b_, h, ik))
+    rm_spec = pl.BlockSpec((1, group), lambda b_, h, ik: (b_, h))
+
+    rowmax = pl.pallas_call(
+        functools.partial(_rowmax_kernel, scale=scale),
+        grid=grid,
+        in_specs=[q_spec, kv_spec, mask_spec],
+        out_specs=rm_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hq), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((group, 1), jnp.float32)],
+        interpret=interpret,
+    )(q, k, mask)
+
+    return pl.pallas_call(
+        functools.partial(_attend_kernel, scale=scale, threshold=threshold),
+        grid=grid,
+        in_specs=[q_spec, kv_spec, vv_spec, mask_spec, rm_spec],
+        out_specs=pl.BlockSpec((1, group, dv), lambda b_, h, ik: (b_, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, mask, rowmax)

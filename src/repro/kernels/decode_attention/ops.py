@@ -1,0 +1,191 @@
+"""Public entry: A³ decode attention over a KV cache.
+
+Composes greedy candidate selection (core) with the decode kernel / ref.
+The cache-validity mask and the A³ candidate mask are merged; positions
+written after the last column sort ("fresh tail") are always candidates —
+the exact-tail policy for autoregressive decode described in DESIGN.md.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import A3Config, A3Mode
+from repro.core.candidate_selection import SortedKeys, select_candidates
+from repro.kernels.decode_attention.kernel import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def a3_decode_attention(
+    q: jax.Array,                   # [B, Hq, D]
+    k: jax.Array,                   # [B, Hkv, S, D]
+    v: jax.Array,                   # [B, Hkv, S, Dv]
+    valid_mask: jax.Array,          # [B, S] cache validity
+    cfg: A3Config,
+    sorted_keys: Optional[SortedKeys] = None,   # batched tree if provided
+    fresh_from: Optional[jax.Array] = None,     # [B] first unsorted position
+    *,
+    use_kernel: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, d = q.shape
+    _, hkv, s_len, _ = k.shape
+    group = hq // hkv
+    scale = d ** -0.5
+
+    if cfg.mode == A3Mode.OFF or sorted_keys is None:
+        mask = jnp.broadcast_to(valid_mask[:, None, :], (b, hq, s_len))
+        thr = None if cfg.mode == A3Mode.OFF else cfg.threshold_nats
+    else:
+        m = cfg.m_for(s_len)
+
+        def per_bh(sk_vals, sk_rows, qh):
+            sk = SortedKeys(values=sk_vals, rows=sk_rows)
+            cand, _ = select_candidates(sk, qh * scale, m)
+            return cand
+
+        # vmap over batch then heads; sorted_keys are per (batch, kv-head)
+        def per_b(sk_vals, sk_rows, qb):        # qb [Hq, D]
+            qg = qb.reshape(hkv, group, d)
+            f = jax.vmap(lambda skv, skr, qs: jax.vmap(
+                lambda one_q: per_bh(skv, skr, one_q))(qs))
+            return f(sk_vals, sk_rows, qg).reshape(hq, s_len)
+
+        cand = jax.vmap(per_b)(sorted_keys.values, sorted_keys.rows, q)
+        if fresh_from is not None:
+            pos = jnp.arange(s_len)[None, None, :]
+            cand = cand | (pos >= fresh_from[:, None, None])
+        mask = cand & valid_mask[:, None, :]
+        thr = cfg.threshold_nats
+
+    if use_kernel:
+        return decode_attention(q, k, v, mask, threshold=thr,
+                                interpret=interpret)
+    return decode_attention_ref(q, k, v, mask, threshold=thr)
+
+
+def a3_decode_attention_compact(
+    q: jax.Array,                   # [B, Hq, D]
+    k: jax.Array,                   # [B, Hkv, S, D]
+    v: jax.Array,                   # [B, Hkv, S, Dv]
+    valid_mask: jax.Array,          # [B, S]
+    cfg: A3Config,
+    sorted_keys: SortedKeys,        # batched per (B, Hkv): [B, Hkv, S, D]
+    fresh_mask: Optional[jax.Array] = None,   # [B, S] always-include rows
+    budget: Optional[int] = None,
+) -> jax.Array:
+    """A^3 decode with **sharded compaction** (SSPerf H3.v4).
+
+    The KV ring is treated as ``cfg.select_shards`` contiguous blocks
+    (aligned with the model mesh axis so each block is chip-local;
+    ``sorted_keys`` are column-sorted *per block* with block-local row
+    ids). Each block runs the greedy walk (prefix-capped, heuristic-free
+    — see v2/v3 notes in EXPERIMENTS.md) and gathers its own top-(C/NS)
+    candidates; the concatenated [C] candidate set is small, so the
+    final post-scoring + softmax is exact over it. The HLO never does a
+    global top_k across shards (v3's collective-permute storm) and only
+    moves C x D gathered bytes across chips.
+
+    Candidate sets are unioned across the GQA group; ``fresh_mask`` rows
+    (written after the last re-sort) are force-included per block.
+    """
+    b, hq, d = q.shape
+    _, hkv, s_len, dv = v.shape
+    group = hq // hkv
+    scale = d ** -0.5
+    ns = cfg.select_shards if s_len % max(cfg.select_shards, 1) == 0 else 1
+    sl = s_len // ns                               # block length
+    m = cfg.m_for(s_len)
+    c_total = int(min(s_len, budget if budget is not None
+                      else max(64, m // 2)))
+    c_loc = min(sl, max(16, c_total // ns))
+    m_loc = min(sl * d, max(c_loc, m // ns))
+    thr = cfg.threshold_nats
+    # v2: bound the per-column prefix to ~4M/d — the walk pops M elements
+    # across d columns, so O(M) selection work instead of O(M d).
+    cap = min(sl, max(16, (4 * m_loc + d - 1) // d))
+
+    # ---- fully batched (no vmap): gathers keep explicit batch dims so
+    # GSPMD partitions them instead of replicating (v4's jnp.take under
+    # triple-vmap was compiled with a replicated batch axis) -------------
+    from repro.models.common import shard_act
+    blk5 = lambda t: shard_act(t.reshape(b, hkv, ns, sl, t.shape[-1]),
+                               "a3_blocks")
+    kb, vb = blk5(k), blk5(v)
+    skv, skr = blk5(sorted_keys.values), blk5(sorted_keys.rows)
+    qg = (q.reshape(b, hkv, group, d).astype(jnp.float32)) * scale
+    valid_b = valid_mask.reshape(b, 1, ns, sl)
+    fresh_b = (fresh_mask.reshape(b, 1, ns, sl)
+               if fresh_mask is not None else jnp.zeros_like(valid_b))
+
+    # prefix slices per block (static; ascending sort -> bottom=min side)
+    top_v = skv[..., sl - cap:, :][..., ::-1, :]     # [B,Hkv,NS,cap,D]
+    bot_v = skv[..., :cap, :]
+    top_r = skr[..., sl - cap:, :][..., ::-1, :]
+    bot_r = skr[..., :cap, :]
+
+    qpos = (qg > 0)[:, :, None, :, None, :]          # [B,Hkv,1,G,1,D]
+    qexp = qg[:, :, None, :, None, :]
+    tv = top_v[:, :, :, None].astype(jnp.float32)    # [B,Hkv,NS,1,cap,D]
+    bv = bot_v[:, :, :, None].astype(jnp.float32)
+    prod_max = shard_act(jnp.where(qpos, tv, bv) * qexp,
+                         "a3_prefix")                # [B,Hkv,NS,G,cap,D]
+    prod_min = shard_act(jnp.where(qpos, bv, tv) * qexp, "a3_prefix")
+    rows_max = jnp.where(qpos, top_r[:, :, :, None], bot_r[:, :, :, None])
+    rows_min = jnp.where(qpos, bot_r[:, :, :, None], top_r[:, :, :, None])
+
+    # top-(m_loc) products per block via batched top_k, then a batched
+    # scatter-add into per-row greedy scores. (A sort-free variant that
+    # scatter-adds ALL cap*d prefix products was measured — v6 — and
+    # regressed the collective term 15x: GSPMD replicates the larger
+    # scatter; see EXPERIMENTS.md H3.)
+    # (v3 note: the cumulative-sum minQ heuristic — an M-step sequential
+    # scan, 4096-deep while loops per layer — is dropped here; top-C
+    # budgeting makes it second order.)
+    flat = lambda t: t.reshape(*t.shape[:4], cap * d)
+    a_vals, a_idx = jax.lax.top_k(flat(prod_max), m_loc)
+    b_nvals, b_idx = jax.lax.top_k(-flat(prod_min), m_loc)
+    b_vals = -b_nvals
+    a_rows = jnp.take_along_axis(
+        flat(jnp.broadcast_to(rows_max, prod_max.shape)), a_idx, axis=-1)
+    b_rows = jnp.take_along_axis(
+        flat(jnp.broadcast_to(rows_min, prod_min.shape)), b_idx, axis=-1)
+
+    base = jnp.zeros((b, hkv, ns, group, sl), jnp.float32)
+    bi, hi, si, gi, _ = jnp.meshgrid(
+        jnp.arange(b), jnp.arange(hkv), jnp.arange(ns),
+        jnp.arange(group), jnp.arange(m_loc), indexing="ij")
+    greedy = base.at[bi, hi, si, gi, a_rows].add(
+        jnp.where(a_vals > 0, a_vals, 0.0))
+    greedy = greedy.at[bi, hi, si, gi, b_rows].add(
+        jnp.where(b_vals < 0, b_vals, 0.0))
+    greedy = shard_act(greedy, "a3_greedy")
+
+    score_u = jnp.max(greedy, axis=3)                # union over G
+    score_u = jnp.where(valid_b, score_u, -jnp.inf)
+    score_u = jnp.where(fresh_b & valid_b, jnp.inf, score_u)
+    _, idx = jax.lax.top_k(score_u, c_loc)           # [B,Hkv,NS,Cl]
+    idx = shard_act(idx, "a3_scores")
+    live = jnp.take_along_axis(score_u, idx, axis=-1) > 0
+    kc = shard_act(jnp.take_along_axis(kb, idx[..., None], axis=3),
+                   "a3_blocks")                      # [B,Hkv,NS,Cl,D]
+    vc = shard_act(jnp.take_along_axis(vb, idx[..., None], axis=3),
+                   "a3_blocks")
+
+    # v7: score/output matmuls take bf16 inputs with f32 accumulation
+    # (MXU-native); keeps the gathered K/V in their cache dtype instead
+    # of converting to f32 (halves the gather-side bytes).
+    scores = jnp.einsum("bhgd,bhncd->bhgnc", qg.astype(k.dtype), kc,
+                        preferred_element_type=jnp.float32)
+    scores = jnp.where(live[:, :, None], scores, -jnp.inf)
+    scores = scores.reshape(b, hkv, group, ns * c_loc)
+    mx = jnp.max(scores, axis=-1, keepdims=True)
+    keep = scores >= mx - thr                        # post-scoring SSIV-D
+    w = jnp.where(keep, jnp.exp(scores - mx), 0.0)
+    w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-20)
+    vcat = vc.reshape(b, hkv, ns * c_loc, dv)
+    out = jnp.einsum("bhgc,bhcd->bhgd", w.astype(v.dtype), vcat,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, hq, dv).astype(v.dtype)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the decode attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,                 # [B, Hq, D]
+    k: jnp.ndarray,                 # [B, Hkv, S, D]
+    v: jnp.ndarray,                 # [B, Hkv, S, Dv]
+    mask: jnp.ndarray,              # [B, Hq, S]
+    *,
+    threshold: Optional[float] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    b, hq, d = q.shape
+    _, hkv, s_len, dv = v.shape
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    kq = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vq = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kq) * scale
+    s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    keep = mask
+    if threshold is not None:
+        keep = keep & (s >= m - threshold)
+        s = jnp.where(keep, s, -jnp.inf)
+    p = jnp.where(keep, jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    w = p / jnp.maximum(l, 1e-30)
+    return jnp.einsum("bhk,bhkd->bhd", w, vq).astype(q.dtype)

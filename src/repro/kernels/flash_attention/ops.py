@@ -1,0 +1,35 @@
+"""Public jit'd entry point for fused attention.
+
+Dispatches between the Pallas TPU kernel and the pure-jnp reference
+(`use_kernel=False` is the analyzable-HLO path used by the dry-run; the
+kernel path is the deployment path on real TPUs and is validated in
+interpret mode on CPU).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def fused_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    use_kernel: bool = False,
+    interpret: bool = False,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    if use_kernel:
+        return flash_attention(
+            q, k, v, causal=causal, window=window, scale=scale,
+            block_q=block_q, block_k=block_k, interpret=interpret)
+    return attention_ref(q, k, v, causal=causal, window=window, scale=scale)

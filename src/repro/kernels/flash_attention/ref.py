@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the fused attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,                 # [B, Hq, Sq, D]
+    k: jnp.ndarray,                 # [B, Hkv, Sk, D]
+    v: jnp.ndarray,                 # [B, Hkv, Sk, Dv]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    b, hq, sq, d = q.shape
+    _, hkv, sk, dv = v.shape
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kq.astype(jnp.float32)) * scale
+
+    rows = jnp.arange(sq)[:, None] + (sk - sq)
+    cols = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask[None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    w = p / jnp.maximum(l, 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, vq.astype(jnp.float32)).astype(q.dtype)

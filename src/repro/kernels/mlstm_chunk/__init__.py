@@ -1,0 +1,3 @@
+from repro.kernels.mlstm_chunk.ops import mlstm_chunk
+
+__all__ = ["mlstm_chunk"]

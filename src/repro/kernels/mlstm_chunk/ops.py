@@ -1,0 +1,16 @@
+"""Public entry: chunkwise mLSTM recurrent core (kernel or oracle)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.mlstm_chunk.kernel import mlstm_chunk_kernel
+from repro.kernels.mlstm_chunk.ref import mlstm_chunk_ref
+
+
+def mlstm_chunk(q, k, v, log_i, log_f, *, chunk: int = 256,
+                scale: float = 1.0, use_kernel: bool = False,
+                interpret: bool = False) -> jax.Array:
+    if use_kernel:
+        return mlstm_chunk_kernel(q, k, v, log_i, log_f, chunk=chunk,
+                                  scale=scale, interpret=interpret)
+    return mlstm_chunk_ref(q, k, v, log_i, log_f, scale=scale)

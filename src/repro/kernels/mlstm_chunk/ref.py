@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the chunkwise mLSTM kernel: sequential per-token
+recurrence (exact), f64-free but f32 throughout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_chunk_ref(q, k, v, log_i, log_f, *, scale: float = 1.0):
+    """q/k/v [B,H,S,D*], gates [B,H,S]. Returns h [B,H,S,Dv] (f32 math,
+    cast back to q.dtype). Sequential scan over S — the exact oracle."""
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32) * scale
+    vf = v.astype(jnp.float32)
+    li = log_i.astype(jnp.float32)
+    lf = log_f.astype(jnp.float32)
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, lit, lft = xs                       # [B,H,D*], [B,H]
+        m_new = jnp.maximum(lft + m, lit)
+        f_eff = jnp.exp(lft + m - m_new)
+        i_eff = jnp.exp(lit - m_new)
+        C_new = f_eff[..., None, None] * C + i_eff[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :])
+        n_new = f_eff[..., None] * n + i_eff[..., None] * kt
+        num = jnp.einsum("bhkv,bhk->bhv", C_new, qt)
+        qn = jnp.einsum("bhk,bhk->bh", n_new, qt)
+        den = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+        return (C_new, n_new, m_new), num / den[..., None]
+
+    C0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    n0 = jnp.zeros((b, h, dk), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 2, 0) for t in (qf, kf, vf, li, lf))
+    _, hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    return jnp.moveaxis(hs, 0, 2).astype(q.dtype)

@@ -1,0 +1,295 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract memory/cost/roofline from the compiled
+artifact. No real buffers are allocated (ShapeDtypeStruct stand-ins).
+
+The two lines above MUST stay first: jax locks the device count on first
+initialization, and the production meshes need 512 placeholder devices.
+
+Usage:
+  python -m repro.launch.dryrun --arch phi4-mini-3.8b --shape train_4k
+  python -m repro.launch.dryrun --arch all [--multipod] [--out results.json]
+  python -m repro.launch.dryrun --list
+"""
+import argparse
+import gc
+import json
+import sys
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import (
+    A3Config,
+    A3Mode,
+    ModelConfig,
+    RunConfig,
+    SHAPE_SUITE,
+    ShapeConfig,
+    ShapeKind,
+    ShardingConfig,
+    applicable_shapes,
+    get_arch,
+    list_archs,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.launch import roofline
+from repro.models import decoder
+from repro.sharding.rules import batch_spec, cache_specs, param_specs, \
+    shardings_for
+from repro.train.step import init_train_state_shape, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, weak-type-correct, no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Model inputs for one step of the given shape kind."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == ShapeKind.TRAIN:
+        if cfg.frontend:
+            return {
+                "embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt),
+                "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+    if shape.kind == ShapeKind.PREFILL:
+        if cfg.frontend:
+            return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)}
+        return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    # DECODE: one new token against a cache of length s
+    if cfg.frontend:
+        tok = {"embed": jax.ShapeDtypeStruct((b, cfg.d_model), dt)}
+    else:
+        tok = {"token": jax.ShapeDtypeStruct((b,), jnp.int32)}
+    return {**tok, "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def model_flops_for(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    n_active = cfg.active_param_count()
+    if shape.kind == ShapeKind.TRAIN:
+        return 6.0 * n_active * shape.tokens_per_step
+    return 2.0 * n_active * shape.tokens_per_step
+
+
+# ---------------------------------------------------------------------------
+# per-kind lowering
+# ---------------------------------------------------------------------------
+
+def lower_train(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                sharding_cfg: ShardingConfig):
+    run = RunConfig(model=cfg, shape=shape, sharding=sharding_cfg)
+    step = make_train_step(run, mesh, donate=False)
+    state_shape = init_train_state_shape(run)
+    return step.lower(state_shape, input_specs(cfg, shape))
+
+
+def lower_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                  sharding_cfg: ShardingConfig):
+    from repro.models.common import activation_shardings
+    from repro.sharding.rules import act_specs
+    params_shape = decoder.init_params_shape(cfg)
+    pspecs = shardings_for(param_specs(params_shape, sharding_cfg, mesh),
+                           mesh)
+    bs = batch_spec(shape, mesh, sharding_cfg)
+    a_specs = act_specs(cfg, shape, mesh, sharding_cfg)
+    spec = input_specs(cfg, shape)
+
+    if cfg.frontend:
+        bspec = NamedSharding(mesh, P(*bs, None))
+        def fn(params, embeds):
+            with activation_shardings(a_specs):
+                return decoder.prefill(params, cfg, inputs_embeds=embeds)
+        jf = jax.jit(fn, in_shardings=(pspecs, bspec))
+        return jf.lower(params_shape, spec["embeds"])
+
+    bspec = NamedSharding(mesh, bs)
+    def fn(params, tokens):
+        with activation_shardings(a_specs):
+            return decoder.prefill(params, cfg, tokens)
+    jf = jax.jit(fn, in_shardings=(pspecs, bspec))
+    return jf.lower(params_shape, spec["tokens"])
+
+
+def lower_decode(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                 sharding_cfg: ShardingConfig,
+                 a3: A3Config = A3Config()):
+    from repro.models.common import activation_shardings
+    from repro.sharding.rules import act_specs
+    params_shape = decoder.init_params_shape(cfg)
+    pspecs = shardings_for(param_specs(params_shape, sharding_cfg, mesh),
+                           mesh)
+    cache_shape = jax.eval_shape(
+        lambda: decoder.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                   a3=a3.mode != A3Mode.OFF))
+    cspecs = shardings_for(cache_specs(cache_shape, shape, mesh, sharding_cfg), mesh)
+    a_specs = act_specs(cfg, shape, mesh, sharding_cfg)
+    spec = input_specs(cfg, shape)
+    rep = NamedSharding(mesh, P())
+
+    if cfg.frontend:
+        def fn(params, cache, embed, pos):
+            with activation_shardings(a_specs):
+                return decoder.decode_step(params, cfg, cache, None, pos,
+                                           input_embed=embed, a3=a3)
+        jf = jax.jit(fn, in_shardings=(pspecs, cspecs, rep, rep),
+                     out_shardings=(None, cspecs))
+        return jf.lower(params_shape, cache_shape, spec["embed"],
+                        spec["pos"])
+
+    def fn(params, cache, token, pos):
+        with activation_shardings(a_specs):
+            return decoder.decode_step(params, cfg, cache, token, pos,
+                                       a3=a3)
+    jf = jax.jit(fn, in_shardings=(pspecs, cspecs, rep, rep),
+                 out_shardings=(None, cspecs))
+    return jf.lower(params_shape, cache_shape, spec["token"], spec["pos"])
+
+
+# ---------------------------------------------------------------------------
+# cell runner
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             sharding_cfg: Optional[ShardingConfig] = None,
+             a3: A3Config = A3Config(),
+             verbose: bool = True,
+             save_hlo_dir: Optional[str] = None) -> Dict[str, Any]:
+    cfg = get_arch(arch)
+    shape = SHAPE_SUITE[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = mesh.devices.size
+    if sharding_cfg is None:
+        sharding_cfg = ShardingConfig(
+            remat="full" if shape.kind == ShapeKind.TRAIN else "none")
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == ShapeKind.TRAIN:
+            lowered = lower_train(cfg, shape, mesh, sharding_cfg)
+        elif shape.kind == ShapeKind.PREFILL:
+            lowered = lower_prefill(cfg, shape, mesh, sharding_cfg)
+        else:
+            lowered = lower_decode(cfg, shape, mesh, sharding_cfg, a3)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    hlo_text = compiled.as_text()
+    if save_hlo_dir:
+        import gzip
+        import os as _os
+        _os.makedirs(save_hlo_dir, exist_ok=True)
+        fn = f"{arch}_{shape_name}_{mesh_name}"
+        if a3.mode.value != "off":
+            fn += f"_a3-{a3.mode.value}"
+        with gzip.open(_os.path.join(save_hlo_dir, fn + ".hlo.gz"),
+                       "wt") as f:
+            f.write(hlo_text)
+    r = roofline.analyze(arch, shape_name, mesh_name, chips, compiled,
+                         model_flops_for(cfg, shape), hlo_text=hlo_text)
+    rec = {
+        **r.to_dict(),
+        "a3_mode": a3.mode.value,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_device_bytes": (mem.argument_size_in_bytes
+                                  + mem.temp_size_in_bytes
+                                  + mem.output_size_in_bytes
+                                  - mem.alias_size_in_bytes),
+        },
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+    }
+    if verbose:
+        print(f"[{mesh_name}] {arch} x {shape_name}: "
+              f"compute={r.compute_s*1e3:.2f}ms memory={r.memory_s*1e3:.2f}ms "
+              f"collective={r.collective_s*1e3:.2f}ms "
+              f"bottleneck={r.bottleneck} "
+              f"peak_dev={rec['memory']['peak_device_bytes']/2**30:.2f}GiB "
+              f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s)")
+        sys.stdout.flush()
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--a3", default="off",
+                    choices=["off", "conservative", "aggressive"])
+    ap.add_argument("--select-shards", type=int, default=16,
+                    help="A3 distributed-selection blocks (align with the "
+                         "sharded ring: 16 = model axis, 256 = full grid)")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--save-hlo", default=None,
+                    help="directory for gzipped per-cell compiled HLO")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for a in list_archs():
+            print(a, "->", ", ".join(applicable_shapes(a)))
+        return
+
+    import dataclasses as _dc
+    a3 = {"off": A3Config(),
+          "conservative": A3Config.conservative(),
+          "aggressive": A3Config.aggressive()}[args.a3]
+    if a3.mode != A3Mode.OFF:
+        # distributed selection aligned with the sharded KV ring
+        a3 = _dc.replace(a3, select_shards=args.select_shards)
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    results = []
+    meshes = [False, True] if args.both_meshes else [args.multipod]
+    for arch in archs:
+        shapes = (applicable_shapes(arch) if args.shape == "all"
+                  else [args.shape])
+        for shape_name in shapes:
+            if shape_name not in applicable_shapes(arch):
+                print(f"SKIP {arch} x {shape_name} (inapplicable; "
+                      f"see DESIGN.md SS6)")
+                continue
+            for mp in meshes:
+                try:
+                    results.append(run_cell(arch, shape_name, multi_pod=mp,
+                                            a3=a3,
+                                            save_hlo_dir=args.save_hlo))
+                except Exception as e:   # noqa: BLE001
+                    print(f"FAIL {arch} x {shape_name} "
+                          f"({'2x16x16' if mp else '16x16'}): {e!r}")
+                    results.append({"arch": arch, "shape": shape_name,
+                                    "mesh": "2x16x16" if mp else "16x16",
+                                    "error": repr(e)})
+                gc.collect()
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {len(results)} records to {args.out}")
+    n_fail = sum(1 for r in results if "error" in r)
+    print(f"dry-run: {len(results) - n_fail}/{len(results)} cells OK")
+    if n_fail:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

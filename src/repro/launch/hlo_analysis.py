@@ -1,0 +1,379 @@
+"""Backend-independent HLO accounting for the dry-run roofline.
+
+``compiled.cost_analysis()`` on the CPU backend under-counts dot FLOPs
+(library-call dots report 0) and says nothing about collectives, so we
+parse the compiled HLO text ourselves:
+
+  * build the computation call graph (while bodies/conds, fusions,
+    calls, conditionals) and propagate execution multipliers — a while
+    whose condition compares the induction variable against
+    ``constant(N)`` executes its body N times (the layer-stack scan);
+  * count dot FLOPs as 2 x prod(result dims) x prod(contracting dims),
+    scaled by the computation's multiplier;
+  * sum collective operand bytes (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute), same scaling.
+
+Everything works on one per-device SPMD program: numbers are
+*per-device* by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+# header: "%name (args...) -> type {"  — args may contain nested parens
+# (tuple types), so just grab the name and require "->" + trailing "{".
+_COMP_HDR_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype in _DTYPE_BYTES:
+            out.append((dtype,
+                        [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class HloStats:
+    dot_flops: float
+    collective_bytes: Dict[str, float]
+    collective_wire_bytes: float
+    collective_counts: Dict[str, int]
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+class HloModule:
+    """Parsed (textual) HLO module with execution-count propagation."""
+
+    def __init__(self, text: str):
+        self._fusion_cache: Dict[str, Optional[Tuple[float, float]]] = {}
+        self.computations: Dict[str, List[str]] = {}
+        cur, lines = None, []
+        for line in text.splitlines():
+            m = _COMP_HDR_RE.match(line)
+            if (m and "->" in line and line.rstrip().endswith("{")
+                    and "=" not in line.split("(")[0]):
+                if cur is not None:
+                    self.computations[cur] = lines
+                cur, lines = m.group(1), []
+            elif cur is not None:
+                lines.append(line)
+        if cur is not None:
+            self.computations[cur] = lines
+
+        # name -> result type string (for operand byte lookup)
+        self.result_type: Dict[str, str] = {}
+        # computations that are fusion bodies (excluded from byte walk)
+        self.fusion_bodies: set = set()
+        # call graph edges: (caller, callee, multiplier_per_call)
+        edges: List[Tuple[str, str, float]] = []
+        for comp, clines in self.computations.items():
+            for line in clines:
+                m = _DEF_RE.match(line)
+                if not m:
+                    continue
+                name, rhs = m.group(1), m.group(2)
+                self.result_type[name] = rhs.split("(")[0]
+                if re.search(r"\bfusion\(", rhs):
+                    for callee in re.findall(r"calls=%?([\w.\-]+)", rhs):
+                        self.fusion_bodies.add(callee)
+                if re.search(r"\bwhile\(", rhs):
+                    cm = re.search(r"condition=%?([\w.\-]+)", rhs)
+                    bm = re.search(r"body=%?([\w.\-]+)", rhs)
+                    if cm and bm:
+                        trip = self._trip_count(cm.group(1))
+                        edges.append((comp, bm.group(1), float(trip)))
+                        edges.append((comp, cm.group(1), float(trip + 1)))
+                for attr in ("calls", "to_apply", "true_computation",
+                             "false_computation", "branch_computations"):
+                    for callee in re.findall(
+                            attr + r"=\{?%?([\w.\-]+)", rhs):
+                        edges.append((comp, callee, 1.0))
+
+        # propagate multipliers from ENTRY (first computation w/ ENTRY or
+        # assume any computation not referenced as callee is a root)
+        callees = {c for _, c, _ in edges}
+        roots = [c for c in self.computations if c not in callees]
+        self.mult: Dict[str, float] = defaultdict(float)
+        for r in roots:
+            self.mult[r] = 1.0
+        for _ in range(32):
+            changed = False
+            new = defaultdict(float)
+            for r in roots:
+                new[r] = 1.0
+            for caller, callee, k in edges:
+                new[callee] += self.mult[caller] * k
+            if dict(new) != dict(self.mult):
+                self.mult = new
+                changed = True
+            if not changed:
+                break
+
+    def _trip_count(self, cond: str) -> int:
+        """Trip count of a while loop from its condition computation:
+        resolve the scalar constant operand of the ROOT compare (the
+        bound the induction variable is checked against). Falls back to
+        the max scalar constant in the computation."""
+        lines = self.computations.get(cond, ())
+        consts: Dict[str, int] = {}
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            name, rhs = m.group(1), m.group(2)
+            cm = re.match(r"s32\[\]\s.*constant\((\d+)\)", rhs)
+            if cm:
+                consts[name] = int(cm.group(1))
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m or "compare(" not in m.group(2):
+                continue
+            rhs = m.group(2)
+            inline = re.findall(r"constant\((\d+)\)", rhs)
+            if inline:
+                return max(int(c) for c in inline)
+            args = rhs.split("compare(")[1].split(")")[0]
+            ops = re.findall(r"%?([\w.\-]+)", args)
+            vals = [consts[o] for o in ops if o in consts]
+            if vals:
+                return max(vals)
+        return max(consts.values(), default=1)
+
+    # -- dot flops -----------------------------------------------------------
+    def dot_flops(self) -> float:
+        total = 0.0
+        for comp, clines in self.computations.items():
+            k = self.mult.get(comp, 0.0)
+            if k == 0.0:
+                continue
+            for line in clines:
+                m = _DEF_RE.match(line)
+                if not m:
+                    continue
+                rhs = m.group(2)
+                dm = re.search(r"\bdot\(", rhs)
+                if not dm:
+                    continue
+                shapes = _shape_dims(rhs.split("(")[0])
+                if not shapes:
+                    continue
+                _, rdims = shapes[0]
+                out_elems = 1
+                for d in rdims:
+                    out_elems *= d
+                # contracting size from lhs operand + dims attribute
+                ops = re.findall(r"%?([\w.\-]+)",
+                                 rhs[dm.end():].split(")")[0])
+                lhs_t = self.result_type.get(ops[0], "") if ops else ""
+                lhs_shapes = _shape_dims(lhs_t)
+                cdim = re.search(r"lhs_contracting_dims=\{([0-9,]+)\}", rhs)
+                csize = 1
+                if lhs_shapes and cdim:
+                    _, ldims = lhs_shapes[0]
+                    for ci in cdim.group(1).split(","):
+                        ci = int(ci)
+                        if ci < len(ldims):
+                            csize *= ldims[ci]
+                total += k * 2.0 * out_elems * csize
+        return total
+
+    # -- collective bytes ------------------------------------------------------
+    def collectives(self, default_ring: int = 16
+                    ) -> Tuple[Dict[str, float], Dict[str, int], float]:
+        op_bytes: Dict[str, float] = defaultdict(float)
+        op_counts: Dict[str, int] = defaultdict(int)
+        wire = 0.0
+        for comp, clines in self.computations.items():
+            k = self.mult.get(comp, 0.0)
+            if k == 0.0:
+                continue
+            for line in clines:
+                m = _DEF_RE.match(line)
+                if not m:
+                    continue
+                rhs = m.group(2)
+                opm = re.search(
+                    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                    r"collective-permute)(?:-start)?\(", rhs)
+                if not opm:
+                    continue
+                op = opm.group(1)
+                args = rhs[opm.end():]
+                operands = re.findall(r"%?([\w.\-]+)", args.split(")")[0])
+                b = sum(_shape_bytes(self.result_type.get(o, ""))
+                        for o in operands)
+                if b == 0:
+                    b = _shape_bytes(rhs.split("(")[0])
+                rg = re.search(r"replica_groups=\{\{([0-9,]+)\}", rhs)
+                n = len(rg.group(1).split(",")) if rg else default_ring
+                op_bytes[op] += k * b
+                op_counts[op] += int(k) if k >= 1 else 1
+                if op == "all-reduce":
+                    wire += k * b * 2 * (n - 1) / max(n, 1)
+                elif op in ("all-gather", "reduce-scatter"):
+                    wire += k * b * (n - 1) / max(n, 1)
+                else:
+                    wire += k * b
+        return dict(op_bytes), dict(op_counts), wire
+
+    # -- approximate HBM traffic -----------------------------------------------
+    _SKIP_OPS = ("parameter", "constant", "tuple(", "get-tuple-element",
+                 "bitcast", "after-all", "partition-id", "replica-id")
+
+    def _dus_update_bytes(self, fusion_body: str) -> Optional[int]:
+        """If the fusion's ROOT is a dynamic-update-slice, return the
+        update operand's byte size (the in-place write), else None."""
+        for line in self.computations.get(fusion_body, ()):
+            if "ROOT" not in line or "dynamic-update-slice(" not in line:
+                continue
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            rhs = m.group(2)
+            args = rhs.split("dynamic-update-slice(")[1].split(")")[0]
+            ops = re.findall(r"%?([\w.\-]+)", args)
+            if len(ops) >= 2:
+                # operand 1 is the update; resolve within the body first
+                upd = ops[1]
+                t = self.result_type.get(upd, "")
+                return _shape_bytes(t) if t else None
+        return None
+
+    def _fusion_bytes(self, body: str) -> Optional[Tuple[float, float]]:
+        """(read_bytes, write_bytes) of one fusion execution, resolved
+        from its body: parameters consumed only through dynamic-slice /
+        gather count at the slice-result size (the loop-body pattern:
+        'slice one timestep from the big scanned array'); the write side
+        is the update size when the ROOT is a dynamic-update-slice.
+        Cached per body."""
+        if body in self._fusion_cache:
+            return self._fusion_cache[body]
+        lines = self.computations.get(body)
+        if lines is None:
+            return None
+        param_full: Dict[str, int] = {}
+        sliced_only: Dict[str, int] = {}
+        used_dense: set = set()
+        root_write: Optional[int] = None
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            name, rhs = m.group(1), m.group(2)
+            head = rhs.split("(")[0]
+            if re.search(r"\bparameter\(", rhs):
+                param_full[name] = _shape_bytes(head)
+                continue
+            args = rhs[len(head):].split(")")[0]
+            ops = re.findall(r"%?([\w.\-]+)", args)
+            if "dynamic-update-slice(" in rhs:
+                # operand 0 (the buffer) is aliased in place — neither
+                # read nor written beyond the update region
+                if "ROOT" in line:
+                    if len(ops) >= 2 and ops[1] in param_full:
+                        root_write = param_full[ops[1]]
+                    else:
+                        t = self.result_type.get(ops[1], "") \
+                            if len(ops) > 1 else ""
+                        root_write = _shape_bytes(t) if t else None
+                for o in ops[1:]:
+                    if o in param_full:
+                        used_dense.add(o)
+                continue
+            is_slice = re.search(r"\b(dynamic-slice|gather)\(", rhs)
+            for i, o in enumerate(ops):
+                if o not in param_full:
+                    continue
+                if is_slice and i == 0:
+                    sliced_only[o] = sliced_only.get(o, 0) + \
+                        _shape_bytes(head)
+                else:
+                    used_dense.add(o)
+        reads = 0.0
+        for p, full in param_full.items():
+            if p in used_dense or p not in sliced_only:
+                reads += full if p in used_dense else 0.0
+            else:
+                reads += sliced_only[p]
+        out = (reads, float(root_write) if root_write is not None else -1.0)
+        self._fusion_cache[body] = out
+        return out
+
+    def hbm_bytes(self) -> float:
+        """Approximate HBM traffic: operand + result bytes of every
+        top-level op (fusion internals excluded — a fusion reads its
+        params and writes its result once), scaled by execution count."""
+        total = 0.0
+        for comp, clines in self.computations.items():
+            if comp in self.fusion_bodies:
+                continue
+            k = self.mult.get(comp, 0.0)
+            if k == 0.0:
+                continue
+            for line in clines:
+                m = _DEF_RE.match(line)
+                if not m:
+                    continue
+                rhs = m.group(2)
+                head = rhs.split("(")[0]
+                body = rhs[len(head):]
+                if any(s in rhs for s in self._SKIP_OPS) and not \
+                        re.search(r"\b(dot|fusion|convolution|custom-call|"
+                                  r"scatter|gather|while|reduce)\b", rhs):
+                    continue
+                b = _shape_bytes(head)                  # result bytes
+                if re.search(r"\b(gather|dynamic-slice)\(", rhs):
+                    # a gather/slice physically reads ~result bytes (+
+                    # indices), not its full operand
+                    total += k * 2 * b
+                    continue
+                fm = re.search(r"\bfusion\(.*calls=%?([\w.\-]+)", rhs)
+                if fm:
+                    fb = self._fusion_bytes(fm.group(1))
+                    if fb is not None:
+                        reads, write = fb
+                        total += k * (reads + (write if write >= 0 else b))
+                        continue
+                ops = re.findall(r"%?([\w.\-]+)", body.split(")")[0])
+                for o in ops:
+                    b += _shape_bytes(self.result_type.get(o, ""))
+                total += k * b
+        return total
+
+    def stats(self) -> HloStats:
+        ob, oc, wire = self.collectives()
+        return HloStats(self.dot_flops(), ob, wire, oc)
+
+
+def analyze_hlo(text: str) -> HloStats:
+    return HloModule(text).stats()

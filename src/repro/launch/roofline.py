@@ -1,0 +1,96 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+  compute    = HLO_FLOPs / peak_FLOPs          (per-device program)
+  memory     = HLO_bytes / HBM_bandwidth
+  collective = collective_bytes / ICI_bandwidth
+
+FLOPs/bytes/collective-bytes come from the call-graph-aware HLO walk in
+``repro.launch.hlo_analysis`` (the CPU backend's ``cost_analysis()``
+neither scales ``while``-body ops by trip count — i.e. the whole layer
+scan — nor reports library dots), applied to ``compiled.as_text()``,
+which is a per-device SPMD program: all numbers are per-device.
+
+collective_bytes = sum of collective operand sizes (assignment
+definition). ``wire_bytes`` additionally applies ring-algorithm factors
+(all-reduce moves 2(n-1)/n x bytes) — used in the SSPerf analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+from repro.launch.hlo_analysis import HloModule
+
+# ---- TPU v5e hardware constants (assignment) -------------------------------
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    wire_bytes: float
+    model_flops: float                 # 6 N_active D (2 N_active D inference)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    op_counts: Dict[str, int]
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        """MODEL_FLOPS / compiled FLOPs — catches remat/redundancy waste."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful FLOPs / (chips x peak x max-term step time) — the MFU
+        this program would achieve if it ran exactly at its dominant
+        roofline term."""
+        t = max(self.compute_s, self.memory_s, self.collective_s)
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS_BF16 * t)
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["bottleneck"] = self.bottleneck
+        d["useful_flop_ratio"] = self.useful_flop_ratio
+        d["roofline_fraction"] = self.roofline_fraction
+        return d
+
+
+def analyze(arch: str, shape: str, mesh_name: str, chips: int,
+            compiled, model_flops: float,
+            hlo_text: Optional[str] = None) -> Roofline:
+    txt = hlo_text if hlo_text is not None else compiled.as_text()
+    mod = HloModule(txt)
+    flops = mod.dot_flops()
+    bts = mod.hbm_bytes()
+    ob, oc, wire = mod.collectives()
+    coll_total = sum(ob.values())
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=flops, bytes_per_device=bts,
+        collective_bytes=coll_total, wire_bytes=wire,
+        model_flops=model_flops,
+        compute_s=flops / PEAK_FLOPS_BF16,
+        memory_s=bts / HBM_BW,
+        collective_s=coll_total / ICI_BW,
+        op_counts=oc,
+    )

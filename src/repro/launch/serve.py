@@ -1,0 +1,60 @@
+"""Serving launcher: load (or init) a model, run batched requests
+through the slot engine, optionally with A^3 approximation.
+
+  python -m repro.launch.serve --arch phi4-mini-3.8b --smoke \
+      --requests 8 --prompt-len 64 --max-new 32 --a3 conservative
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.config import A3Config, get_arch, smoke_variant
+from repro.models import decoder
+from repro.serve.engine import ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--a3", default="off",
+                    choices=["off", "conservative", "aggressive"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    a3 = {"off": A3Config(), "conservative": A3Config.conservative(),
+          "aggressive": A3Config.aggressive()}[args.a3]
+
+    params = decoder.init_params(jax.random.PRNGKey(args.seed), cfg)
+    engine = ServeEngine(params, cfg, slots=args.slots,
+                         max_len=args.max_len, a3=a3)
+
+    rng = np.random.default_rng(args.seed)
+    uids = [engine.submit(
+        rng.integers(0, cfg.vocab_size, size=args.prompt_len),
+        max_new_tokens=args.max_new) for _ in range(args.requests)]
+
+    t0 = time.time()
+    engine.run_to_completion()
+    dt = time.time() - t0
+    done = sum(1 for u in uids if engine.result(u) is not None)
+    total_new = sum(len(engine.result(u) or []) for u in uids)
+    print(f"arch={cfg.name} a3={args.a3} requests={done}/{len(uids)} "
+          f"new_tokens={total_new} ({total_new / dt:.1f} tok/s, "
+          f"{dt:.1f}s) stats={engine.stats}")
+
+
+if __name__ == "__main__":
+    main()

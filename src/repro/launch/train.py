@@ -1,0 +1,81 @@
+"""Training launcher.
+
+Single-host example (the container): trains a reduced-config model on
+the local device with the full production stack (config registry, data
+pipeline, checkpointing, watchdog, restart supervisor).
+
+On a real cluster every host runs this same entrypoint;
+``jax.distributed.initialize`` picks up the coordinator from the
+environment, the mesh comes from ``make_production_mesh``, and the
+GSPMD program is identical — that is exactly what the dry-run compiles.
+
+  python -m repro.launch.train --arch internlm2-1.8b --smoke \
+      --steps 50 --batch 8 --seq 256
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+
+from repro.config import (
+    CheckpointConfig,
+    OptimizerConfig,
+    RunConfig,
+    ShapeConfig,
+    ShapeKind,
+    ShardingConfig,
+    get_arch,
+    list_archs,
+    smoke_variant,
+)
+from repro.train.loop import train_with_recovery
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--remat", default="none",
+                    choices=["none", "dots", "full"])
+    ap.add_argument("--distributed", action="store_true",
+                    help="multi-host: jax.distributed.initialize()")
+    args = ap.parse_args()
+
+    if args.distributed:
+        jax.distributed.initialize()
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    shape = ShapeConfig("cli", ShapeKind.TRAIN, args.seq, args.batch)
+    run = RunConfig(
+        model=cfg, shape=shape,
+        optimizer=OptimizerConfig(lr=args.lr, total_steps=args.steps,
+                                  warmup_steps=max(1, args.steps // 10)),
+        sharding=ShardingConfig(remat=args.remat),
+        checkpoint=CheckpointConfig(directory=args.ckpt_dir,
+                                    save_every=args.save_every),
+    )
+
+    t0 = time.time()
+    out = train_with_recovery(run, num_steps=args.steps)
+    dt = time.time() - t0
+    losses = out["losses"]
+    toks = shape.tokens_per_step * len(losses)
+    print(f"arch={cfg.name} steps={len(losses)} "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"({toks / dt:.0f} tok/s, {dt:.1f}s, restarts={out['restarts']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,270 @@
+"""Common model building blocks (pure JAX, no flax).
+
+Parameters are plain nested dicts of jnp arrays; every constructor has an
+``init`` (returns params) and an ``apply``-style function. Layer stacks are
+stored with a leading ``layers`` axis and consumed by ``lax.scan``.
+
+The attention here is the *analyzable-HLO* path used by training and the
+dry-run: a chunked online-softmax (flash) attention written in jnp +
+``lax.scan`` so that the S×S score matrix is never materialized and
+``cost_analysis()`` sees the real FLOPs. The Pallas kernels in
+``repro.kernels`` are the deployment path (``use_pallas=True``).
+"""
+from __future__ import annotations
+
+import math
+import threading
+from contextlib import contextmanager
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# activation sharding constraints
+#
+# GSPMD propagation from params/inputs alone replicates activations inside
+# the remat'd layer scan (observed: per-device attention FLOPs 16x too
+# high on the 256-chip dry-run). Production frameworks pin activations
+# explicitly; ``activation_shardings`` installs a dict of NamedShardings
+# that ``shard_act`` applies at the few load-bearing points (block
+# inputs, q/k/v, CE chunks). Active during tracing; a no-op when empty.
+# ---------------------------------------------------------------------------
+
+_ACT = threading.local()
+
+
+@contextmanager
+def activation_shardings(specs: Optional[Dict[str, Any]]):
+    old = getattr(_ACT, "specs", None)
+    _ACT.specs = specs or {}
+    try:
+        yield
+    finally:
+        _ACT.specs = old
+
+
+def shard_act(x: jax.Array, kind: str) -> jax.Array:
+    specs = getattr(_ACT, "specs", None)
+    if not specs:
+        return x
+    s = specs.get(kind)
+    if s is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return out.astype(dtype) * params["scale"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, Dh]; positions: [..., S] int32."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                  # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    angles = angles[..., None, :]                              # [..., S, 1, Dh/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked flash attention in pure jnp (analyzable HLO, bounded memory)
+# ---------------------------------------------------------------------------
+
+def attention_xla_flash(
+    q: jax.Array,                   # [B, Hq, Sq, D]
+    k: jax.Array,                   # [B, Hkv, Sk, D]
+    v: jax.Array,                   # [B, Hkv, Sk, Dv]
+    *,
+    causal: bool = True,
+    window: Optional[jax.Array] = None,   # scalar (may be traced) or None
+    scale: Optional[float] = None,
+    chunk: int = 1024,
+    q_offset: Optional[jax.Array] = None,  # abs position of q row 0
+) -> jax.Array:
+    b, hq, sq, d = q.shape
+    _, hkv, sk, dv = v.shape
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    chunk = min(chunk, sk)
+    n_chunks = (sk + chunk - 1) // chunk
+    pad = n_chunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+
+    # keep the GQA group as its own axis: [B, Hkv, G, Sq, D]. Folding it
+    # into Sq (the obvious trick) materializes tiled masks and breaks
+    # sequence-sharding constraints under GSPMD (observed: 4x activation
+    # memory on MQA archs).
+    qf = (q.astype(jnp.float32) * scale).reshape(b, hkv, group, sq, d)
+
+    rows = jnp.arange(sq, dtype=jnp.int32)
+    if q_offset is None:
+        q_offset = jnp.int32(sk - sq)
+    abs_rows = rows + q_offset                                 # [Sq]
+
+    kc = k.reshape(b, hkv, n_chunks, chunk, d).astype(jnp.float32)
+    vc = v.reshape(b, hkv, n_chunks, chunk, dv).astype(jnp.float32)
+    kc = jnp.moveaxis(kc, 2, 0)                                # [C,B,Hkv,ck,d]
+    vc = jnp.moveaxis(vc, 2, 0)
+
+    def step(carry, xs):
+        m_prev, l_prev, acc = carry
+        kb, vb, ci = xs
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kb)    # [B,Hkv,G,Sq,ck]
+        cols = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        mask = cols[None, :] < sk
+        if causal:
+            mask = mask & (cols[None, :] <= abs_rows[:, None])
+        if window is not None:
+            mask = mask & (cols[None, :] > abs_rows[:, None] - window)
+        # mask: [Sq, ck], broadcast over batch/head/group
+        mb = mask[None, None, None]
+        s = jnp.where(mb, s, -1e30)
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mb, p, 0.0)
+        l_new = l_prev * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum("bhgqk,bhkd->bhgqd", p, vb)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, group, sq, 1), -1e30, dtype=jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, sq, 1), dtype=jnp.float32)
+    a0 = jnp.zeros((b, hkv, group, sq, dv), dtype=jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (kc, vc, jnp.arange(n_chunks, dtype=jnp.int32)))
+    safe = jnp.where(l == 0.0, 1.0, l)
+    out = jnp.where(l == 0.0, 0.0, acc / safe)
+    return out.reshape(b, hq, sq, dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (GQA + RoPE), shared by all transformer archs
+# ---------------------------------------------------------------------------
+
+def attention_init(key, d_model: int, n_q: int, n_kv: int, head_dim: int,
+                   dtype) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, d_model, n_q * head_dim, dtype),
+        "wk": dense_init(k2, d_model, n_kv * head_dim, dtype),
+        "wv": dense_init(k3, d_model, n_kv * head_dim, dtype),
+        "wo": dense_init(k4, n_q * head_dim, d_model, dtype,
+                         scale=1.0 / math.sqrt(n_q * head_dim)),
+    }
+
+
+def attention_qkv(params: Params, x: jax.Array, positions: jax.Array,
+                  n_q: int, n_kv: int, head_dim: int, rope_theta: float
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    q = (x @ params["wq"]).reshape(b, s, n_q, head_dim)
+    k = (x @ params["wk"]).reshape(b, s, n_kv, head_dim)
+    v = (x @ params["wv"]).reshape(b, s, n_kv, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    # -> [B, H, S, Dh]
+    return (jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+            jnp.moveaxis(v, 2, 1))
+
+
+def attention_out(params: Params, o: jax.Array) -> jax.Array:
+    # o: [B, H, S, Dh] -> [B, S, D]
+    b, h, s, hd = o.shape
+    return jnp.moveaxis(o, 1, 2).reshape(b, s, h * hd) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+def ffn_init(key, d_model: int, d_ff: int, dtype, act: str = "swiglu") -> Params:
+    if act == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_gate": dense_init(k1, d_model, d_ff, dtype),
+            "w_up": dense_init(k2, d_model, d_ff, dtype),
+            "w_down": dense_init(k3, d_ff, d_model, dtype,
+                                 scale=1.0 / math.sqrt(d_ff)),
+        }
+    k1, k2 = jax.random.split(key, 2)
+    return {
+        "w_up": dense_init(k1, d_model, d_ff, dtype),
+        "w_down": dense_init(k2, d_ff, d_model, dtype,
+                             scale=1.0 / math.sqrt(d_ff)),
+    }
+
+
+def ffn_apply(params: Params, x: jax.Array, act: str = "swiglu") -> jax.Array:
+    if act == "swiglu":
+        g = jax.nn.silu((x @ params["w_gate"]).astype(jnp.float32))
+        u = (x @ params["w_up"]).astype(jnp.float32)
+        return ((g * u).astype(x.dtype)) @ params["w_down"]
+    h = jax.nn.gelu((x @ params["w_up"]).astype(jnp.float32))
+    return h.astype(x.dtype) @ params["w_down"]
+
+
+def softcap(logits: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return logits
+    lf = logits.astype(jnp.float32)
+    return (jnp.tanh(lf / cap) * cap).astype(logits.dtype)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       ignore_index: int = -1) -> jax.Array:
+    """logits [..., V] (any dtype), labels [...] int32. Mean over valid."""
+    lf = logits.astype(jnp.float32)
+    m = jnp.max(lf, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    safe_labels = jnp.maximum(labels, 0)
+    gold = jnp.take_along_axis(lf, safe_labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    valid = (labels != ignore_index).astype(jnp.float32)
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)

@@ -1,0 +1,700 @@
+"""Unified decoder stack covering all assigned architectures.
+
+A model is a sequence of *segments*: maximal runs of layers sharing the
+same (block kind, ffn kind, attention window) signature. Each segment's
+layer parameters are stacked on a leading ``layers`` axis and executed
+with ``lax.scan`` (compact HLO for the 512-device dry-run; remat applies
+per layer). Examples:
+
+  phi4-mini        -> 1 segment  (attention + dense FFN, full window)
+  deepseek-moe     -> 2 segments (1 dense-FFN layer, 27 MoE layers)
+  gemma3           -> 12 segments (5 local / 1 global alternating)
+  recurrentgemma   -> 17 segments (rglru pairs / attention, 1:2)
+  xlstm            -> alternating mLSTM / sLSTM segments
+
+KV caches are **ring buffers** sized ``min(max_len, window)`` per
+segment — sliding-window layers at 500k context keep an O(window) cache,
+which is what makes ``long_500k`` runnable for SWA/hybrid archs.
+
+Approximation (the paper's technique) is applied at inference only
+(paper SSVI-B); ``decode_step`` takes an ``A3Config`` and routes windowless
+attention layers through ``a3_decode_attention``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import A3Config, A3Mode, AttentionKind, BlockKind, ModelConfig
+from repro.kernels.decode_attention.ops import a3_decode_attention
+from repro.models import xlstm as xl
+from repro.models.common import (
+    Params,
+    shard_act,
+    attention_init,
+    attention_out,
+    attention_qkv,
+    attention_xla_flash,
+    cross_entropy_loss,
+    dense_init,
+    embed_init,
+    ffn_apply,
+    ffn_init,
+    rmsnorm,
+    rmsnorm_init,
+    softcap,
+)
+from repro.models.moe import moe_apply, moe_init
+from repro.models.rglru import (
+    CONV_WIDTH,
+    rglru_apply_scan,
+    rglru_decode_step,
+    rglru_init,
+)
+
+FULL_WINDOW = 1 << 30
+
+
+def padded_vocab(v: int) -> int:
+    """Pad vocab to a multiple of 128 (MXU lane + mesh divisibility)."""
+    return ((v + 127) // 128) * 128
+
+
+# ---------------------------------------------------------------------------
+# segments
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SegmentSpec:
+    kind: BlockKind
+    ffn: str                 # "dense" | "moe" | "none"
+    window: int              # FULL_WINDOW for global attention
+    layers: Tuple[int, ...]  # absolute layer indices
+
+    @property
+    def count(self) -> int:
+        return len(self.layers)
+
+
+def _layer_signature(cfg: ModelConfig, i: int) -> Tuple:
+    kind = cfg.block_kind(i)
+    if kind in (BlockKind.MLSTM, BlockKind.SLSTM):
+        ffn = "dense" if cfg.d_ff else "none"
+    elif cfg.moe is not None and i >= cfg.moe.num_dense_layers:
+        ffn = "moe"
+    else:
+        ffn = "dense"
+    window = FULL_WINDOW
+    if kind == BlockKind.ATTENTION:
+        if cfg.attention_kind == AttentionKind.SLIDING:
+            window = cfg.window_size
+        elif cfg.attention_kind == AttentionKind.LOCAL_GLOBAL:
+            window = FULL_WINDOW if cfg.layer_is_global(i) else cfg.window_size
+    return (kind, ffn, window)
+
+
+def build_segments(cfg: ModelConfig) -> List[SegmentSpec]:
+    segs: List[SegmentSpec] = []
+    cur: List[int] = []
+    cur_sig = None
+    for i in range(cfg.num_layers):
+        sig = _layer_signature(cfg, i)
+        if sig != cur_sig and cur:
+            segs.append(SegmentSpec(cur_sig[0], cur_sig[1], cur_sig[2],
+                                    tuple(cur)))
+            cur = []
+        cur_sig = sig
+        cur.append(i)
+    if cur:
+        segs.append(SegmentSpec(cur_sig[0], cur_sig[1], cur_sig[2], tuple(cur)))
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ModelConfig, seg: SegmentSpec) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p: Params = {"ln1": rmsnorm_init(d, dtype)}
+    if seg.kind == BlockKind.ATTENTION:
+        p["attn"] = attention_init(ks[0], d, cfg.num_heads, cfg.num_kv_heads,
+                                   hd, dtype)
+    elif seg.kind == BlockKind.RGLRU:
+        p["rnn"] = rglru_init(ks[0], d, cfg.num_heads * hd, dtype)
+    elif seg.kind == BlockKind.MLSTM:
+        p["mlstm"] = xl.mlstm_init(ks[0], d, cfg.num_heads, hd, dtype)
+    elif seg.kind == BlockKind.SLSTM:
+        p["slstm"] = xl.slstm_init(ks[0], d, cfg.num_heads, dtype)
+    if seg.ffn != "none":
+        p["ln2"] = rmsnorm_init(d, dtype)
+    if seg.ffn == "dense":
+        p["ffn"] = ffn_init(ks[1], d, cfg.d_ff, dtype, act=cfg.act)
+    elif seg.ffn == "moe":
+        moe_cfg = cfg.moe
+        if (moe_cfg.d_expert or 0) == 0:
+            moe_cfg = dataclasses.replace(moe_cfg, d_expert=cfg.d_ff)
+        p["moe"] = moe_init(ks[1], d, moe_cfg, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    vp = padded_vocab(cfg.vocab_size)
+    segs = build_segments(cfg)
+    n_keys = 2 + len(segs)
+    keys = jax.random.split(key, n_keys)
+    params: Params = {
+        "embed": embed_init(keys[0], vp, cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], cfg.d_model, vp, dtype)
+    for si, seg in enumerate(segs):
+        lkeys = jax.random.split(keys[2 + si], seg.count)
+        stacked = jax.vmap(lambda k: _layer_init(k, cfg, seg))(lkeys)
+        params[f"seg{si}"] = stacked
+    return params
+
+
+def init_params_shape(cfg: ModelConfig) -> Params:
+    """ShapeDtypeStruct pytree of the params (no allocation; dry-run)."""
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _moe_cfg(cfg: ModelConfig):
+    m = cfg.moe
+    if m is not None and (m.d_expert or 0) == 0:
+        m = dataclasses.replace(m, d_expert=cfg.d_ff)
+    return m
+
+
+def _block_forward(lp: Params, h: jax.Array, positions: jax.Array,
+                   cfg: ModelConfig, seg: SegmentSpec,
+                   attn_chunk: int) -> Tuple[jax.Array, jax.Array]:
+    """One layer forward (full sequence). Returns (h, moe_aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = shard_act(h, "hidden")
+    hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+    if seg.kind == BlockKind.ATTENTION:
+        q, k, v = attention_qkv(lp["attn"], hn, positions, cfg.num_heads,
+                                cfg.num_kv_heads, cfg.resolved_head_dim,
+                                cfg.rope_theta)
+        q = shard_act(q, "q")
+        k = shard_act(k, "kv")
+        v = shard_act(v, "kv")
+        window = None if seg.window >= FULL_WINDOW else jnp.int32(seg.window)
+        o = attention_xla_flash(q, k, v, causal=True, window=window,
+                                chunk=attn_chunk)
+        h = h + attention_out(lp["attn"], o)
+    elif seg.kind == BlockKind.RGLRU:
+        o, _, _ = rglru_apply_scan(lp["rnn"], hn)
+        h = h + o
+    elif seg.kind == BlockKind.MLSTM:
+        h = h + xl.mlstm_parallel(lp["mlstm"], hn, cfg.num_heads,
+                                  cfg.resolved_head_dim)
+    elif seg.kind == BlockKind.SLSTM:
+        o, _ = xl.slstm_apply_scan(lp["slstm"], hn, cfg.num_heads)
+        h = h + o
+    if seg.ffn == "dense":
+        hn = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+        h = h + ffn_apply(lp["ffn"], hn, act=cfg.act)
+    elif seg.ffn == "moe":
+        hn = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+        o, moe_aux = moe_apply(lp["moe"], hn, _moe_cfg(cfg))
+        h = h + o
+        aux = aux + moe_aux["moe_aux_loss"]
+    return h, aux
+
+
+def _run_segment(params_seg: Params, h: jax.Array, positions: jax.Array,
+                 cfg: ModelConfig, seg: SegmentSpec, remat: str,
+                 attn_chunk: int) -> Tuple[jax.Array, jax.Array]:
+    def body(carry, lp):
+        out, aux = _block_forward(lp, carry, positions, cfg, seg, attn_chunk)
+        return out, aux
+
+    if remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, prevent_cse=False,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    h, auxs = jax.lax.scan(body, h, params_seg)
+    return h, jnp.sum(auxs)
+
+
+def embed_tokens(params: Params, cfg: ModelConfig, tokens: jax.Array
+                 ) -> jax.Array:
+    h = params["embed"][tokens]
+    return h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+
+
+def unembed(params: Params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"].T
+    else:
+        logits = h @ params["lm_head"]
+    logits = softcap(logits, cfg.logit_softcap)
+    vp = logits.shape[-1]
+    if vp != cfg.vocab_size:       # mask the vocab-padding columns
+        pad_mask = jnp.arange(vp) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype),
+                           logits)
+    return logits
+
+
+def forward_hidden(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: Optional[jax.Array] = None,        # [B, S] int32
+    inputs_embeds: Optional[jax.Array] = None,  # [B, S, D] (frontend stubs)
+    *,
+    positions: Optional[jax.Array] = None,
+    remat: str = "none",
+    attn_chunk: int = 1024,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence forward up to (not including) the unembed.
+    Returns (hidden [B, S, D], aux)."""
+    if inputs_embeds is not None:
+        h = inputs_embeds.astype(jnp.dtype(cfg.dtype))
+        b, s, _ = h.shape
+    else:
+        b, s = tokens.shape
+        h = embed_tokens(params, cfg, tokens)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    aux_total = jnp.zeros((), jnp.float32)
+    for si, seg in enumerate(build_segments(cfg)):
+        h, aux = _run_segment(params[f"seg{si}"], h, positions, cfg, seg,
+                              remat, attn_chunk)
+        aux_total = aux_total + aux
+    return h, {"moe_aux_loss": aux_total}
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: Optional[jax.Array] = None,
+    inputs_embeds: Optional[jax.Array] = None,
+    *,
+    positions: Optional[jax.Array] = None,
+    remat: str = "none",
+    attn_chunk: int = 1024,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence forward -> (logits [B, S, Vp], aux)."""
+    h, aux = forward_hidden(params, cfg, tokens, inputs_embeds,
+                            positions=positions, remat=remat,
+                            attn_chunk=attn_chunk)
+    return unembed(params, cfg, h), aux
+
+
+def chunked_ce(params: Params, cfg: ModelConfig, h: jax.Array,
+               labels: jax.Array, ce_chunk: int = 512) -> jax.Array:
+    """Cross-entropy without materializing [B, S, Vp] logits.
+
+    The unembed + log-softmax runs per sequence-chunk under a
+    ``lax.scan`` with ``jax.checkpoint``: peak logits memory drops from
+    O(S x Vp) to O(ce_chunk x Vp) (e.g. 90 GiB -> 350 MiB per device on
+    internlm2 train_4k), and the backward recomputes each chunk's logits
+    instead of keeping them. This is a production-LM-framework standard;
+    the dry-run memory analysis in EXPERIMENTS.md quantifies it.
+    """
+    b, s, _ = h.shape
+    c = min(ce_chunk, s)
+    if s % c != 0:
+        c = s                                # fallback: single chunk
+    n = s // c
+
+    def chunk_nll(hc, lc):
+        hc = shard_act(hc, "hidden")
+        logits = unembed(params, cfg, hc)              # [B, c, Vp]
+        lf = logits.astype(jnp.float32)
+        m = jnp.max(lf, axis=-1, keepdims=True)
+        lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+        safe = jnp.maximum(lc, 0)
+        gold = jnp.take_along_axis(lf, safe[..., None], axis=-1)[..., 0]
+        valid = (lc != -1).astype(jnp.float32)
+        return jnp.sum((lse - gold) * valid), jnp.sum(valid)
+
+    chunk_nll = jax.checkpoint(chunk_nll, prevent_cse=False)
+
+    if n == 1:
+        nll, cnt = chunk_nll(h, labels)
+        return nll / jnp.maximum(cnt, 1.0)
+
+    hc = jnp.moveaxis(h.reshape(b, n, c, h.shape[-1]), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, n, c), 1, 0)
+
+    def body(carry, xs):
+        nll, cnt = chunk_nll(*xs)
+        return (carry[0] + nll, carry[1] + cnt), None
+
+    (nll, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros(()), jnp.zeros(())), (hc, lc))
+    return nll / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            labels: jax.Array, *, inputs_embeds: Optional[jax.Array] = None,
+            remat: str = "none", attn_chunk: int = 1024,
+            ce_chunk: int = 512) -> Tuple[jax.Array, Dict]:
+    h, aux = forward_hidden(params, cfg, tokens, inputs_embeds, remat=remat,
+                            attn_chunk=attn_chunk)
+    loss = chunked_ce(params, cfg, h, labels, ce_chunk)
+    total = loss + aux["moe_aux_loss"]
+    return total, {"lm_loss": loss, **aux}
+
+
+# ---------------------------------------------------------------------------
+# KV / recurrent caches
+# ---------------------------------------------------------------------------
+
+def cache_len_for(seg: SegmentSpec, max_len: int) -> int:
+    if seg.kind != BlockKind.ATTENTION:
+        return 0
+    return min(max_len, seg.window)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None, a3: bool = False) -> Dict[str, Any]:
+    """Per-segment decode state. Attention: ring-buffer K/V sized
+    min(max_len, window). Recurrent: carried states.
+
+    ``a3=True`` additionally allocates the *sorted key matrix* for
+    global-attention segments (the paper's comprehension-time
+    preprocessing, kept alongside the cache exactly like the ASIC's
+    40KB sorted-key SRAM next to the 20KB key SRAM) plus the
+    ``sorted_upto`` watermark for the exact fresh-tail policy."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    cache: Dict[str, Any] = {}
+    for si, seg in enumerate(build_segments(cfg)):
+        L = seg.count
+        if seg.kind == BlockKind.ATTENTION:
+            w = cache_len_for(seg, max_len)
+            cache[f"seg{si}"] = {
+                "k": jnp.zeros((L, batch, cfg.num_kv_heads, w, hd), dtype),
+                "v": jnp.zeros((L, batch, cfg.num_kv_heads, w, hd), dtype),
+            }
+            if a3 and seg.window >= FULL_WINDOW:
+                cache[f"seg{si}"]["sk_vals"] = jnp.zeros(
+                    (L, batch, cfg.num_kv_heads, w, hd), dtype)
+                cache[f"seg{si}"]["sk_rows"] = jnp.zeros(
+                    (L, batch, cfg.num_kv_heads, w, hd), jnp.int32)
+                cache[f"seg{si}"]["sorted_upto"] = jnp.zeros(
+                    (L, batch), jnp.int32)
+        elif seg.kind == BlockKind.RGLRU:
+            d_rnn = cfg.num_heads * hd
+            cache[f"seg{si}"] = {
+                "h": jnp.zeros((L, batch, d_rnn), jnp.float32),
+                "conv": jnp.zeros((L, batch, CONV_WIDTH - 1, d_rnn), dtype),
+            }
+        elif seg.kind == BlockKind.MLSTM:
+            cache[f"seg{si}"] = {
+                "C": jnp.zeros((L, batch, cfg.num_heads, hd, hd), jnp.float32),
+                "n": jnp.zeros((L, batch, cfg.num_heads, hd), jnp.float32),
+                "m": jnp.full((L, batch, cfg.num_heads), -1e30, jnp.float32),
+            }
+        elif seg.kind == BlockKind.SLSTM:
+            d = cfg.d_model
+            z = jnp.zeros((L, batch, d), jnp.float32)
+            cache[f"seg{si}"] = {
+                "c": z, "n": z, "m": jnp.full((L, batch, d), -1e30,
+                                              jnp.float32), "h": z,
+            }
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+
+def _ring_valid_mask(w: int, pos: jax.Array, window: int) -> jax.Array:
+    """Validity of ring slots after writing position ``pos`` at pos % w.
+
+    Slot s holds position p(s) = largest p' <= pos with p' % w == s.
+    Valid iff p(s) >= 0 (written) and p(s) > pos - window.
+    """
+    slots = jnp.arange(w, dtype=jnp.int32)
+    slot_pos = pos - jnp.mod(pos - slots, w)
+    return (slot_pos >= 0) & (slot_pos > pos - window)
+
+
+def _attn_decode_block(lp: Params, cache: Dict[str, jax.Array], h: jax.Array,
+                       pos: jax.Array, cfg: ModelConfig, seg: SegmentSpec,
+                       a3: A3Config, use_kernel: bool
+                       ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    b = h.shape[0]
+    hd = cfg.resolved_head_dim
+    hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    q, k, v = attention_qkv(lp["attn"], hn, positions, cfg.num_heads,
+                            cfg.num_kv_heads, hd, cfg.rope_theta)
+    q = shard_act(q, "q")
+    w = cache["k"].shape[2]
+    slot = jnp.mod(pos, w)
+    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=2)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=2)
+    kc = shard_act(kc, "kv_cache")
+    vc = shard_act(vc, "kv_cache")
+    valid = _ring_valid_mask(w, pos, seg.window)               # [w]
+    valid = jnp.broadcast_to(valid[None], (b, w))
+    # A^3 approximate decode only on global-attention layers: windowed
+    # layers already bound the search (DESIGN.md SS5).
+    use_a3 = a3.mode != A3Mode.OFF and seg.window >= FULL_WINDOW
+    # NOTE: read-only leaves (sk_*, sorted_upto) are NOT returned — the
+    # caller keeps them out of the scan ys (passing them through forced
+    # a full copy of the sorted-key cache per layer iteration).
+    new_slice = {"k": kc, "v": vc}
+    if use_a3 and "sk_vals" in cache:
+        # comprehension-time sorted keys cached at prefill (paper SSIV-C);
+        # rows written since the last re-sort get exact treatment.
+        from repro.core.candidate_selection import SortedKeys
+        from repro.kernels.decode_attention.ops import \
+            a3_decode_attention_compact
+        slots = jnp.arange(w, dtype=jnp.int32)
+        slot_pos = pos - jnp.mod(pos - slots, w)
+        fresh = slot_pos[None, :] >= cache["sorted_upto"][:, None]  # [B, w]
+        sk = SortedKeys(values=shard_act(cache["sk_vals"], "kv_cache"),
+                        rows=shard_act(cache["sk_rows"], "kv_cache"))
+        o = a3_decode_attention_compact(
+            q[:, :, 0], kc, vc, valid, a3, sk, fresh_mask=fresh)
+    elif use_a3:
+        from repro.core.candidate_selection import sort_key_columns
+        # no cached sort available: build inline (single-shot use)
+        sorted_keys = jax.vmap(jax.vmap(sort_key_columns))(kc)
+        o = a3_decode_attention(q[:, :, 0], kc, vc, valid, a3,
+                                sorted_keys=sorted_keys,
+                                use_kernel=use_kernel)
+    else:
+        o = a3_decode_attention(q[:, :, 0], kc, vc, valid, A3Config(),
+                                use_kernel=use_kernel)
+    h = h + attention_out(lp["attn"], o[:, :, None, :])
+    return h, new_slice
+
+
+def _decode_block(lp: Params, cache_slice: Dict[str, jax.Array],
+                  h: jax.Array, pos: jax.Array, cfg: ModelConfig,
+                  seg: SegmentSpec, a3: A3Config, use_kernel: bool):
+    aux = jnp.zeros((), jnp.float32)
+    h = shard_act(h, "hidden")
+    if seg.kind == BlockKind.ATTENTION:
+        h, new_slice = _attn_decode_block(lp, cache_slice, h, pos, cfg, seg,
+                                          a3, use_kernel)
+    elif seg.kind == BlockKind.RGLRU:
+        hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+        o, h_new, conv_new = rglru_decode_step(
+            lp["rnn"], hn, cache_slice["h"], cache_slice["conv"])
+        h = h + o
+        new_slice = {"h": h_new, "conv": conv_new}
+    elif seg.kind == BlockKind.MLSTM:
+        hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+        st = (cache_slice["C"], cache_slice["n"], cache_slice["m"])
+        o, (C, n, m) = xl.mlstm_decode_step(lp["mlstm"], hn, st,
+                                            cfg.num_heads,
+                                            cfg.resolved_head_dim)
+        h = h + o
+        new_slice = {"C": C, "n": n, "m": m}
+    elif seg.kind == BlockKind.SLSTM:
+        hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+        st = (cache_slice["c"], cache_slice["n"], cache_slice["m"],
+              cache_slice["h"])
+        o, (c, n, m, hh) = xl.slstm_decode_step(lp["slstm"], hn, st,
+                                                cfg.num_heads)
+        h = h + o
+        new_slice = {"c": c, "n": n, "m": m, "h": hh}
+    if seg.ffn == "dense":
+        hn = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+        h = h + ffn_apply(lp["ffn"], hn, act=cfg.act)
+    elif seg.ffn == "moe":
+        hn = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+        o, moe_aux = moe_apply(lp["moe"], hn, _moe_cfg(cfg))
+        h = h + o
+        aux = moe_aux["moe_aux_loss"]
+    return h, new_slice, aux
+
+
+def decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    cache: Dict[str, Any],
+    token: Optional[jax.Array] = None,          # [B] int32
+    pos: jax.Array = None,                      # scalar int32 position
+    *,
+    input_embed: Optional[jax.Array] = None,    # [B, D]
+    a3: A3Config = A3Config(),
+    use_kernel: bool = False,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One autoregressive step -> (logits [B, Vp], new cache)."""
+    if input_embed is not None:
+        h = input_embed[:, None, :].astype(jnp.dtype(cfg.dtype))
+    else:
+        h = embed_tokens(params, cfg, token[:, None])
+    new_cache: Dict[str, Any] = {}
+    _RO = ("sk_vals", "sk_rows", "sorted_upto")
+    for si, seg in enumerate(build_segments(cfg)):
+        seg_cache = cache[f"seg{si}"]
+        ro = {k: v for k, v in seg_cache.items() if k in _RO}
+        mut = {k: v for k, v in seg_cache.items() if k not in _RO}
+
+        def body(carry, xs):
+            lp, cs, ro_s = xs
+            out, ns, aux = _decode_block(lp, {**cs, **ro_s}, carry, pos,
+                                         cfg, seg, a3, use_kernel)
+            return out, ns
+
+        h, new_seg = jax.lax.scan(body, h, (params[f"seg{si}"], mut, ro))
+        new_cache[f"seg{si}"] = {**new_seg, **ro}
+    logits = unembed(params, cfg, h)[:, 0]
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill: full-sequence forward that also fills the decode caches
+# ---------------------------------------------------------------------------
+
+def prefill(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: Optional[jax.Array] = None,
+    inputs_embeds: Optional[jax.Array] = None,
+    *,
+    max_len: Optional[int] = None,
+    attn_chunk: int = 1024,
+    a3: bool = False,
+    select_shards: int = 1,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Process a prompt, return (last-token logits [B, Vp], filled cache).
+    ``a3=True`` also builds the sorted-key matrices for global-attention
+    segments (comprehension-time preprocessing, paper SSIV-C).
+
+    Only the final position's logits are computed (serving needs just
+    the next-token distribution; a full [B, S, Vp] logits tensor at 32k
+    prompt x 262k vocab would be ~0.5 TB)."""
+    if inputs_embeds is not None:
+        h = inputs_embeds.astype(jnp.dtype(cfg.dtype))
+        b, s, _ = h.shape
+    else:
+        b, s = tokens.shape
+        h = embed_tokens(params, cfg, tokens)
+    max_len = max_len or s
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    hd = cfg.resolved_head_dim
+    cache: Dict[str, Any] = {}
+
+    for si, seg in enumerate(build_segments(cfg)):
+        if seg.kind == BlockKind.ATTENTION:
+            w = cache_len_for(seg, max_len)
+
+            def body(carry, lp, seg=seg, w=w):
+                hh = shard_act(carry, "hidden")
+                hn = rmsnorm(lp["ln1"], hh, cfg.norm_eps)
+                q, k, v = attention_qkv(lp["attn"], hn, positions,
+                                        cfg.num_heads, cfg.num_kv_heads, hd,
+                                        cfg.rope_theta)
+                q = shard_act(q, "q")
+                k = shard_act(k, "kv")
+                v = shard_act(v, "kv")
+                window = (None if seg.window >= FULL_WINDOW
+                          else jnp.int32(seg.window))
+                o = attention_xla_flash(q, k, v, causal=True, window=window,
+                                        chunk=attn_chunk)
+                hh = hh + attention_out(lp["attn"], o)
+                # ring-write the last min(s, w) positions
+                kc = jnp.zeros((k.shape[0], k.shape[1], w, hd), k.dtype)
+                vc = jnp.zeros_like(kc)
+                take = min(s, w)
+                # slots of positions s-take .. s-1
+                pos_tail = jnp.arange(s - take, s, dtype=jnp.int32)
+                slots = jnp.mod(pos_tail, w)
+                kc = kc.at[:, :, slots].set(k[:, :, s - take:])
+                vc = vc.at[:, :, slots].set(v[:, :, s - take:])
+                extra = {}
+                if a3 and seg.window >= FULL_WINDOW:
+                    from repro.core.candidate_selection import \
+                        sort_key_columns
+                    ns = select_shards if w % max(select_shards, 1) == 0 \
+                        else 1
+                    kb = kc.reshape(kc.shape[0], kc.shape[1], ns, w // ns,
+                                    hd)
+                    sk = jax.vmap(jax.vmap(jax.vmap(sort_key_columns)))(kb)
+                    extra = {
+                        "sk_vals": sk.values.reshape(kc.shape),
+                        "sk_rows": sk.rows.reshape(kc.shape),  # block-local
+                        "sorted_upto": jnp.full((kc.shape[0],), s,
+                                                jnp.int32),
+                    }
+                if seg.ffn == "dense":
+                    hn = rmsnorm(lp["ln2"], hh, cfg.norm_eps)
+                    hh = hh + ffn_apply(lp["ffn"], hn, act=cfg.act)
+                elif seg.ffn == "moe":
+                    hn = rmsnorm(lp["ln2"], hh, cfg.norm_eps)
+                    oo, _ = moe_apply(lp["moe"], hn, _moe_cfg(cfg))
+                    hh = hh + oo
+                return hh, {"k": kc, "v": vc, **extra}
+
+            h, seg_cache = jax.lax.scan(body, h, params[f"seg{si}"])
+            cache[f"seg{si}"] = seg_cache
+        else:
+            def body(carry, lp, seg=seg):
+                hh = shard_act(carry, "hidden")
+                hn = rmsnorm(lp["ln1"], hh, cfg.norm_eps)
+                if seg.kind == BlockKind.RGLRU:
+                    o, h_last, conv = rglru_apply_scan(lp["rnn"], hn)
+                    ns = {"h": h_last, "conv": conv}
+                elif seg.kind == BlockKind.MLSTM:
+                    # need final state: rerun chunkwise scan capturing state
+                    o, st = _mlstm_with_state(lp["mlstm"], hn, cfg)
+                    ns = {"C": st[0], "n": st[1], "m": st[2]}
+                else:
+                    o, st = xl.slstm_apply_scan(lp["slstm"], hn,
+                                                cfg.num_heads)
+                    ns = {"c": st[0], "n": st[1], "m": st[2], "h": st[3]}
+                hh = hh + o
+                if seg.ffn == "dense":
+                    hn = rmsnorm(lp["ln2"], hh, cfg.norm_eps)
+                    hh = hh + ffn_apply(lp["ffn"], hn, act=cfg.act)
+                return hh, ns
+
+            h, seg_cache = jax.lax.scan(body, h, params[f"seg{si}"])
+            cache[f"seg{si}"] = seg_cache
+
+    logits = unembed(params, cfg, h[:, -1:])[:, 0]
+    return logits, cache
+
+
+def _mlstm_with_state(p: Params, x: jax.Array, cfg: ModelConfig):
+    """mLSTM forward that also returns the end-of-sequence state by
+    replaying the per-step recurrence on top of the parallel output."""
+    out = xl.mlstm_parallel(p, x, cfg.num_heads, cfg.resolved_head_dim)
+    # state via chunked recurrence (cheap: states only, no outputs)
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    k = ((x @ p["wk"]).reshape(b, s, cfg.num_heads, hd)
+         .astype(jnp.float32)) / math.sqrt(hd)
+    v = (x @ p["wv"]).reshape(b, s, cfg.num_heads, hd).astype(jnp.float32)
+    log_i, log_f = xl._mlstm_gates(p, x)
+    F = jnp.cumsum(jnp.moveaxis(log_f, 2, 1), axis=-1)        # [B,H,S]
+    li = jnp.moveaxis(log_i, 2, 1)
+    Ftot = F[..., -1]
+    wr_log = Ftot[..., None] - F + li
+    m_new = jnp.maximum(jnp.max(wr_log, axis=-1), -1e30)
+    wr = jnp.exp(wr_log - m_new[..., None])                   # [B,H,S]
+    kh = jnp.moveaxis(k, 2, 1)
+    vh = jnp.moveaxis(v, 2, 1)
+    C = jnp.einsum("bhu,bhuk,bhuv->bhkv", wr, kh, vh)
+    n = jnp.einsum("bhu,bhuk->bhk", wr, kh)
+    return out, (C, n, m_new)

@@ -1,0 +1,54 @@
+"""Modality frontend STUBS (per assignment: ``[audio]``/``[vlm]`` entries
+specify the transformer backbone only; the frontend supplies precomputed
+frame/patch embeddings).
+
+* musicgen-medium: EnCodec tokenizer -> 4 parallel codebooks at 50 Hz.
+  Stub: the four codebook embeddings are summed into one frame embedding
+  (MusicGen's "delay" interleaving collapses to a single stream for the
+  backbone); ``audio_frame_embeds`` returns deterministic pseudo-frames.
+* internvl2-2b: InternViT-300M patch encoder. Stub: ``vision_patch_embeds``
+  returns pseudo patch embeddings already projected to the LM width; the
+  text tokens follow them (prefix-LM layout collapsed to causal decode).
+
+The dry-run's ``input_specs()`` only needs shapes; these helpers exist so
+smoke tests and examples can run real values end-to-end.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+def audio_frame_embeds(key, batch: int, frames: int, cfg: ModelConfig,
+                       num_codebooks: Optional[int] = None) -> jax.Array:
+    """Stub EnCodec frontend: [B, frames, d_model] summed codebook embeds."""
+    nc = num_codebooks or cfg.num_codebooks
+    ks = jax.random.split(key, nc)
+    out = jnp.zeros((batch, frames, cfg.d_model), jnp.float32)
+    for i in range(nc):
+        out = out + jax.random.normal(ks[i], (batch, frames, cfg.d_model))
+    return (out / jnp.sqrt(float(nc))).astype(jnp.dtype(cfg.dtype))
+
+
+def vision_patch_embeds(key, batch: int, patches: int,
+                        cfg: ModelConfig) -> jax.Array:
+    """Stub InternViT frontend: [B, patches, d_model] patch embeddings."""
+    x = jax.random.normal(key, (batch, patches, cfg.d_model))
+    return x.astype(jnp.dtype(cfg.dtype))
+
+
+def vlm_sequence(key, batch: int, seq_len: int, num_patches: int,
+                 cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """[vision patches; text embeddings] layout used by internvl2 examples.
+
+    Returns (inputs_embeds [B, S, D], text_tokens [B, S-num_patches]).
+    """
+    k1, k2 = jax.random.split(key)
+    vis = vision_patch_embeds(k1, batch, num_patches, cfg)
+    n_text = seq_len - num_patches
+    toks = jax.random.randint(k2, (batch, n_text), 0, cfg.vocab_size)
+    return vis, toks

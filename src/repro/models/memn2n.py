@@ -1,0 +1,159 @@
+"""End-to-End Memory Network (Sukhbaatar et al.) — the paper's primary
+workload (SSVI-A, bAbI QA).
+
+The attention inside each hop is *exactly* the paper's Figure-1 kernel:
+one query vector against an n x d key matrix and an n x d value matrix.
+``answer_with_a3`` routes that hop through ``repro.core.a3_attention`` so
+the accuracy experiments (Fig 11/12/13) exercise the real approximation
+pipeline, including candidate selection on the pre-sorted key matrix and
+post-scoring selection.
+
+Sentences are embedded as position-weighted bags of words (the paper's
+"PE" encoding); adjacent-weight tying (A^{k+1} = C^k) as in the original.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import A3Config, A3Mode
+from repro.core.a3_attention import A3State, a3_attention_single, preprocess
+from repro.core.post_scoring import masked_softmax
+from repro.models.common import Params, dense_init
+
+
+class MemN2NConfig(NamedTuple):
+    vocab_size: int
+    d_embed: int = 64
+    num_hops: int = 3
+    max_sentences: int = 50      # n
+    max_words: int = 12          # words per sentence
+
+
+def init_params(key, cfg: MemN2NConfig) -> Params:
+    ks = jax.random.split(key, cfg.num_hops + 4)
+    scale = 0.1
+    emb = lambda k: (jax.random.normal(
+        k, (cfg.vocab_size, cfg.d_embed)) * scale).astype(jnp.float32)
+    # adjacent tying: embeddings[0] = A^1, embeddings[i] = C^i = A^{i+1}
+    # temporal encoding T_A/T_C (Sukhbaatar SS4.1): memories are tagged by
+    # recency so "most recent supporting fact" is learnable.
+    tkey = jax.random.split(ks[cfg.num_hops + 3], cfg.num_hops + 1)
+    temporal = jnp.stack([
+        (jax.random.normal(tk, (cfg.max_sentences, cfg.d_embed)) * scale)
+        for tk in tkey])
+    return {
+        "embeddings": jnp.stack([emb(ks[i])
+                                 for i in range(cfg.num_hops + 1)]),
+        "temporal": temporal.astype(jnp.float32),
+        "query_embed": emb(ks[cfg.num_hops + 1]),
+        "w_final": dense_init(ks[cfg.num_hops + 2], cfg.d_embed,
+                              cfg.vocab_size, jnp.float32),
+    }
+
+
+def position_encoding(cfg: MemN2NConfig) -> jax.Array:
+    """bAbI position-encoding weights l_kj (Sukhbaatar eq. PE)."""
+    J, d = cfg.max_words, cfg.d_embed
+    j = jnp.arange(1, J + 1, dtype=jnp.float32)[:, None]
+    k = jnp.arange(1, d + 1, dtype=jnp.float32)[None, :]
+    return (1 - j / J) - (k / d) * (1 - 2 * j / J)            # [J, d]
+
+
+def embed_sentences(embed: jax.Array, sentences: jax.Array,
+                    cfg: MemN2NConfig,
+                    temporal: Optional[jax.Array] = None) -> jax.Array:
+    """sentences: [n, J] int32 (0 = pad) -> [n, d]."""
+    pe = position_encoding(cfg)
+    vecs = embed[sentences] * pe[None]                        # [n, J, d]
+    mask = (sentences > 0)[..., None].astype(jnp.float32)
+    out = jnp.sum(vecs * mask, axis=1)
+    if temporal is not None:
+        # recency index: most recent valid sentence -> T[0]
+        valid = jnp.any(sentences > 0, axis=-1)
+        count = jnp.sum(valid.astype(jnp.int32))
+        idx = jnp.clip(count - 1 - jnp.arange(sentences.shape[0]), 0,
+                       cfg.max_sentences - 1)
+        out = out + temporal[idx] * valid[:, None]
+    return out
+
+
+def answer(params: Params, sentences: jax.Array, question: jax.Array,
+           cfg: MemN2NConfig, sentence_mask: Optional[jax.Array] = None,
+           linear: bool = False) -> jax.Array:
+    """Exact (training) forward. sentences [n, J], question [J].
+    Returns answer logits [V].
+
+    ``linear=True`` is the original paper's "linear start" (LS): the
+    softmax is removed early in training so the retrieval circuit gets
+    first-order gradient, then training switches to softmax.
+    """
+    q = jnp.sum(params["query_embed"][question]
+                * (question > 0)[:, None].astype(jnp.float32), axis=0)
+    u = q
+    for hop in range(cfg.num_hops):
+        key_mat = embed_sentences(params["embeddings"][hop], sentences, cfg,
+                                  params["temporal"][hop])
+        val_mat = embed_sentences(params["embeddings"][hop + 1], sentences,
+                                  cfg, params["temporal"][hop + 1])
+        scores = key_mat @ u                                   # [n]
+        mask = sentence_mask if sentence_mask is not None else (
+            jnp.any(sentences > 0, axis=-1))
+        if linear:
+            w = jnp.where(mask, scores, 0.0)
+            w = w / jnp.maximum(jnp.sum(mask), 1.0)
+        else:
+            w = masked_softmax(scores, mask)
+        o = w @ val_mat
+        u = u + o
+    return u @ params["w_final"]
+
+
+def answer_with_a3(params: Params, sentences: jax.Array, question: jax.Array,
+                   cfg: MemN2NConfig, a3: A3Config) -> Tuple[jax.Array, Dict]:
+    """Inference forward with the A^3 pipeline in each hop."""
+    q = jnp.sum(params["query_embed"][question]
+                * (question > 0)[:, None].astype(jnp.float32), axis=0)
+    u = q
+    aux_all = {}
+    mask = jnp.any(sentences > 0, axis=-1)
+    for hop in range(cfg.num_hops):
+        key_mat = embed_sentences(params["embeddings"][hop], sentences, cfg,
+                                  params["temporal"][hop])
+        val_mat = embed_sentences(params["embeddings"][hop + 1], sentences,
+                                  cfg, params["temporal"][hop + 1])
+        # empty (padded) sentences get a strongly negative key so the
+        # greedy selection never picks them
+        key_mat = jnp.where(mask[:, None], key_mat, 0.0)
+        state = preprocess(key_mat, val_mat)
+        out, aux = a3_attention_single(state, u, a3)
+        u = u + out
+        aux_all[f"hop{hop}"] = aux
+    return u @ params["w_final"], aux_all
+
+
+def loss_fn(params: Params, batch: Dict[str, jax.Array],
+            cfg: MemN2NConfig, linear: bool = False) -> jax.Array:
+    """batch: sentences [B, n, J], question [B, J], answer [B]."""
+    logits = jax.vmap(lambda s, q: answer(params, s, q, cfg,
+                                          linear=linear))(
+        batch["sentences"], batch["question"])
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["answer"][:, None], 1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def accuracy(params: Params, batch: Dict[str, jax.Array], cfg: MemN2NConfig,
+             a3: Optional[A3Config] = None) -> jax.Array:
+    if a3 is None or a3.mode == A3Mode.OFF:
+        logits = jax.vmap(lambda s, q: answer(params, s, q, cfg))(
+            batch["sentences"], batch["question"])
+    else:
+        logits = jax.vmap(
+            lambda s, q: answer_with_a3(params, s, q, cfg, a3)[0])(
+            batch["sentences"], batch["question"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["answer"])
+                    .astype(jnp.float32))

@@ -1,0 +1,130 @@
+"""Mixture-of-Experts FFN (DeepSeekMoE / Grok style) in pure JAX.
+
+Design goals:
+  * FLOP-faithful: only ``top_k (+ shared)`` experts' MACs appear in the
+    HLO (capacity-based gather dispatch — no dense all-expert einsum), so
+    ``cost_analysis`` reports true active FLOPs for the roofline.
+  * EP-shardable: expert weight stacks carry a leading ``experts`` axis
+    that the sharding rules place on the ``model`` mesh axis when
+    divisible; dispatch/combine are gathers XLA turns into all-to-alls
+    under pjit.
+  * Fine-grained experts (DeepSeekMoE): ``num_shared`` always-on experts
+    fused into one dense SwiGLU of width ``num_shared * d_expert``.
+
+Routing: softmax router, top-k, capacity factor with token dropping
+(dropped tokens pass through the residual only), auxiliary load-balance
+loss (Switch-style), optional router jitter at train time.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import MoEConfig
+from repro.models.common import Params, dense_init, ffn_apply, ffn_init
+
+
+def moe_init(key, d_model: int, moe: MoEConfig, dtype) -> Params:
+    d_e = moe.d_expert or 0
+    assert d_e > 0, "MoEConfig.d_expert must be set"
+    keys = jax.random.split(key, 5)
+    params: Params = {
+        "router": dense_init(keys[0], d_model, moe.num_experts, jnp.float32,
+                             scale=1.0 / math.sqrt(d_model)),
+        # stacked routed experts: [E, ...]
+        "w_gate": _stack_init(keys[1], moe.num_experts, d_model, d_e, dtype),
+        "w_up": _stack_init(keys[2], moe.num_experts, d_model, d_e, dtype),
+        "w_down": _stack_init(keys[3], moe.num_experts, d_e, d_model, dtype,
+                              scale=1.0 / math.sqrt(d_e)),
+    }
+    if moe.num_shared > 0:
+        params["shared"] = ffn_init(keys[4], d_model, moe.num_shared * d_e,
+                                    dtype, act="swiglu")
+    return params
+
+
+def _stack_init(key, e: int, d_in: int, d_out: int, dtype,
+                scale: Optional[float] = None):
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (e, d_in, d_out), dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+def moe_apply(
+    params: Params,
+    x: jax.Array,                   # [B, S, D]
+    moe: MoEConfig,
+    *,
+    capacity_factor: float = 1.25,
+    rng: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    b, s, d = x.shape
+    t = b * s
+    e, k = moe.num_experts, moe.top_k
+    xt = x.reshape(t, d)
+
+    # ---- routing ----
+    logits = (xt.astype(jnp.float32) @ params["router"])       # [T, E]
+    if moe.router_jitter > 0 and rng is not None:
+        logits += moe.router_jitter * jax.random.normal(rng, logits.shape)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                      # [T, k]
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    # ---- capacity + sort-based dispatch ----
+    cap = int(math.ceil(t * k / e * capacity_factor))
+    cap = max(cap, 4)
+    cap = ((cap + 63) // 64) * 64          # shardable over the DP axes
+    flat_e = top_e.reshape(-1)                                  # [T*k]
+    # stable sort by expert; rank within expert = position - expert start
+    sort_idx = jnp.argsort(flat_e, stable=True)                 # [T*k]
+    sorted_e = flat_e[sort_idx]
+    counts = jnp.bincount(flat_e, length=e)                     # [E]
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(t * k) - starts[sorted_e]                 # [T*k]
+    keep = rank < cap
+    token_of = sort_idx // k                                    # [T*k]
+    slot = sorted_e * cap + rank                                # [T*k]
+    slot = jnp.where(keep, slot, e * cap)                       # overflow bin
+
+    # gather tokens into [E*cap(+1), D]
+    buf = jnp.zeros((e * cap + 1, d), dtype=x.dtype)
+    buf = buf.at[slot].set(xt[token_of])
+    expert_in = buf[: e * cap].reshape(e, cap, d)
+
+    # ---- expert FFN (batched over the expert axis) ----
+    g = jax.nn.silu(jnp.einsum(
+        "ecd,edf->ecf", expert_in, params["w_gate"]).astype(jnp.float32))
+    u = jnp.einsum("ecd,edf->ecf", expert_in, params["w_up"]).astype(jnp.float32)
+    h = (g * u).astype(x.dtype)
+    expert_out = jnp.einsum("ecf,efd->ecd", h, params["w_down"])  # [E,cap,D]
+
+    # ---- combine ----
+    flat_out = jnp.concatenate(
+        [expert_out.reshape(e * cap, d),
+         jnp.zeros((1, d), dtype=x.dtype)], axis=0)              # +overflow
+    gathered = flat_out[slot]                                    # [T*k, D]
+    w = top_p.reshape(-1)[sort_idx]                              # [T*k]
+    w = jnp.where(keep, w, 0.0)
+    combined = jnp.zeros((t, d), dtype=jnp.float32)
+    combined = combined.at[token_of].add(
+        gathered.astype(jnp.float32) * w[:, None])
+    out = combined.astype(x.dtype)
+
+    # ---- shared experts (always on) ----
+    if "shared" in params:
+        out = out + ffn_apply(params["shared"], xt, act="swiglu")
+
+    # ---- aux: Switch load-balance loss ----
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_e, e, dtype=jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=0)
+    aux_loss = e * jnp.sum(frac_tokens * frac_probs) * moe.load_balance_coef
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return out.reshape(b, s, d), {"moe_aux_loss": aux_loss,
+                                  "moe_drop_fraction": dropped}

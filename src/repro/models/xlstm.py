@@ -1,0 +1,279 @@
+"""xLSTM blocks (mLSTM + sLSTM) in pure JAX.
+
+mLSTM (matrix memory): per head a d_k x d_v matrix memory C with
+exponential input/forget gates in log space (stabilizer m):
+
+    f_t = exp-gate, i_t = exp-gate
+    m_t = max(log f_t + m_{t-1}, log i_t)
+    C_t = f'_t C_{t-1} + i'_t (k_t v_t^T),  f' = exp(log f + m_{t-1} - m_t)
+    n_t = f'_t n_{t-1} + i'_t k_t
+    h_t = C_t^T q_t / max(|n_t . q_t|, 1)
+
+Parallel (training/prefill) form: the same recurrence expressed as masked
+attention with log-gate cumulative sums (the "parallel mLSTM" of the
+paper, eq. 26-28) — O(S^2) like attention but with gate decay instead of
+softmax. There is no softmax score vector over n keys, hence A^3 is
+inapplicable (DESIGN.md SS5).
+
+sLSTM (scalar memory): per-channel recurrence with exponential gating and
+a stabilizer; block-diagonal recurrent weights (num_heads blocks). This
+one is inherently sequential -> lax.scan over time.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, dense_init
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, d_model: int, num_heads: int, head_dim: int, dtype) -> Params:
+    ks = jax.random.split(key, 7)
+    dh = num_heads * head_dim
+    return {
+        "wq": dense_init(ks[0], d_model, dh, dtype),
+        "wk": dense_init(ks[1], d_model, dh, dtype),
+        "wv": dense_init(ks[2], d_model, dh, dtype),
+        # scalar gates per head, computed from x
+        "w_i": dense_init(ks[3], d_model, num_heads, jnp.float32),
+        "w_f": dense_init(ks[4], d_model, num_heads, jnp.float32),
+        "b_i": jnp.zeros((num_heads,), jnp.float32),
+        # forget bias init positive => long memory at init
+        "b_f": jnp.full((num_heads,), 3.0, jnp.float32),
+        "w_o": dense_init(ks[5], d_model, dh, dtype),     # output gate
+        "w_out": dense_init(ks[6], dh, d_model, dtype,
+                            scale=1.0 / math.sqrt(dh)),
+        "ln_scale": jnp.ones((num_heads, head_dim), jnp.float32),
+    }
+
+
+def _mlstm_gates(params: Params, x: jax.Array):
+    """log input gate and log-sigmoid forget gate, [B, S, H] f32."""
+    xf = x.astype(jnp.float32)
+    log_i = xf @ params["w_i"] + params["b_i"]                # pre-act; i=exp()
+    f_pre = xf @ params["w_f"] + params["b_f"]
+    log_f = jax.nn.log_sigmoid(f_pre)                         # <= 0
+    return log_i, log_f
+
+
+def _headwise_ln(h: jax.Array, scale: jax.Array, eps: float = 1e-6):
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.var(h, axis=-1, keepdims=True)
+    return (h - mu) * jax.lax.rsqrt(var + eps) * scale
+
+
+def mlstm_parallel(params: Params, x: jax.Array, num_heads: int,
+                   head_dim: int, chunk: int = 256,
+                   state=None) -> jax.Array:
+    """Chunkwise-parallel mLSTM forward. x: [B, S, D].
+
+    Intra-chunk: quadratic gate-decay attention over a [chunk, chunk] tile.
+    Inter-chunk: the (C, n, m) matrix-memory state is carried by a scan —
+    the TPU-friendly linear-cost formulation (memory O(S * chunk), not
+    O(S^2)), which is also what makes the 500k-token shape runnable.
+    """
+    b, s, _ = x.shape
+    dh = num_heads * head_dim
+    L = min(chunk, s)
+    n_chunks = (s + L - 1) // L
+    pad = n_chunks * L - s
+
+    q = (x @ params["wq"]).reshape(b, s, num_heads, head_dim)
+    k = (x @ params["wk"]).reshape(b, s, num_heads, head_dim)
+    v = (x @ params["wv"]).reshape(b, s, num_heads, head_dim)
+    log_i, log_f = _mlstm_gates(params, x)                    # [B, S, H]
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # padded steps: i-gate = -inf (no write), f-gate = 0 (keep state)
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+
+    sp = n_chunks * L
+    # streams stay in the model dtype (bf16 in production): the f32 cast
+    # happens per chunk tile inside the scan — halves the HBM bytes of
+    # the scanned q/k/v arrays (SSPerf H1)
+    q = jnp.moveaxis(q, 2, 1)                                 # [B,H,Sp,Dh]
+    k = jnp.moveaxis(k, 2, 1)
+    v = jnp.moveaxis(v, 2, 1)
+    log_i = jnp.moveaxis(log_i, 2, 1)                         # [B,H,Sp]
+    log_f = jnp.moveaxis(log_f, 2, 1)
+
+    def split(t, feat):                                       # -> [C,B,H,L,...]
+        t = t.reshape(b, num_heads, n_chunks, L, *feat)
+        return jnp.moveaxis(t, 2, 0)
+
+    qc, kc, vc = (split(t, (head_dim,)) for t in (q, k, v))
+    lic, lfc = split(log_i, ()), split(log_f, ())
+
+    if state is None:
+        state = mlstm_init_state(b, num_heads, head_dim)
+
+    idx = jnp.arange(L)
+    causal = idx[:, None] >= idx[None, :]                     # [L, L]
+
+    def step(carry, xs):
+        C, n, m = carry                                       # [B,H,Dk,Dv], [B,H,Dk], [B,H]
+        qb, kb, vb, li, lf = xs                               # [B,H,L,*]
+        qb = qb.astype(jnp.float32)
+        kb = kb.astype(jnp.float32) / math.sqrt(head_dim)
+        vb = vb.astype(jnp.float32)
+        F = jnp.cumsum(lf, axis=-1)                           # [B,H,L]
+        Ftot = F[..., -1]
+        # intra-chunk decay D[t,u] = F[t] - F[u] + li[u], u <= t
+        D = F[..., :, None] - F[..., None, :] + li[..., None, :]
+        D = jnp.where(causal, D, -1e30)
+        intra_max = jnp.max(D, axis=-1)                       # [B,H,L]
+        inter_log = F + m[..., None]                          # decay of carried state
+        m_row = jnp.maximum(intra_max, inter_log)             # [B,H,L]
+        w = jnp.exp(D - m_row[..., None])                     # [B,H,L,L]
+        scores = jnp.einsum("bhtd,bhud->bhtu", qb, kb) * w
+        inter_w = jnp.exp(inter_log - m_row)                  # [B,H,L]
+        num = (jnp.einsum("bhtu,bhud->bhtd", scores, vb)
+               + inter_w[..., None]
+               * jnp.einsum("bhkv,bhtk->bhtv", C, qb))
+        den = (jnp.sum(scores, axis=-1)
+               + inter_w * jnp.einsum("bhk,bhtk->bht", n, qb))
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_row))
+        h = num / den[..., None]                              # [B,H,L,Dv]
+        # ---- state update to end of chunk ----
+        wr_log = Ftot[..., None] - F + li                     # [B,H,L]
+        m_new = jnp.maximum(Ftot + m, jnp.max(wr_log, axis=-1))
+        f_eff = jnp.exp(Ftot + m - m_new)
+        wr = jnp.exp(wr_log - m_new[..., None])               # [B,H,L]
+        C_new = (f_eff[..., None, None] * C
+                 + jnp.einsum("bhu,bhuk,bhuv->bhkv", wr, kb, vb))
+        n_new = f_eff[..., None] * n + jnp.einsum("bhu,bhuk->bhk", wr, kb)
+        return (C_new, n_new, m_new), h
+
+    state, hs = jax.lax.scan(step, state, (qc, kc, vc, lic, lfc))
+    hs = jnp.moveaxis(hs, 0, 2).reshape(b, num_heads, sp, head_dim)
+    hs = hs[:, :, :s]
+    h = _headwise_ln(hs, params["ln_scale"][None, :, None, :])
+    o = jax.nn.sigmoid((x @ params["w_o"]).astype(jnp.float32))
+    h = jnp.moveaxis(h, 1, 2).reshape(b, s, dh) * o
+    return h.astype(x.dtype) @ params["w_out"]
+
+
+def mlstm_init_state(batch: int, num_heads: int, head_dim: int):
+    C = jnp.zeros((batch, num_heads, head_dim, head_dim), jnp.float32)
+    n = jnp.zeros((batch, num_heads, head_dim), jnp.float32)
+    m = jnp.full((batch, num_heads), -1e30, jnp.float32)
+    return (C, n, m)
+
+
+def mlstm_decode_step(params: Params, x: jax.Array, state,
+                      num_heads: int, head_dim: int):
+    """One-token recurrent step. x: [B, 1, D]. Returns (out, new_state)."""
+    b = x.shape[0]
+    C, n, m = state
+    q = (x @ params["wq"]).reshape(b, num_heads, head_dim).astype(jnp.float32)
+    k = (x @ params["wk"]).reshape(b, num_heads, head_dim).astype(jnp.float32)
+    k = k / math.sqrt(head_dim)
+    v = (x @ params["wv"]).reshape(b, num_heads, head_dim).astype(jnp.float32)
+    log_i, log_f = _mlstm_gates(params, x)                    # [B, 1, H]
+    log_i, log_f = log_i[:, 0], log_f[:, 0]                   # [B, H]
+
+    m_new = jnp.maximum(log_f + m, log_i)
+    f_eff = jnp.exp(log_f + m - m_new)                        # [B, H]
+    i_eff = jnp.exp(log_i - m_new)
+    C_new = f_eff[..., None, None] * C + i_eff[..., None, None] * (
+        k[..., :, None] * v[..., None, :])                    # [B,H,Dk,Dv]
+    n_new = f_eff[..., None] * n + i_eff[..., None] * k
+    num = jnp.einsum("bhkv,bhk->bhv", C_new, q)
+    qn = jnp.einsum("bhk,bhk->bh", n_new, q)
+    denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+    h = num / denom[..., None]                                # [B, H, Dv]
+    h = _headwise_ln(h, params["ln_scale"][None])
+    o = jax.nn.sigmoid((x @ params["w_o"]).astype(jnp.float32))[:, 0]
+    h = (h.reshape(b, num_heads * head_dim) * o)
+    out = h.astype(x.dtype) @ params["w_out"]
+    return out[:, None, :], (C_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, d_model: int, num_heads: int, dtype) -> Params:
+    """Block-diagonal recurrent sLSTM; hidden dim == d_model."""
+    assert d_model % num_heads == 0
+    dh = d_model // num_heads
+    ks = jax.random.split(key, 3)
+    wx = dense_init(ks[0], d_model, 4 * d_model, jnp.float32)
+    # recurrent block-diagonal: [H, dh, 4*dh]
+    wr = (jax.random.normal(ks[1], (num_heads, dh, 4 * dh)) /
+          math.sqrt(dh)).astype(jnp.float32)
+    bias = jnp.zeros((4 * d_model,), jnp.float32)
+    # forget-gate bias chunk positive
+    bias = bias.at[2 * d_model:3 * d_model].set(3.0)
+    return {"wx": wx, "wr": wr, "b": bias,
+            "w_out": dense_init(ks[2], d_model, d_model, dtype),
+            "ln_scale": jnp.ones((d_model,), jnp.float32)}
+
+
+def slstm_init_state(batch: int, d_model: int):
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return (z, z, jnp.full((batch, d_model), -1e30), z)  # c, n, m, h
+
+
+def _slstm_cell(params: Params, xg: jax.Array, state, num_heads: int):
+    """xg: [B, 4D] precomputed input contribution."""
+    c, n, m, h = state
+    b, d4 = xg.shape
+    d = d4 // 4
+    dh = d // num_heads
+    hb = h.reshape(b, num_heads, dh)
+    rec = jnp.einsum("bhd,hdf->bhf", hb, params["wr"]).reshape(b, 4 * d)
+    z, i_pre, f_pre, o_pre = jnp.split(xg + rec + params["b"], 4, axis=-1)
+    log_i = i_pre
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_eff = jnp.exp(log_i - m_new)
+    f_eff = jnp.exp(log_f + m - m_new)
+    c_new = f_eff * c + i_eff * jnp.tanh(z)
+    n_new = f_eff * n + i_eff
+    h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new)
+
+
+def slstm_apply_scan(params: Params, x: jax.Array, num_heads: int,
+                     state=None) -> Tuple[jax.Array, tuple]:
+    """x: [B, S, D] -> ([B, S, D], final_state). Sequential lax.scan."""
+    b, s, d = x.shape
+    xg = (x.astype(jnp.float32) @ params["wx"])               # [B, S, 4D]
+    if state is None:
+        state = slstm_init_state(b, d)
+
+    def step(carry, xt):
+        new = _slstm_cell(params, xt, carry, num_heads)
+        return new, new[3]
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(xg, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1)                               # [B, S, D]
+    mu = jnp.mean(hs, -1, keepdims=True)
+    var = jnp.var(hs, -1, keepdims=True)
+    hs = (hs - mu) * jax.lax.rsqrt(var + 1e-6) * params["ln_scale"]
+    return hs.astype(x.dtype) @ params["w_out"], state
+
+
+def slstm_decode_step(params: Params, x: jax.Array, state, num_heads: int):
+    """x: [B, 1, D]."""
+    xg = (x[:, 0].astype(jnp.float32) @ params["wx"])
+    new = _slstm_cell(params, xg, state, num_heads)
+    h = new[3]
+    mu = jnp.mean(h, -1, keepdims=True)
+    var = jnp.var(h, -1, keepdims=True)
+    h = (h - mu) * jax.lax.rsqrt(var + 1e-6) * params["ln_scale"]
+    out = (h.astype(x.dtype) @ params["w_out"])[:, None]
+    return out, new

@@ -1,0 +1,10 @@
+from repro.optim.adamw import (
+    OptState,
+    adamw_init,
+    adamw_update,
+    cosine_schedule,
+    global_norm,
+)
+
+__all__ = ["OptState", "adamw_init", "adamw_update", "cosine_schedule",
+           "global_norm"]

@@ -1,0 +1,207 @@
+"""Serving engine: batched prefill + decode with slot-based continuous
+batching, and the A^3 approximate decode path.
+
+The engine holds a fixed number of request *slots*. New requests prefill
+into a free slot (per-slot prefill keeps the batched decode loop hot);
+every ``decode`` call advances all active slots by one token. Slots whose
+request finished free up immediately — the decode batch never drains.
+
+A^3 state at serve time: the paper's "comprehension-time" preprocessing
+maps to prefill — the prompt's keys are column-sorted once per slot and
+reused across all decode steps (amortization argument of SSIV-C). Tokens
+generated after prefill form the *fresh tail*, always treated as
+candidates (exact attention) until a periodic re-sort folds them in.
+
+``make_serve_step`` builds the jitted decode step used by both the
+engine and the multi-pod dry-run (serve_step is what ``decode_*`` shapes
+lower).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import A3Config, A3Mode, ModelConfig
+from repro.models import decoder
+
+
+def make_serve_step(
+    cfg: ModelConfig,
+    a3: A3Config = A3Config(),
+    *,
+    use_kernel: bool = False,
+) -> Callable:
+    """Returns step(params, cache, token [B], pos scalar) ->
+    (logits [B, Vp], new_cache)."""
+
+    def step(params, cache, token, pos):
+        return decoder.decode_step(params, cfg, cache, token, pos, a3=a3,
+                                   use_kernel=use_kernel)
+
+    return step
+
+
+class Request(NamedTuple):
+    uid: int
+    prompt: np.ndarray            # [S] int32
+    max_new_tokens: int
+
+
+@dataclasses.dataclass
+class SlotState:
+    uid: int = -1
+    pos: int = 0                  # next position to write
+    generated: List[int] = dataclasses.field(default_factory=list)
+    budget: int = 0
+    active: bool = False
+
+
+class ServeEngine:
+    """Slot-based batched serving. Single-host reference implementation —
+    the sharded path reuses make_serve_step under a mesh (launch.serve)."""
+
+    def __init__(self, params: Any, cfg: ModelConfig, *, slots: int = 4,
+                 max_len: int = 2048, a3: A3Config = A3Config(),
+                 greedy: bool = True, resort_every: int = 64):
+        self.params, self.cfg, self.a3 = params, cfg, a3
+        self.max_len = max_len
+        self._use_a3 = a3.mode != A3Mode.OFF
+        self.resort_every = resort_every
+        self.slots = [SlotState() for _ in range(slots)]
+        self.cache = decoder.init_cache(cfg, slots, max_len,
+                                        a3=self._use_a3)
+        self._decode = jax.jit(make_serve_step(cfg, a3))
+        self._queue: List[Request] = []
+        self._done: Dict[int, List[int]] = {}
+        self._uid = 0
+        self.greedy = greedy
+        self.stats = {"prefill_tokens": 0, "decode_steps": 0, "resorts": 0}
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
+        uid = self._uid
+        self._uid += 1
+        self._queue.append(Request(uid, np.asarray(prompt, np.int32),
+                                   max_new_tokens))
+        return uid
+
+    def result(self, uid: int) -> Optional[List[int]]:
+        return self._done.get(uid)
+
+    def step(self):
+        """One engine tick: admit queued requests, advance decode."""
+        self._admit()
+        if self._use_a3:
+            self._maybe_resort()
+        self._advance()
+
+    def _maybe_resort(self):
+        """Re-sort a slot's key columns when the exact-tail (tokens
+        written since the last sort) grows past ``resort_every`` — the
+        serving-time analogue of the paper's comprehension-time
+        preprocessing, amortized over ``resort_every`` decode steps."""
+        for si, slot in enumerate(self.slots):
+            if not slot.active:
+                continue
+            for seg_name, seg_cache in self.cache.items():
+                if "sk_vals" not in seg_cache:
+                    continue
+                upto = int(jax.device_get(seg_cache["sorted_upto"][0, si]))
+                if slot.pos - upto < self.resort_every:
+                    continue
+                from repro.core.candidate_selection import sort_key_columns
+                k_slot = seg_cache["k"][:, si]          # [L, Hkv, W, D]
+                sk = jax.vmap(jax.vmap(sort_key_columns))(k_slot)
+                self.cache[seg_name]["sk_vals"] = \
+                    seg_cache["sk_vals"].at[:, si].set(sk.values)
+                self.cache[seg_name]["sk_rows"] = \
+                    seg_cache["sk_rows"].at[:, si].set(sk.rows)
+                self.cache[seg_name]["sorted_upto"] = \
+                    seg_cache["sorted_upto"].at[:, si].set(slot.pos)
+                self.stats["resorts"] += 1
+
+    def run_to_completion(self, max_ticks: int = 10_000):
+        ticks = 0
+        while (self._queue or any(s.active for s in self.slots)) \
+                and ticks < max_ticks:
+            self.step()
+            ticks += 1
+
+    # -- internals ------------------------------------------------------------
+    def _admit(self):
+        for si, slot in enumerate(self.slots):
+            if slot.active or not self._queue:
+                continue
+            req = self._queue.pop(0)
+            s = len(req.prompt)
+            toks = jnp.asarray(req.prompt)[None]
+            # per-slot prefill: fill this slot's cache rows (comprehension
+            # time: includes the A^3 column sort when approximating)
+            logits, pcache = decoder.prefill(self.params, self.cfg, toks,
+                                             max_len=self.max_len,
+                                             a3=self._use_a3)
+            self._write_slot_cache(si, pcache)
+            nxt = int(jnp.argmax(logits[0]))
+            self.slots[si] = SlotState(uid=req.uid, pos=s,
+                                       generated=[nxt],
+                                       budget=req.max_new_tokens - 1,
+                                       active=True)
+            self.stats["prefill_tokens"] += s
+            if self.slots[si].budget <= 0:
+                self._finish(si)
+
+    def _write_slot_cache(self, si: int, pcache: Dict[str, Any]):
+        def write(dst, src):
+            return dst.at[:, si:si + 1].set(src)
+        self.cache = jax.tree.map(write, self.cache, pcache)
+
+    def _advance(self):
+        active = [s for s in self.slots if s.active]
+        if not active:
+            return
+        # batched decode over all slots (inactive slots decode garbage,
+        # ignored). all slots share one pos per call -> use max; per-slot
+        # positions differ, so decode per unique pos group.
+        groups: Dict[int, List[int]] = {}
+        for si, s in enumerate(self.slots):
+            if s.active:
+                groups.setdefault(s.pos, []).append(si)
+        for pos, sis in groups.items():
+            tokens = np.zeros((len(self.slots),), np.int32)
+            for si in sis:
+                tokens[si] = self.slots[si].generated[-1]
+            logits, new_cache = self._decode(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.int32(pos))
+            self.stats["decode_steps"] += 1
+            # merge: only slots in this group take the new cache
+            sel = np.zeros((len(self.slots),), bool)
+            for si in sis:
+                sel[si] = True
+            selj = jnp.asarray(sel)
+
+            def merge(new, old):
+                b_axis = 1  # caches are [L, B, ...]
+                shape = [1] * new.ndim
+                shape[b_axis] = len(self.slots)
+                m = selj.reshape(shape)
+                return jnp.where(m, new, old)
+
+            self.cache = jax.tree.map(merge, new_cache, self.cache)
+            nxt = np.asarray(jnp.argmax(logits, -1))
+            for si in sis:
+                slot = self.slots[si]
+                slot.generated.append(int(nxt[si]))
+                slot.pos += 1
+                slot.budget -= 1
+                if slot.budget <= 0 or slot.pos >= self.max_len - 1:
+                    self._finish(si)
+
+    def _finish(self, si: int):
+        slot = self.slots[si]
+        self._done[slot.uid] = slot.generated
+        self.slots[si] = SlotState()

@@ -1,0 +1,74 @@
+"""GPipe-style pipeline-parallel microbatch schedule over a ``pipe`` mesh
+axis, expressed with ``shard_map`` + ``ppermute``.
+
+Not used by the default production mesh (the assigned meshes are
+(data, model) and (pod, data, model); attention-approximation work gains
+little from PP), but provided as a first-class substrate feature: stages
+hold disjoint layer slices, microbatches stream through with
+``collective_permute`` between neighbours, and the bubble fraction is
+(P-1)/(M+P-1) as usual.
+
+The stage function must be shape-preserving ([mb, S, D] -> [mb, S, D]).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def pipeline_forward(
+    stage_fn: Callable[[Any, jax.Array], jax.Array],
+    stage_params: Any,          # pytree with leading [P_stages] axis
+    x: jax.Array,               # [M_microbatches, mb, S, D]
+    mesh: Mesh,
+    axis: str = "pipe",
+) -> jax.Array:
+    """Runs M microbatches through P stages; returns final outputs in
+    microbatch order [M, mb, S, D]."""
+    n_stages = mesh.shape[axis]
+
+    def stage_local(params, xs):            # runs per-device
+        params = jax.tree.map(lambda t: t[0], params)   # drop stage axis
+        m = xs.shape[0]
+        stage_id = jax.lax.axis_index(axis)
+        n_ticks = m + n_stages - 1
+        buf = jnp.zeros_like(xs[0])
+        outs = jnp.zeros_like(xs)
+
+        def tick(carry, t):
+            buf, outs = carry
+            # stage 0 ingests microbatch t (if t < m); others use buf
+            mb_idx = jnp.clip(t, 0, m - 1)
+            inp = jnp.where(stage_id == 0, xs[mb_idx], buf)
+            active = (t - stage_id >= 0) & (t - stage_id < m)
+            y = stage_fn(params, inp)
+            y = jnp.where(active, y, buf)
+            # pass to next stage
+            perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            nxt = jax.lax.ppermute(y, axis, perm)
+            # last stage writes its finished microbatch
+            out_idx = jnp.clip(t - (n_stages - 1), 0, m - 1)
+            write = (stage_id == n_stages - 1) & active
+            outs = jnp.where(
+                write,
+                outs.at[out_idx].set(y),
+                outs)
+            return (nxt, outs), None
+
+        (_, outs), _ = jax.lax.scan(tick, (buf, outs),
+                                    jnp.arange(n_ticks))
+        # only the last stage's outs are real; broadcast via masked psum
+        outs = jax.lax.psum(
+            jnp.where(stage_id == n_stages - 1, outs, 0.0), axis)
+        return outs
+
+    fn = shard_map(stage_local, mesh=mesh,
+                   in_specs=(P(axis), P()),
+                   out_specs=P(),
+                   check_rep=False)
+    return fn(stage_params, x)

@@ -1,0 +1,274 @@
+"""Logical-axis sharding rules: param pytree -> PartitionSpecs.
+
+Parallelism mapping (DESIGN.md SS4):
+  * ``data`` mesh axis  — DP over the batch + FSDP (ZeRO-3) over one
+    weight dim; SP (sequence sharding) when the batch is too small.
+  * ``model`` mesh axis — TP over heads / FFN width; EP over MoE experts
+    when the expert count divides the axis.
+  * ``pod`` mesh axis   — outer pure-DP axis (gradients cross the DCI
+    once per step; optionally int8-compressed).
+
+Rules are *intent-based*: each weight leaf gets logical axes
+("fsdp" | "tp" | "ep" | None) per dimension from a name table, the
+intents are lowered to mesh axes, and any assignment whose mesh-axis size
+does not divide the dim is dropped (e.g. 8 grok experts on a 16-way model
+axis fall back to TP-within-expert). This keeps every (arch x mesh) cell
+well-defined without per-arch special cases.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig, ShapeKind, ShardingConfig
+
+# leaf name -> logical intent for the trailing (non-layer-stack) dims
+_MATRIX_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    # attention / generic projections [D_in, D_out]
+    "wq": ("fsdp", "tp"), "wk": ("fsdp", "tp"), "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    # FFN
+    "w_gate": ("fsdp", "tp"), "w_up": ("fsdp", "tp"),
+    "w_down": ("tp", "fsdp"),
+    # recurrent blocks
+    "w_in_gate": ("fsdp", "tp"), "w_in_rnn": ("fsdp", "tp"),
+    "w_a": ("fsdp", "tp"), "w_x": ("fsdp", "tp"),
+    "w_out": ("tp", "fsdp"), "wx": ("fsdp", "tp"),
+    "w_o": ("fsdp", "tp"),
+    # small per-channel tensors
+    "conv_w": (None, "tp"), "conv_b": ("tp",), "lam": ("tp",),
+    "w_i": ("fsdp", None), "w_f": ("fsdp", None),
+    "b_i": (None,), "b_f": (None,), "b": ("tp",),
+    "router": ("fsdp", None),
+    "scale": (None,), "ln_scale": None,   # None -> replicate all dims
+}
+
+# MoE expert stacks [E, D_in, D_out]: EP on the expert dim when it
+# divides the model axis, otherwise TP inside each expert.
+_MOE_RULES: Dict[str, Tuple[Tuple[Optional[str], ...],
+                            Tuple[Optional[str], ...]]] = {
+    "w_gate": (("ep", "fsdp", None), (None, "fsdp", "tp")),
+    "w_up": (("ep", "fsdp", None), (None, "fsdp", "tp")),
+    "w_down": (("ep", None, "fsdp"), (None, "tp", "fsdp")),
+}
+
+
+def logical_to_mesh_axes(cfg: ShardingConfig) -> Dict[str, Optional[str]]:
+    return {
+        "fsdp": cfg.fsdp_axis if cfg.fsdp else None,
+        "tp": cfg.tp_axis if cfg.tensor_parallel else None,
+        "ep": cfg.ep_axis if cfg.expert_parallel else None,
+    }
+
+
+def _sanitize(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+              mesh_shape: Dict[str, int]) -> P:
+    """Drop assignments whose mesh-axis size doesn't divide the dim."""
+    out = []
+    for dim, ax in zip(shape, axes):
+        if ax is None or ax not in mesh_shape or dim % mesh_shape[ax] != 0:
+            out.append(None)
+        else:
+            out.append(ax)
+    return P(*out)
+
+
+def _leaf_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
+               logical: Dict[str, Optional[str]],
+               mesh_shape: Dict[str, int]) -> P:
+    name = path[-1]
+    parent = path[-2] if len(path) >= 2 else ""
+    stacked = path[0].startswith("seg")          # leading layers axis
+
+    if name == "embed":       # [Vp, D]: vocab TP, width FSDP
+        return _sanitize(tuple(logical.get(a) for a in ("tp", "fsdp")),
+                         shape, mesh_shape)
+    if name == "lm_head":
+        return _sanitize(tuple(logical.get(a) for a in ("fsdp", "tp")),
+                         shape, mesh_shape)
+
+    if parent == "moe" and name in _MOE_RULES and len(shape) - stacked == 3:
+        primary, fallback = _MOE_RULES[name]
+        e_dim = shape[1] if stacked else shape[0]
+        ep_ax = logical.get("ep")
+        use = primary if (ep_ax and e_dim % mesh_shape.get(ep_ax, 1) == 0) \
+            else fallback
+        axes = tuple(logical.get(a) if a else None for a in use)
+        if stacked:
+            axes = (None,) + axes
+        return _sanitize(axes, shape, mesh_shape)
+
+    intent = _MATRIX_RULES.get(name)
+    if intent is None:
+        return P()                                # replicate unknown leaves
+    axes = tuple(logical.get(a) if a else None for a in intent)
+    if stacked:
+        axes = (None,) + axes
+    if len(axes) != len(shape):                   # rank mismatch -> replicate
+        if len(axes) < len(shape):
+            axes = axes + (None,) * (len(shape) - len(axes))
+        else:
+            axes = axes[: len(shape)]
+    return _sanitize(axes, shape, mesh_shape)
+
+
+def param_specs(params_shape: Any, sharding_cfg: ShardingConfig,
+                mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching ``params_shape`` (shapes or arrays)."""
+    logical = logical_to_mesh_axes(sharding_cfg)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def spec(path, leaf):
+        names = tuple(
+            p.key if hasattr(p, "key") else str(p) for p in path)
+        return _leaf_spec(names, tuple(leaf.shape), logical, mesh_shape)
+
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+def shardings_for(tree_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# activation / input shardings
+# ---------------------------------------------------------------------------
+
+def _dp_axes(mesh_shape: Dict[str, int],
+             cfg: Optional[ShardingConfig] = None) -> Tuple[str, ...]:
+    names = cfg.dp_axes if cfg is not None else ("pod", "data", "ep")
+    return tuple(a for a in names if a in mesh_shape)
+
+
+def batch_spec(shape: ShapeConfig, mesh: Mesh,
+               sharding_cfg: Optional[ShardingConfig] = None) -> P:
+    """Sharding for [B, S] token inputs.
+
+    Batch shards over (pod, data) when divisible; a batch too small for
+    the data axis (long-context decode, B=1) switches to sequence
+    parallelism: S shards over (data, model).
+    """
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_axes = _dp_axes(mesh_shape, sharding_cfg)
+    dp = int(np.prod([mesh_shape[a] for a in dp_axes])) if dp_axes else 1
+    if shape.global_batch % dp == 0 and shape.global_batch >= dp:
+        return P(dp_axes if len(dp_axes) > 1 else dp_axes[0], None)
+    # SP fallback: sequence over (data, model)
+    sp_axes = tuple(a for a in ("data", "model") if a in mesh_shape)
+    sp = int(np.prod([mesh_shape[a] for a in sp_axes]))
+    if shape.seq_len % sp == 0:
+        return P(None, sp_axes)
+    return P(None, None)
+
+
+def act_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+              sharding_cfg: Optional[ShardingConfig] = None) -> Dict[str, Any]:
+    """NamedShardings for the model's activation constraint points.
+
+    hidden [B, S, D]: batch over (pod, data); if the batch is too small
+      (long-context decode) the sequence shards over (data, model).
+    q/k/v [B, H, S, Dh]: heads over model when divisible, otherwise the
+      q sequence shards over model (attention sequence parallelism) and
+      k/v stay head-replicated — each device computes its seq slice
+      against the full (windowed) KV.
+    """
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_axes = _dp_axes(mesh_shape, sharding_cfg)
+    dp = int(np.prod([mesh_shape[a] for a in dp_axes])) if dp_axes else 1
+    tp_name = sharding_cfg.tp_axis if sharding_cfg else "model"
+    model = mesh_shape.get(tp_name, 1)
+    dp_spec = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes
+                                                else None)
+    b, s = shape.global_batch, shape.seq_len
+    batch_ok = b % dp == 0 and b >= dp
+    is_decode = shape.kind == ShapeKind.DECODE
+
+    def ns(*axes):
+        return NamedSharding(mesh, P(*axes))
+
+    specs: Dict[str, Any] = {}
+    seq_len_here = 1 if is_decode else s
+    if batch_ok:
+        specs["hidden"] = ns(dp_spec, None, None)
+        hq, hkv = cfg.num_heads, cfg.num_kv_heads
+        q_heads = tp_name if hq % model == 0 else None
+        kv_heads = tp_name if hkv % model == 0 else None
+        q_seq = None
+        if q_heads is None and not is_decode and s % model == 0:
+            q_seq = tp_name
+        specs["q"] = ns(dp_spec, q_heads, q_seq, None)
+        specs["kv"] = ns(dp_spec, kv_heads, None, None)
+    elif not is_decode:
+        fsdp_name = sharding_cfg.fsdp_axis if sharding_cfg else "data"
+        sp_axes = tuple(a for a in (fsdp_name, tp_name) if a in mesh_shape)
+        sp = int(np.prod([mesh_shape[a] for a in sp_axes]))
+        if s % sp == 0:
+            specs["hidden"] = ns(None, sp_axes, None)
+            specs["q"] = ns(None, None, sp_axes, None)
+            specs["kv"] = ns(None, None, sp_axes, None)
+    else:
+        # decode with tiny batch: replicate hidden; shard cache scan via
+        # cache_specs (ring over (data, model)).
+        specs["hidden"] = ns(None, None, None)
+    # decode-path constraints: per-layer cache slice [B, Hkv, W, Dh] and
+    # q [B, Hq, 1, Dh] — keeps the A^3 selection batch-sharded (GSPMD
+    # replicated it otherwise) and the ring on the model axis.
+    if is_decode and batch_ok:
+        ring = tp_name if s % model == 0 else None
+        specs["kv_cache"] = ns(dp_spec, None, ring, None)
+        specs["q"] = ns(dp_spec,
+                        tp_name if cfg.num_heads % model == 0 else None,
+                        None, None)
+        # A^3 sharded-selection stages: batch over dp, block axis (NS)
+        # over the model axis; everything inside a block is chip-local.
+        specs["a3_blocks"] = ns(dp_spec, None, ring, None, None)
+        specs["a3_prefix"] = ns(dp_spec, None, ring, None, None, None)
+        specs["a3_greedy"] = ns(dp_spec, None, ring, None, None)
+        specs["a3_scores"] = ns(dp_spec, None, ring, None)
+    return specs
+
+
+def cache_specs(cache_shape: Any, shape: ShapeConfig, mesh: Mesh,
+                sharding_cfg: Optional[ShardingConfig] = None) -> Any:
+    """Sharding for decode caches.
+
+    Attention K/V rings [L, B, Hkv, W, Dh]: batch over (pod, data) when
+    divisible, ring length over model (TP of the KV search — each chip
+    scans its slice of the cache, the flash-style combine is a psum).
+    For B=1 long-context, ring shards over (data, model).
+    Recurrent states [L, B, ...]: batch over (pod, data) when divisible.
+    """
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_axes = _dp_axes(mesh_shape, sharding_cfg)
+    dp = int(np.prod([mesh_shape[a] for a in dp_axes])) if dp_axes else 1
+    tp_name = sharding_cfg.tp_axis if sharding_cfg else "model"
+    model = mesh_shape.get(tp_name, 1)
+    dp_spec = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes
+                                                else None)
+
+    def spec(leaf):
+        shp = tuple(leaf.shape)
+        batch_ok = len(shp) >= 2 and shp[1] % dp == 0 and shp[1] >= dp
+        if len(shp) == 5:                       # attention K/V ring
+            w = shp[3]
+            if batch_ok:
+                ring = tp_name if w % model == 0 else None
+                return P(None, dp_spec, None, ring, None)
+            fsdp_name = sharding_cfg.fsdp_axis if sharding_cfg else "data"
+            axes = tuple(a for a in (fsdp_name, tp_name)
+                         if a in mesh_shape)
+            sp = int(np.prod([mesh_shape[a] for a in axes]))
+            if w % sp == 0:
+                return P(None, None, None, axes, None)
+            return P(None, None, None, None, None)
+        # recurrent state [L, B, ...]
+        axes = [None] * len(shp)
+        if batch_ok:
+            axes[1] = dp_spec
+        return P(*axes)
+
+    return jax.tree.map(spec, cache_shape)

@@ -1,0 +1,8 @@
+from repro.train.step import TrainState, init_train_state, make_train_step
+from repro.train.checkpoint import CheckpointManager
+from repro.train.loop import train_loop
+from repro.train.fault import Watchdog, run_with_restarts
+
+__all__ = ["TrainState", "init_train_state", "make_train_step",
+           "CheckpointManager", "train_loop", "Watchdog",
+           "run_with_restarts"]

@@ -1,0 +1,151 @@
+"""Checkpoint manager: step-granular, async, elastic.
+
+Format: one directory per step containing
+  manifest.json   — leaf paths, shapes, dtypes, aux metadata
+  <leaf>.npy      — full (unsharded) arrays
+
+Saving device_gets the addressable shards and writes the *logical* array,
+so a checkpoint taken on a (data=16, model=16) mesh restores onto any
+other mesh ("elastic resharding"): ``restore`` device_puts each leaf with
+the sharding derived from the rules for the *new* mesh. Writes go to a
+temp dir + atomic rename; an interrupted save can never corrupt the
+latest-complete pointer.
+
+Async mode hands the (already host-transferred) arrays to a writer
+thread so the train loop continues; ``wait()`` joins before exit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.config import CheckpointConfig
+
+_SEP = "::"
+
+
+def _flatten(tree: Any) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = _SEP.join(
+            p.key if hasattr(p, "key") else
+            (p.name if hasattr(p, "name") else str(p.idx))
+            for p in path)
+        out.append((name, leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, cfg: CheckpointConfig):
+        self.cfg = cfg
+        os.makedirs(cfg.directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- paths ------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.cfg.directory, f"step_{step:09d}")
+
+    def all_steps(self) -> List[int]:
+        steps = []
+        for d in os.listdir(self.cfg.directory):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    steps.append(int(d.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # -- save -------------------------------------------------------------
+    def save(self, step: int, state: Any, extra: Optional[Dict] = None,
+             blocking: Optional[bool] = None):
+        blocking = (not self.cfg.async_save) if blocking is None else blocking
+        # host transfer happens NOW (consistent snapshot), write may be async
+        host = [(name, np.asarray(jax.device_get(leaf)))
+                for name, leaf in _flatten(state)]
+
+        def write():
+            tmp = self._step_dir(step) + ".tmp"
+            os.makedirs(tmp, exist_ok=True)
+            manifest = {"step": step, "extra": extra or {}, "leaves": []}
+            for i, (name, arr) in enumerate(host):
+                fn = f"leaf_{i:05d}.npy"
+                to_save = arr
+                if arr.dtype.kind not in "biufc":   # bf16/f8 (ml_dtypes)
+                    to_save = arr.view(f"u{arr.dtype.itemsize}")
+                np.save(os.path.join(tmp, fn), to_save)
+                manifest["leaves"].append(
+                    {"name": name, "file": fn, "shape": list(arr.shape),
+                     "dtype": str(arr.dtype)})
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            final = self._step_dir(step)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self.wait()
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.cfg.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+    def restore(self, target: Any, step: Optional[int] = None,
+                shardings: Optional[Any] = None) -> Tuple[Any, Dict]:
+        """Restore into the structure of ``target`` (a pytree of arrays or
+        ShapeDtypeStructs). ``shardings`` (same structure) enables elastic
+        resharding onto any mesh."""
+        self.wait()
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.cfg.directory}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        by_name = {l["name"]: l for l in manifest["leaves"]}
+
+        names = [n for n, _ in _flatten(target)]
+        leaves_t, treedef = jax.tree_util.tree_flatten(target)
+        shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                        if shardings is not None else [None] * len(leaves_t))
+        out = []
+        for name, tgt, shd in zip(names, leaves_t, shard_leaves):
+            meta = by_name.get(name)
+            if meta is None:
+                raise KeyError(f"checkpoint missing leaf {name!r}")
+            arr = np.load(os.path.join(d, meta["file"]))
+            true_dtype = jax.numpy.dtype(meta["dtype"])
+            if arr.dtype != true_dtype:
+                arr = arr.view(true_dtype)      # bf16/f8 saved as uint view
+            if tuple(arr.shape) != tuple(tgt.shape):
+                raise ValueError(
+                    f"shape mismatch for {name}: ckpt {arr.shape} vs "
+                    f"target {tgt.shape}")
+            if shd is not None:
+                out.append(jax.device_put(arr, shd))
+            else:
+                out.append(jax.device_put(arr.astype(tgt.dtype)))
+        return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]

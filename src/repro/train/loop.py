@@ -1,0 +1,98 @@
+"""Training loop: data pipeline + train step + checkpointing + watchdog,
+wired for restart-from-checkpoint fault tolerance.
+
+``train_loop`` is the single-invocation loop; ``train_with_recovery``
+wraps it in the restart supervisor so an injected failure (tests) or a
+real crash resumes from the latest checkpoint with the data pipeline
+seeked to the right step.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.config import RunConfig
+from repro.data.synthetic import SyntheticLM, make_lm_batch
+from repro.models.decoder import padded_vocab
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault import Watchdog, run_with_restarts
+from repro.train.step import TrainState, init_train_state, make_train_step
+
+
+def train_loop(
+    run: RunConfig,
+    *,
+    mesh=None,
+    num_steps: Optional[int] = None,
+    state: Optional[TrainState] = None,
+    start_step: int = 0,
+    ckpt: Optional[CheckpointManager] = None,
+    hooks: Optional[List[Callable[[int, Dict], None]]] = None,
+    fail_at_step: Optional[int] = None,       # test hook: inject a crash
+) -> Dict[str, Any]:
+    cfg = run.model
+    num_steps = num_steps or run.optimizer.total_steps
+    step_fn = make_train_step(run, mesh)
+    if state is None:
+        state = init_train_state(jax.random.PRNGKey(run.seed), run)
+    if ckpt is None:
+        ckpt = CheckpointManager(run.checkpoint)
+    watchdog = Watchdog(run.fault.step_timeout_s)
+
+    pipeline = SyntheticLM(run.shape.global_batch, run.shape.seq_len,
+                           cfg.vocab_size, seed=run.seed,
+                           start_step=start_step)
+    losses: List[float] = []
+    try:
+        for step in range(start_step, num_steps):
+            batch = next(pipeline)
+            if fail_at_step is not None and step == fail_at_step:
+                raise RuntimeError(f"injected failure at step {step}")
+
+            def do_step(state=state, batch=batch):
+                new_state, metrics = step_fn(state, batch)
+                # block on the loss: a hung collective manifests here
+                return new_state, jax.device_get(metrics["loss"]), metrics
+
+            state, loss, metrics = watchdog.run(do_step)
+            losses.append(float(loss))
+            if hooks:
+                m = {k: v for k, v in metrics.items()}
+                for h in hooks:
+                    h(step, m)
+            if (step + 1) % run.checkpoint.save_every == 0:
+                ckpt.save(step + 1, state, extra={"data": pipeline.state})
+    finally:
+        pipeline.close()
+        ckpt.wait()
+    return {"state": state, "losses": losses, "final_step": num_steps}
+
+
+def train_with_recovery(run: RunConfig, *, mesh=None,
+                        num_steps: Optional[int] = None,
+                        fail_at_step: Optional[int] = None,
+                        ) -> Dict[str, Any]:
+    """Restart supervisor around train_loop. Restores the latest
+    checkpoint (params+opt+data cursor) on each restart."""
+    ckpt = CheckpointManager(run.checkpoint)
+    restarts: List[int] = []
+
+    def body(attempt: int):
+        start, state = 0, None
+        latest = ckpt.latest_step()
+        if latest is not None:
+            target = jax.eval_shape(
+                lambda: init_train_state(jax.random.PRNGKey(run.seed), run))
+            state, extra = ckpt.restore(target)
+            start = latest
+        # only inject the failure on the first attempt
+        fail = fail_at_step if attempt == 0 else None
+        return train_loop(run, mesh=mesh, num_steps=num_steps, state=state,
+                          start_step=start, ckpt=ckpt, fail_at_step=fail)
+
+    out = run_with_restarts(body, run.fault.max_restarts,
+                            on_restart=lambda a, e: restarts.append(a))
+    out["restarts"] = restarts
+    return out

@@ -1,0 +1,170 @@
+"""Train step builder: loss -> grads -> AdamW, with microbatch gradient
+accumulation, per-layer remat, and optional int8-compressed cross-pod
+gradient reduction.
+
+Compute/communication overlap note (DESIGN.md SS4): because the layer
+stack is a ``lax.scan`` and grads are produced per scanned layer, XLA's
+SPMD partitioner emits one reduce-scatter/all-reduce per layer-stack leaf
+*inside* the backward scan — the collective for layer i overlaps the
+backward compute of layer i-1. We do not hand-schedule this; the HLO is
+checked in the dry-run (EXPERIMENTS.md SSDry-run).
+
+When ``grad_compression`` is on and the mesh has a ``pod`` axis, the
+whole step runs in a partial-auto ``shard_map``: manual over ``pod``
+(per-pod grads -> int8 psum with error feedback), automatic GSPMD over
+``data``/``model``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, RunConfig
+from repro.models import decoder
+from repro.optim.adamw import OptState, adamw_init, adamw_update
+from repro.sharding.compression import psum_compressed
+from repro.sharding.rules import param_specs, shardings_for
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    err: Optional[Any] = None          # error-feedback state (compression)
+
+
+def init_train_state(key, run: RunConfig) -> TrainState:
+    params = decoder.init_params(key, run.model)
+    opt = adamw_init(params, run.optimizer)
+    err = None
+    if run.sharding.grad_compression:
+        err = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return TrainState(params, opt, err)
+
+
+def init_train_state_shape(run: RunConfig) -> TrainState:
+    """ShapeDtypeStruct version for the dry-run."""
+    return jax.eval_shape(lambda k: init_train_state(k, run),
+                          jax.random.PRNGKey(0))
+
+
+def _loss_fn(params, cfg: ModelConfig, batch, remat: str, attn_chunk: int,
+             ce_chunk: int = 512):
+    total, aux = decoder.lm_loss(params, cfg, batch.get("tokens"),
+                                 batch["labels"],
+                                 inputs_embeds=batch.get("embeds"),
+                                 remat=remat, attn_chunk=attn_chunk,
+                                 ce_chunk=ce_chunk)
+    return total, aux
+
+
+def _grads_one(params, cfg, batch, remat, attn_chunk, ce_chunk=512):
+    (loss, aux), grads = jax.value_and_grad(
+        _loss_fn, has_aux=True)(params, cfg, batch, remat, attn_chunk,
+                                ce_chunk)
+    return loss, aux, grads
+
+
+def _grads_accumulated(params, cfg, batch, remat, attn_chunk, n_micro):
+    """Gradient accumulation via lax.scan over microbatches."""
+    def split(x):
+        b = x.shape[0]
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def body(acc, mb):
+        loss_a, grads_a = acc
+        loss, aux, grads = _grads_one(params, cfg, mb, remat, attn_chunk)
+        grads_a = jax.tree.map(lambda a, g: a + g.astype(jnp.float32) / n_micro,
+                               grads_a, grads)
+        return (loss_a + loss / n_micro, grads_a), None
+
+    (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zeros), micro)
+    return loss, {}, grads
+
+
+def make_train_step(
+    run: RunConfig,
+    mesh: Optional[Mesh] = None,
+    *,
+    attn_chunk: int = 1024,
+    donate: bool = True,
+) -> Callable[[TrainState, Dict[str, jax.Array]],
+              Tuple[TrainState, Dict[str, jax.Array]]]:
+    """Build the jitted train step. With a mesh, params/opt-state get
+    rule-based shardings; without, plain jit (single device)."""
+    cfg = run.model
+    remat = run.sharding.remat
+    attn_chunk = run.sharding.attn_chunk
+    ce_chunk = run.sharding.ce_chunk
+    n_micro = run.sharding.microbatches
+    compress = run.sharding.grad_compression and mesh is not None and \
+        "pod" in getattr(mesh, "axis_names", ())
+
+    from repro.models.common import activation_shardings
+    from repro.sharding.rules import act_specs
+    a_specs = act_specs(cfg, run.shape, mesh, run.sharding) if mesh is not None else {}
+
+    def step_inner(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        if n_micro > 1:
+            loss, aux, grads = _grads_accumulated(
+                state.params, cfg, batch, remat, attn_chunk, n_micro)
+        else:
+            loss, aux, grads = _grads_one(state.params, cfg, batch, remat,
+                                          attn_chunk, ce_chunk)
+        err = state.err
+        if compress:
+            grads, err = psum_compressed(grads, "pod", err)
+            loss = jax.lax.pmean(loss, "pod")
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state.opt, state.params, run.optimizer)
+        metrics = {"loss": loss, **opt_metrics}
+        return TrainState(new_params, new_opt, err), metrics
+
+    def step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        with activation_shardings(a_specs):
+            return step_inner(state, batch)
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+    state_shape = init_train_state_shape(run)
+    pspecs = param_specs(state_shape.params, run.sharding, mesh)
+    p_shard = shardings_for(pspecs, mesh)
+    opt_shard = OptState(
+        step=NamedSharding(mesh, P()),
+        m=p_shard, v=p_shard)
+    err_shard = p_shard if state_shape.err is not None else None
+    state_shard = TrainState(p_shard, opt_shard, err_shard)
+
+    from repro.sharding.rules import batch_spec
+    bs = batch_spec(run.shape, mesh, run.sharding)
+    bspec = NamedSharding(mesh, bs)
+    if cfg.frontend:
+        espec = NamedSharding(mesh, P(*bs, None))
+        batch_shard = {"embeds": espec, "labels": bspec}
+    else:
+        batch_shard = {"tokens": bspec, "labels": bspec}
+    metric_shard = None   # let the compiler pick (scalars)
+
+    step_fn = step
+    if compress:
+        from jax.experimental.shard_map import shard_map
+        # manual over pod, auto over data/model: per-pod grads + int8 psum
+        auto = frozenset(a for a in mesh.axis_names if a != "pod")
+        step_fn = shard_map(step, mesh=mesh,
+                            in_specs=(P(), P("pod")),   # batch split by pod
+                            out_specs=(P(), P()), check_rep=False,
+                            auto=auto)
+
+    return jax.jit(
+        step_fn,
+        in_shardings=(state_shard, batch_shard),
+        out_shardings=(state_shard, metric_shard),
+        donate_argnums=(0,) if donate else (),
+    )

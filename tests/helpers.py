@@ -1,0 +1,30 @@
+"""Test helpers: run a snippet in a subprocess with N host devices.
+
+Multi-device tests (sharding rules, compression, pipeline, dry-run)
+need ``--xla_force_host_platform_device_count``, which must be set
+before jax initializes — so they run in a fresh interpreter. The parent
+test process keeps its single device.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "src")
+
+
+def run_with_devices(code: str, devices: int = 8, timeout: int = 600
+                     ) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def check(proc: subprocess.CompletedProcess):
+    assert proc.returncode == 0, (
+        f"subprocess failed\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}")
+    return proc.stdout

@@ -1,0 +1,163 @@
+"""A³ attention pipeline semantics (paper Fig. 10 end-to-end)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import A3Config, A3Mode
+from repro.core.a3_attention import (
+    a3_attention_batch,
+    a3_attention_single,
+    a3_self_attention,
+    candidate_block_map,
+    flop_savings,
+    preprocess,
+)
+
+
+def _memory(rng, n=320, d=64, dv=64, planted=True, q_count=1):
+    key = rng.standard_normal((n, d)).astype(np.float32)
+    value = rng.standard_normal((n, dv)).astype(np.float32)
+    queries = rng.standard_normal((q_count, d)).astype(np.float32)
+    if planted:
+        for i in range(q_count):
+            t = rng.integers(0, n)
+            key[t] = queries[i] * 0.8 + 0.2 * rng.standard_normal(d)
+    return key, value, queries
+
+
+def _exact_attention(key, value, q):
+    s = key @ q
+    w = np.exp(s - s.max())
+    w = w / w.sum()
+    return w @ value
+
+
+def test_off_mode_is_exact():
+    rng = np.random.default_rng(0)
+    key, value, queries = _memory(rng)
+    st = preprocess(jnp.asarray(key), jnp.asarray(value))
+    out, aux = a3_attention_single(st, jnp.asarray(queries[0]), A3Config())
+    ref = _exact_attention(key, value, queries[0])
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-5)
+    assert bool(jnp.all(aux["kept"]))
+
+
+@pytest.mark.parametrize("cfg,tol", [
+    (A3Config.conservative(), 0.05),
+    (A3Config.aggressive(), 0.35),
+])
+def test_approximation_quality(cfg, tol):
+    """Approximate output stays close to exact for retrieval-style data.
+    Conservative must be much tighter than aggressive (paper Fig. 13)."""
+    rng = np.random.default_rng(1)
+    errs = []
+    for _ in range(10):
+        key, value, queries = _memory(rng)
+        st = preprocess(jnp.asarray(key), jnp.asarray(value))
+        out, _ = a3_attention_single(st, jnp.asarray(queries[0]), cfg)
+        ref = _exact_attention(key, value, queries[0])
+        errs.append(np.linalg.norm(np.asarray(out) - ref) / np.linalg.norm(ref))
+    assert np.mean(errs) < tol, (cfg.mode, np.mean(errs))
+
+
+def test_aggressive_selects_fewer():
+    rng = np.random.default_rng(2)
+    key, value, queries = _memory(rng)
+    st = preprocess(jnp.asarray(key), jnp.asarray(value))
+    _, aux_c = a3_attention_single(st, jnp.asarray(queries[0]), A3Config.conservative())
+    _, aux_a = a3_attention_single(st, jnp.asarray(queries[0]), A3Config.aggressive())
+    assert int(aux_a["candidates"].sum()) <= int(aux_c["candidates"].sum())
+    assert int(aux_a["kept"].sum()) <= int(aux_c["kept"].sum())
+    assert int(aux_c["kept"].sum()) <= int(aux_c["candidates"].sum())
+
+
+def test_post_scoring_threshold_semantics():
+    """Kept rows have post-softmax weight >= T% of the max weight (by
+    construction of t = -ln(T/100)); dropped candidate rows fall below it."""
+    rng = np.random.default_rng(3)
+    key, value, queries = _memory(rng)
+    cfg = A3Config(mode=A3Mode.CUSTOM, m_fraction=1.0, threshold_pct=5.0)
+    st = preprocess(jnp.asarray(key), jnp.asarray(value))
+    _, aux = a3_attention_single(st, jnp.asarray(queries[0]), cfg)
+    s = np.asarray(aux["scores"], dtype=np.float64)
+    cand = np.asarray(aux["candidates"])
+    kept = np.asarray(aux["kept"])
+    smax = s[cand].max()
+    rel_weight = np.exp(s - smax)
+    assert np.all(rel_weight[kept] >= 0.05 - 1e-6)
+    dropped = cand & ~kept
+    if dropped.any():
+        assert np.all(rel_weight[dropped] < 0.05 + 1e-6)
+
+
+def test_quantized_pipeline_small_error():
+    """§VI-B: f=4 costs <0.1% accuracy; here we check output closeness."""
+    rng = np.random.default_rng(4)
+    key, value, queries = _memory(rng)
+    key = np.clip(key, -3, 3)
+    cfg = A3Config(mode=A3Mode.OFF, int_bits=4, frac_bits=4, lut_exponent=True)
+    st = preprocess(jnp.asarray(key), jnp.asarray(value))
+    out, _ = a3_attention_single(st, jnp.asarray(queries[0]), cfg)
+    ref = _exact_attention(key, value, queries[0])
+    rel = np.linalg.norm(np.asarray(out) - ref) / np.linalg.norm(ref)
+    assert rel < 0.15, rel
+
+
+def test_batch_pipelining_matches_single():
+    rng = np.random.default_rng(5)
+    key, value, queries = _memory(rng, q_count=4)
+    cfg = A3Config.conservative()
+    st = preprocess(jnp.asarray(key), jnp.asarray(value))
+    outs, _ = a3_attention_batch(st, jnp.asarray(queries), cfg)
+    for i in range(4):
+        o1, _ = a3_attention_single(st, jnp.asarray(queries[i]), cfg)
+        np.testing.assert_allclose(np.asarray(outs[i]), np.asarray(o1),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_self_attention_causal_off_matches_dense():
+    rng = np.random.default_rng(6)
+    q = rng.standard_normal((32, 16)).astype(np.float32)
+    k = rng.standard_normal((32, 16)).astype(np.float32)
+    v = rng.standard_normal((32, 8)).astype(np.float32)
+    out, _ = a3_self_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                               A3Config(), causal=True)
+    # dense reference
+    s = (q / np.sqrt(16)) @ k.T
+    mask = np.tril(np.ones((32, 32), dtype=bool))
+    s = np.where(mask, s, -np.inf)
+    w = np.exp(s - s.max(-1, keepdims=True))
+    w /= w.sum(-1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(out), w @ v, rtol=1e-4, atol=1e-5)
+
+
+def test_self_attention_approx_respects_causal():
+    rng = np.random.default_rng(7)
+    q = rng.standard_normal((64, 16)).astype(np.float32)
+    k = rng.standard_normal((64, 16)).astype(np.float32)
+    v = rng.standard_normal((64, 8)).astype(np.float32)
+    _, aux = a3_self_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                               A3Config.conservative(), causal=True)
+    kept = np.asarray(aux["kept"])
+    future = np.triu(np.ones((64, 64), dtype=bool), k=1)
+    assert not np.any(kept & future)
+
+
+def test_candidate_block_map():
+    mask = jnp.zeros((256, 256), dtype=bool).at[5, 200].set(True)
+    bm = candidate_block_map(mask, 128, 128)
+    assert bm.shape == (2, 2)
+    assert bool(bm[0, 1]) and not bool(bm[1, 0])
+
+
+def test_flop_savings_accounting():
+    rng = np.random.default_rng(8)
+    key, value, queries = _memory(rng)
+    st = preprocess(jnp.asarray(key), jnp.asarray(value))
+    _, aux = a3_attention_single(st, jnp.asarray(queries[0]), A3Config.aggressive())
+    stats = flop_savings(
+        {k: v[None] for k, v in aux.items() if k in ("candidates", "kept")},
+        n=320, d=64)
+    assert float(stats["score_flop_fraction"]) < 0.9
+    assert float(stats["output_flop_fraction"]) <= float(stats["score_flop_fraction"]) + 1e-6

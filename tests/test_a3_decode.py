@@ -1,0 +1,112 @@
+"""A^3 decode integration: cached sorted keys (prefill comprehension),
+compact sharded selection, fresh-tail exactness, and logits fidelity
+against exact decode."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import A3Config, ModelConfig
+from repro.models import decoder as dec
+
+CFG = ModelConfig("tiny", "dense", num_layers=2, d_model=64, num_heads=4,
+                  num_kv_heads=2, d_ff=128, vocab_size=300, head_dim=16,
+                  dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = dec.init_params(jax.random.PRNGKey(0), CFG)
+    B, S = 2, 63
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0, 300)
+    logits, _ = dec.forward(params, CFG, toks)
+    return params, toks, logits, B, S
+
+
+def _cos(a, b):
+    return float(jnp.mean(jnp.sum(a * b, -1) /
+                          (jnp.linalg.norm(a, axis=-1)
+                           * jnp.linalg.norm(b, axis=-1))))
+
+
+@pytest.mark.parametrize("ns", [1, 4])
+@pytest.mark.parametrize("mode", ["conservative", "aggressive"])
+def test_compact_decode_close_to_exact(setup, ns, mode):
+    params, toks, logits, B, S = setup
+    base = (A3Config.conservative() if mode == "conservative"
+            else A3Config.aggressive())
+    a3 = dataclasses.replace(base, select_shards=ns)
+    lp, cache = dec.prefill(params, CFG, toks[:, :S], max_len=64,
+                            a3=True, select_shards=ns)
+    ld, _ = dec.decode_step(params, CFG, cache, toks[:, S], jnp.int32(S),
+                            a3=a3)
+    ref = logits[:, S, :300]
+    assert _cos(ld[:, :300], ref) > 0.98
+    # greedy next token agrees
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(ld[:, :300], -1)),
+                                  np.asarray(jnp.argmax(ref, -1)))
+
+
+def test_a3_cache_exact_path_unchanged(setup):
+    """With a3 cache present but mode OFF, decode is bit-identical to the
+    plain exact path (read-only leaves never perturb the computation)."""
+    params, toks, logits, B, S = setup
+    _, cache_a3 = dec.prefill(params, CFG, toks[:, :S], max_len=64, a3=True)
+    _, cache = dec.prefill(params, CFG, toks[:, :S], max_len=64)
+    l1, _ = dec.decode_step(params, CFG, cache_a3, toks[:, S], jnp.int32(S))
+    l2, _ = dec.decode_step(params, CFG, cache, toks[:, S], jnp.int32(S))
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_fresh_tail_rows_always_candidates(setup):
+    """Tokens decoded after the prefill sort must be attended exactly:
+    decode several steps without re-sorting and compare with exact."""
+    params, toks, logits, B, S = setup
+    a3 = A3Config.conservative()
+    _, cache_a = dec.prefill(params, CFG, toks[:, :48], max_len=64, a3=True)
+    _, cache_e = dec.prefill(params, CFG, toks[:, :48], max_len=64)
+    pos = 48
+    for t in range(4):
+        tok = toks[:, 48 + t]
+        la, cache_a = dec.decode_step(params, CFG, cache_a, tok,
+                                      jnp.int32(pos), a3=a3)
+        le, cache_e = dec.decode_step(params, CFG, cache_e, tok,
+                                      jnp.int32(pos))
+        assert _cos(la[:, :300], le[:, :300]) > 0.98, t
+        pos += 1
+
+
+def test_compact_selection_recall():
+    """The budgeted (prefix-capped, heuristic-free) selection keeps the
+    high-weight keys on *structured* data (keys clustered, query near a
+    cluster — real attention's regime and the paper's: its bAbI
+    embeddings are content-correlated). On isotropic gaussian data
+    single-component products carry little signal and recall degrades
+    toward the budget fraction — measured and recorded in
+    EXPERIMENTS.md; the accuracy-bearing claim is the Fig. 13 benchmark
+    (0.95 top-2 recall, conservative, trained MemN2N)."""
+    from repro.core.candidate_selection import select_candidates, \
+        sort_key_columns
+    key = jax.random.PRNGKey(3)
+    n, d = 256, 32
+    hits = 0
+    for i in range(20):
+        k1, k2, k3, key = jax.random.split(key, 4)
+        cents = jax.random.normal(k1, (8, d))
+        assign = jax.random.randint(k2, (n,), 0, 8)
+        kmat = cents[assign] * 0.5 + 0.1 * jax.random.normal(k3, (n, d))
+        q = cents[0] * 0.5 + 0.1 * jax.random.normal(k2, (d,))
+        sk = sort_key_columns(kmat)
+        m = n // 2                              # conservative
+        cap = max(16, 4 * m // d)
+        cand, greedy = select_candidates(sk, q, m, prefix_cap=cap,
+                                         use_heuristic=False)
+        scores = kmat @ q
+        top2 = jnp.argsort(scores)[-2:]
+        sel = jnp.argsort(greedy)[-(m // 2):]
+        hits += int(jnp.isin(top2, sel).sum())
+    assert hits >= 32, hits          # >= 80% top-2 recall

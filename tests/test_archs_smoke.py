@@ -1,0 +1,129 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED
+same-family config per arch runs one forward + one train step on CPU,
+asserting output shapes and no NaNs; plus prefill/decode-step exactness
+against the full-sequence forward.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import (
+    OptimizerConfig,
+    RunConfig,
+    ShapeConfig,
+    ShapeKind,
+    ShardingConfig,
+    get_arch,
+    list_archs,
+    smoke_variant,
+)
+from repro.models import decoder
+from repro.models.frontend import audio_frame_embeds, vision_patch_embeds
+from repro.train.step import init_train_state, make_train_step
+
+ARCHS = list_archs()
+B, S = 2, 32
+
+
+def _smoke_inputs(cfg, key):
+    if cfg.frontend == "audio_frames":
+        return None, audio_frame_embeds(key, B, S, cfg)
+    if cfg.frontend == "vision_patches":
+        return None, vision_patch_embeds(key, B, S, cfg)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    return toks, None
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_no_nan(arch):
+    cfg = smoke_variant(get_arch(arch))
+    params = decoder.init_params(jax.random.PRNGKey(0), cfg)
+    toks, embeds = _smoke_inputs(cfg, jax.random.PRNGKey(1))
+    logits, aux = decoder.forward(params, cfg, toks, embeds)
+    vp = decoder.padded_vocab(cfg.vocab_size)
+    assert logits.shape == (B, S, vp)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step(arch):
+    cfg = smoke_variant(get_arch(arch))
+    # f32 smoke training for numerics
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    shape = ShapeConfig("smoke", ShapeKind.TRAIN, S, B)
+    run = RunConfig(model=cfg, shape=shape,
+                    optimizer=OptimizerConfig(lr=1e-3, total_steps=4,
+                                              warmup_steps=1),
+                    sharding=ShardingConfig(remat="none"))
+    state = init_train_state(jax.random.PRNGKey(0), run)
+    step = make_train_step(run, None)
+    key = jax.random.PRNGKey(1)
+    toks, embeds = _smoke_inputs(cfg, key)
+    labels = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                                cfg.vocab_size)
+    batch = ({"embeds": embeds, "labels": labels} if embeds is not None
+             else {"tokens": toks, "labels": labels})
+    losses = []
+    for _ in range(3):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0], f"loss did not fall: {losses}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_match_forward(arch):
+    cfg = dataclasses.replace(smoke_variant(get_arch(arch)),
+                              dtype="float32")
+    params = decoder.init_params(jax.random.PRNGKey(0), cfg)
+    toks, embeds = _smoke_inputs(cfg, jax.random.PRNGKey(1))
+    if embeds is not None:
+        logits, _ = decoder.forward(params, cfg, inputs_embeds=embeds)
+        lp, cache = decoder.prefill(params, cfg,
+                                    inputs_embeds=embeds[:, :S - 1],
+                                    max_len=S + 4)
+        ld, _ = decoder.decode_step(params, cfg, cache, None,
+                                    jnp.int32(S - 1),
+                                    input_embed=embeds[:, S - 1])
+    else:
+        logits, _ = decoder.forward(params, cfg, toks)
+        lp, cache = decoder.prefill(params, cfg, toks[:, :S - 1],
+                                    max_len=S + 4)
+        ld, _ = decoder.decode_step(params, cfg, cache, toks[:, S - 1],
+                                    jnp.int32(S - 1))
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(logits[:, S - 2]),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(logits[:, S - 1]),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 10
+    for arch in ARCHS:
+        cfg = get_arch(arch)
+        assert cfg.param_count() > 0
+        assert cfg.active_param_count() <= cfg.param_count()
+
+
+def test_full_param_counts_plausible():
+    """Full configs should be in the advertised parameter range."""
+    expect = {
+        "deepseek-moe-16b": (14e9, 20e9),
+        "grok-1-314b": (280e9, 340e9),
+        "gemma3-4b": (2.5e9, 5.5e9),
+        "phi4-mini-3.8b": (3e9, 4.8e9),
+        "h2o-danube-1.8b": (1.4e9, 2.2e9),
+        "internlm2-1.8b": (1.5e9, 2.3e9),
+        "recurrentgemma-2b": (2e9, 3.4e9),
+        "xlstm-350m": (0.2e9, 0.6e9),
+        "musicgen-medium": (1e9, 2.2e9),
+        "internvl2-2b": (1.5e9, 2.6e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_arch(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"

@@ -1,0 +1,52 @@
+"""Dry-run integration tests (subprocess with 512 placeholder devices):
+one fast cell per mesh compiles and yields sane roofline terms. The full
+34-cell x 2-mesh sweep runs via ``python -m repro.launch.dryrun`` and is
+recorded in EXPERIMENTS.md; these tests keep the machinery from rotting.
+"""
+from __future__ import annotations
+
+import pytest
+
+from tests.helpers import check, run_with_devices
+
+_CELL = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.dryrun import run_cell
+rec = run_cell("xlstm-350m", "decode_32k", multi_pod={mp}, verbose=False)
+assert rec["flops_per_device"] > 0
+assert rec["bytes_per_device"] > 0
+assert rec["memory"]["peak_device_bytes"] < 16 * 2**30   # fits v5e HBM
+assert rec["chips"] == {chips}
+print("OK", rec["bottleneck"], rec["memory"]["peak_device_bytes"])
+"""
+
+
+@pytest.mark.slow
+def test_single_pod_cell():
+    out = check(run_with_devices(_CELL.format(mp=False, chips=256),
+                                 devices=512, timeout=900))
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_multi_pod_cell():
+    out = check(run_with_devices(_CELL.format(mp=True, chips=512),
+                                 devices=512, timeout=900))
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_a3_decode_cell_reduces_memory_term():
+    """The paper's technique must reduce the decode memory term (H3)."""
+    out = check(run_with_devices("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.config import A3Config
+from repro.launch.dryrun import run_cell
+base = run_cell("internlm2-1.8b", "decode_32k", verbose=False)
+a3 = run_cell("internlm2-1.8b", "decode_32k", verbose=False,
+              a3=A3Config.aggressive())
+print("OK", base["memory_s"], a3["memory_s"])
+""", devices=512, timeout=1800))
+    assert "OK" in out

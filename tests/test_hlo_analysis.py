@@ -1,0 +1,99 @@
+"""HLO accounting tests: the roofline's FLOP/byte/collective numbers
+must be trustworthy — validated against analytic counts on real
+compiled programs and against hand-written HLO text.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import HloModule, _shape_bytes
+
+
+def test_dot_flops_simple_matmul():
+    m, k, n = 64, 128, 32
+
+    @jax.jit
+    def f(a, b):
+        return a @ b
+
+    txt = f.lower(jax.ShapeDtypeStruct((m, k), jnp.float32),
+                  jax.ShapeDtypeStruct((k, n), jnp.float32)) \
+        .compile().as_text()
+    flops = HloModule(txt).dot_flops()
+    assert abs(flops - 2 * m * k * n) / (2 * m * k * n) < 0.01
+
+
+def test_dot_flops_scan_trip_count():
+    """Dots inside a lax.scan must be scaled by the trip count."""
+    L, d = 7, 32
+    w = jax.ShapeDtypeStruct((L, d, d), jnp.float32)
+    x = jax.ShapeDtypeStruct((d,), jnp.float32)
+
+    @jax.jit
+    def f(w, x):
+        def body(h, wi):
+            return wi @ h, None
+        h, _ = jax.lax.scan(body, x, w)
+        return h
+
+    txt = f.lower(w, x).compile().as_text()
+    flops = HloModule(txt).dot_flops()
+    expect = L * 2 * d * d
+    assert abs(flops - expect) / expect < 0.05, (flops, expect)
+
+
+def test_shape_bytes_tuple():
+    assert _shape_bytes("(bf16[4,8], f32[2])") == 4 * 8 * 2 + 2 * 4
+    assert _shape_bytes("pred[16]") == 16
+    assert _shape_bytes("s32[]") == 4
+
+
+def test_collective_parse_synthetic():
+    hlo = """
+HloModule test, entry_computation_layout={()->f32[]}
+
+%body.1 (p: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+  %p = (s32[], f32[64,64]) parameter(0)
+  %g = f32[64,64] get-tuple-element(%p), index=1
+  %ar = f32[64,64] all-reduce(%g), replica_groups={{0,1,2,3}}, to_apply=%add.1
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[64,64]) tuple(%i, %ar)
+}
+
+%cond.1 (p: (s32[], f32[64,64])) -> pred[] {
+  %p = (s32[], f32[64,64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[64,64]) -> f32[64,64] {
+  %a = f32[64,64] parameter(0)
+  %init = (s32[], f32[64,64]) tuple(%zero, %a)
+  %w = (s32[], f32[64,64]) while(%init), condition=%cond.1, body=%body.1
+  %ag = f32[128,64] all-gather(%a), dimensions={0}, replica_groups={{0,1}}
+  ROOT %out = f32[64,64] get-tuple-element(%w), index=1
+}
+"""
+    mod = HloModule(hlo)
+    ob, oc, wire = mod.collectives()
+    # all-reduce runs 5x (trip count), operand 64*64*4 bytes
+    assert ob["all-reduce"] == 5 * 64 * 64 * 4
+    # all-gather once, operand is %a
+    assert ob["all-gather"] == 64 * 64 * 4
+    assert oc["all-reduce"] == 5
+
+
+def test_hbm_bytes_excludes_fusion_internals():
+    @jax.jit
+    def f(a, b):
+        return jnp.tanh(a * 2.0 + b)   # one fused loop
+
+    txt = f.lower(jax.ShapeDtypeStruct((1024,), jnp.float32),
+                  jax.ShapeDtypeStruct((1024,), jnp.float32)) \
+        .compile().as_text()
+    b = HloModule(txt).hbm_bytes()
+    # fused elementwise: ~2 reads + 1 write = 12 KiB; allow copies
+    assert b <= 6 * 1024 * 4, b

@@ -1,0 +1,190 @@
+"""Per-kernel validation: shape/dtype sweeps vs pure-jnp oracles.
+
+All Pallas kernels run in interpret mode (CPU) and must match their ref.py
+to tight tolerances in f32 and loose tolerances in bf16.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import A3Config, A3Mode
+from repro.kernels.a3_attention.kernel import a3_sparse_attention, build_block_map
+from repro.kernels.a3_attention.ops import a3_attention, candidate_block_map_for_heads
+from repro.kernels.a3_attention.ref import a3_sparse_attention_ref
+from repro.kernels.decode_attention.kernel import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+def _qkv(rng, b, hq, hkv, sq, sk, d, dv, dtype):
+    q = jnp.asarray(rng.standard_normal((b, hq, sq, d)), dtype=dtype)
+    k = jnp.asarray(rng.standard_normal((b, hkv, sk, d)), dtype=dtype)
+    v = jnp.asarray(rng.standard_normal((b, hkv, sk, dv)), dtype=dtype)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,hq,hkv,sq,sk,d,dv", [
+    (1, 1, 1, 128, 128, 64, 64),
+    (2, 4, 2, 256, 256, 64, 64),
+    (1, 8, 1, 128, 384, 32, 32),     # MQA + prefill-continuation offset
+    (1, 2, 2, 256, 256, 128, 64),    # dv != d
+])
+def test_flash_attention_sweep(b, hq, hkv, sq, sk, d, dv, dtype):
+    rng = np.random.default_rng(hash((b, hq, sk, d)) % 2**31)
+    q, k, v = _qkv(rng, b, hq, hkv, sq, sk, d, dv, dtype)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [64, 128, 1024])
+def test_flash_attention_window(window):
+    rng = np.random.default_rng(window)
+    q, k, v = _qkv(rng, 1, 2, 2, 256, 256, 32, 32, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window, interpret=True)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    sq_blocks=st.integers(1, 3),
+    sk_extra=st.integers(0, 2),
+    hkv=st.sampled_from([1, 2]),
+    causal=st.booleans(),
+)
+def test_flash_attention_property(sq_blocks, sk_extra, hkv, causal):
+    rng = np.random.default_rng(42)
+    sq = 128 * sq_blocks
+    sk = sq + 128 * sk_extra
+    q, k, v = _qkv(rng, 1, 2 * hkv, hkv, sq, sk, 32, 32, jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# a3_sparse_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("threshold", [None, 1.0, 3.0])
+@pytest.mark.parametrize("density", [0.25, 0.75, 1.0])
+def test_a3_sparse_sweep(dtype, threshold, density):
+    rng = np.random.default_rng(int(density * 100) + (0 if threshold is None
+                                                      else int(threshold)))
+    b, hq, hkv, s, d = 1, 2, 1, 512, 32
+    q, k, v = _qkv(rng, b, hq, hkv, s, s, d, d, dtype)
+    nq = nk = s // 128
+    bm = jnp.asarray(rng.random((b, hq, nq, nk)) < density)
+    # every q block keeps its diagonal block so no row is fully masked
+    eye = jnp.eye(nq, nk, dtype=bool)[None, None]
+    bm = bm | eye
+    idx, cnt = build_block_map(bm)
+    out = a3_sparse_attention(q, k, v, idx, cnt, threshold=threshold,
+                              causal=True, interpret=True)
+    ref = a3_sparse_attention_ref(q, k, v, idx, cnt, threshold=threshold,
+                                  causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_a3_sparse_full_map_equals_flash():
+    """With every block live and no threshold, the sparse kernel must equal
+    dense flash attention."""
+    rng = np.random.default_rng(7)
+    q, k, v = _qkv(rng, 1, 2, 2, 256, 256, 32, 32, jnp.float32)
+    bm = jnp.ones((1, 2, 2, 2), dtype=bool)
+    idx, cnt = build_block_map(bm)
+    out = a3_sparse_attention(q, k, v, idx, cnt, threshold=None,
+                              causal=True, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_a3_attention_end_to_end_close_to_exact():
+    """Full pipeline (selection -> block map -> sparse kernel) approximates
+    exact attention on retrieval-style data."""
+    rng = np.random.default_rng(8)
+    b, h, s, d = 1, 2, 256, 32
+    q, k, v = _qkv(rng, b, h, h, s, s, d, d, jnp.float32)
+    cfg = A3Config(mode=A3Mode.CUSTOM, m_fraction=0.5, threshold_pct=1.0)
+    approx = a3_attention(q, k, v, cfg, causal=True, use_kernel=True,
+                          interpret=True)
+    exact = attention_ref(q, k, v, causal=True)
+    rel = (np.linalg.norm(np.asarray(approx) - np.asarray(exact)) /
+           np.linalg.norm(np.asarray(exact)))
+    assert rel < 0.25, rel
+    # kernel and ref paths agree on identical masks
+    ref_path = a3_attention(q, k, v, cfg, causal=True, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(approx), np.asarray(ref_path),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_block_map_roundtrip():
+    rng = np.random.default_rng(9)
+    bm = jnp.asarray(rng.random((2, 3, 4, 8)) < 0.5)
+    idx, cnt = build_block_map(bm)
+    assert idx.shape == (2, 3, 4, 8)
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(bm.sum(-1)))
+    # reconstruct and compare
+    rec = np.zeros(bm.shape, dtype=bool)
+    idx_n, cnt_n = np.asarray(idx), np.asarray(cnt)
+    for b in range(2):
+        for h in range(3):
+            for qb in range(4):
+                rec[b, h, qb, idx_n[b, h, qb, :cnt_n[b, h, qb]]] = True
+    np.testing.assert_array_equal(rec, np.asarray(bm))
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,hq,hkv,s,d,block_k", [
+    (1, 4, 1, 512, 64, 256),
+    (2, 8, 2, 1024, 64, 512),
+    (1, 16, 16, 256, 32, 128),      # MHA
+    (4, 8, 4, 2048, 128, 512),
+])
+def test_decode_attention_sweep(b, hq, hkv, s, d, block_k, dtype):
+    rng = np.random.default_rng(hash((b, hq, s)) % 2**31)
+    q = jnp.asarray(rng.standard_normal((b, hq, d)), dtype=dtype)
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, d)), dtype=dtype)
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, d)), dtype=dtype)
+    mask = jnp.asarray(rng.random((b, hq, s)) < 0.6)
+    mask = mask.at[..., 0].set(True)
+    out = decode_attention(q, k, v, mask, threshold=2.0, block_k=block_k,
+                           interpret=True)
+    ref = decode_attention_ref(q, k, v, mask, threshold=2.0)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_decode_attention_empty_mask_row_is_zero():
+    rng = np.random.default_rng(10)
+    q = jnp.asarray(rng.standard_normal((1, 2, 32)), dtype=jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 128, 32)), dtype=jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 1, 128, 32)), dtype=jnp.float32)
+    mask = jnp.zeros((1, 2, 128), dtype=bool).at[0, 1].set(True)
+    out = decode_attention(q, k, v, mask, interpret=True, block_k=128)
+    assert float(jnp.abs(out[0, 0]).max()) == 0.0
+    assert float(jnp.abs(out[0, 1]).max()) > 0.0

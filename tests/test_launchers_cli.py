@@ -1,0 +1,45 @@
+"""Launcher CLI smoke tests: the train/serve entrypoints run end-to-end
+on reduced configs (subprocess — the real user-facing path)."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "src")
+
+
+def _run(args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run([sys.executable, "-m"] + args, env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+@pytest.mark.slow
+def test_train_cli_smoke(tmp_path):
+    p = _run(["repro.launch.train", "--arch", "internlm2-1.8b", "--smoke",
+              "--steps", "6", "--batch", "2", "--seq", "64",
+              "--ckpt-dir", str(tmp_path), "--save-every", "3"])
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "loss" in p.stdout
+    assert any(d.startswith("step_") for d in os.listdir(tmp_path))
+
+
+@pytest.mark.slow
+def test_serve_cli_smoke_with_a3():
+    p = _run(["repro.launch.serve", "--arch", "phi4-mini-3.8b", "--smoke",
+              "--requests", "2", "--prompt-len", "12", "--max-new", "4",
+              "--max-len", "64", "--a3", "conservative"])
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "requests=2/2" in p.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_cli_list():
+    p = _run(["repro.launch.dryrun", "--list"], timeout=300)
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "grok-1-314b" in p.stdout and "long_500k" in p.stdout

@@ -1,0 +1,82 @@
+"""MemN2N (paper workload) tests: learns the synthetic bAbI task, and
+the A^3 pipeline preserves accuracy at conservative settings — the
+paper's central accuracy claim at small scale.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import A3Config, A3Mode, OptimizerConfig
+from repro.data.babi import generate_babi, make_task
+from repro.models import memn2n
+from repro.optim.adamw import adamw_init, adamw_update
+
+
+@pytest.fixture(scope="module")
+def trained():
+    task = make_task(num_actors=32, num_places=8, max_sentences=24,
+                     max_words=8)
+    cfg = memn2n.MemN2NConfig(vocab_size=task.vocab_size, d_embed=32,
+                              num_hops=2, max_sentences=task.max_sentences,
+                              max_words=task.max_words)
+    params = memn2n.init_params(jax.random.PRNGKey(0), cfg)
+    ocfg = OptimizerConfig(lr=1e-2, warmup_steps=10, total_steps=700,
+                           weight_decay=0.0, min_lr_ratio=0.3)
+    opt = adamw_init(params, ocfg)
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(memn2n.loss_fn)(params, batch, cfg)
+        params, opt, _ = adamw_update(grads, opt, params, ocfg)
+        return params, opt, loss
+
+    for i in range(700):
+        b = generate_babi(task, 64, 20, seed=100 + i)
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt, _ = step(params, opt, b)
+    test = generate_babi(task, 256, 20, seed=9)
+    test = {k: jnp.asarray(v) for k, v in test.items()}
+    return params, cfg, test
+
+
+def test_learns_task(trained):
+    params, cfg, test = trained
+    acc = float(memn2n.accuracy(params, test, cfg))
+    assert acc > 0.85, acc
+
+
+def test_a3_conservative_small_drop(trained):
+    params, cfg, test = trained
+    base = float(memn2n.accuracy(params, test, cfg))
+    acc = float(memn2n.accuracy(params, test, cfg, A3Config.conservative()))
+    assert acc >= base - 0.05, (base, acc)
+
+
+def test_a3_m_monotonic_candidates(trained):
+    """More iterations M -> more (or equal) candidates selected."""
+    params, cfg, test = trained
+    counts = []
+    for frac in [0.125, 0.5, 1.0]:
+        a3 = A3Config(mode=A3Mode.CUSTOM, m_fraction=frac,
+                      threshold_pct=1e-4)
+
+        def cand(s, q):
+            _, aux = memn2n.answer_with_a3(params, s, q, cfg, a3)
+            return jnp.sum(aux["hop0"]["candidates"])
+
+        c = jax.vmap(cand)(test["sentences"][:32], test["question"][:32])
+        counts.append(float(jnp.mean(c)))
+    assert counts[0] <= counts[1] + 1e-6 <= counts[2] + 2e-6, counts
+
+
+def test_quantized_path_close(trained):
+    """i=4,f=4 fixed-point inputs (paper SSVI-B): accuracy within 2%."""
+    params, cfg, test = trained
+    base = float(memn2n.accuracy(params, test, cfg))
+    a3 = A3Config(mode=A3Mode.CUSTOM, m_fraction=1.0, threshold_pct=1e-4,
+                  int_bits=4, frac_bits=4)
+    acc = float(memn2n.accuracy(params, test, cfg, a3))
+    assert acc >= base - 0.02, (base, acc)

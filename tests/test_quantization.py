@@ -1,0 +1,89 @@
+"""Fixed-point quantization + two-LUT exponent numerics (paper §III)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import (
+    make_lut_exp,
+    quantize_fixed_point,
+    softmax_fixed_point,
+)
+
+
+def test_fixed_point_grid():
+    x = jnp.asarray([0.0, 0.11, -0.12, 3.14159, -7.9, 100.0, -100.0])
+    q = quantize_fixed_point(x, int_bits=4, frac_bits=4)
+    step = 2.0 ** -4
+    limit = 2.0 ** 4 - step
+    qn = np.asarray(q)
+    # on the grid
+    np.testing.assert_allclose(qn / step, np.round(qn / step), atol=1e-6)
+    # clipped to the representable range
+    assert qn.max() <= limit and qn.min() >= -limit
+    # rounding error bounded by half a step for in-range values
+    inr = np.abs(np.asarray(x)) <= limit
+    assert np.all(np.abs(qn[inr] - np.asarray(x)[inr]) <= step / 2 + 1e-7)
+
+
+@given(st.floats(-15.9, 15.9), st.integers(2, 6), st.integers(2, 6))
+@settings(max_examples=60, deadline=None)
+def test_fixed_point_error_bound(v, i, f):
+    limit = 2.0 ** i - 2.0 ** (-f)
+    q = float(quantize_fixed_point(jnp.float32(v), i, f))
+    if abs(v) <= limit:
+        assert abs(q - v) <= 2.0 ** (-f) / 2 + 1e-5
+    else:
+        assert abs(q) <= limit + 1e-6
+
+
+def test_lut_exp_equals_single_table():
+    """Two-LUT decomposition must equal the mathematically exact e^x at
+    every representable input (e^{a+b} = e^a e^b is exact; only the output
+    register rounding remains)."""
+    lut = make_lut_exp(frac_bits=8, total_bits=16, out_frac_bits=24)
+    ks = np.arange(0, 2 ** 16, 97)           # sample the input lattice
+    x = -(ks * 2.0 ** -8)
+    y = np.asarray(lut(jnp.asarray(x, dtype=jnp.float32)))
+    ref = np.exp(x)
+    np.testing.assert_allclose(y, ref, rtol=2e-5, atol=2e-7)
+
+
+def test_lut_exp_footnote1_error_bound():
+    """Footnote 1: for x <= 0, |e^{x+eps} - e^x| < |eps| — input quantization
+    error shrinks through the exponent."""
+    rng = np.random.default_rng(0)
+    x = -rng.uniform(0, 20, size=4096)
+    f = 8
+    lut = make_lut_exp(frac_bits=f, total_bits=16, out_frac_bits=24)
+    y = np.asarray(lut(jnp.asarray(x, dtype=jnp.float32)))
+    eps = 2.0 ** -f / 2            # max input quantization error
+    err = np.abs(y - np.exp(x))
+    assert np.all(err <= eps + 1e-6), err.max()
+
+
+def test_lut_table_size_reduction():
+    """§III-A: 2×256 entries replace 65,536."""
+    lut = make_lut_exp(frac_bits=8, total_bits=16)
+    assert lut.table_entries == 512
+    assert 2 ** lut.total_bits == 65536
+
+
+@pytest.mark.parametrize("n", [8, 64, 320])
+def test_softmax_fixed_point_close_to_float(n):
+    rng = np.random.default_rng(n)
+    scores = rng.standard_normal(n).astype(np.float32) * 3
+    sq = quantize_fixed_point(jnp.asarray(scores), 8, 8)
+    w = np.asarray(softmax_fixed_point(sq, frac_bits=8))
+    ref = np.exp(scores - scores.max())
+    ref = ref / ref.sum()
+    assert np.abs(w - ref).max() < 2e-2
+    assert abs(w.sum() - 1.0) < 2e-2
+
+
+def test_softmax_fixed_point_mask():
+    scores = jnp.asarray([1.0, 5.0, 2.0, 4.0])
+    mask = jnp.asarray([True, False, True, True])
+    w = np.asarray(softmax_fixed_point(scores, frac_bits=8, mask=mask))
+    assert w[1] == 0.0
+    assert abs(w.sum() - 1.0) < 1e-2

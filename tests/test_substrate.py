@@ -1,0 +1,264 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, fault
+tolerance, serving engine."""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import (
+    CheckpointConfig,
+    ModelConfig,
+    OptimizerConfig,
+    RunConfig,
+    ShapeConfig,
+    ShapeKind,
+    ShardingConfig,
+)
+from repro.data.babi import generate_babi, make_task
+from repro.data.synthetic import SyntheticLM, make_lm_batch
+from repro.models import decoder
+from repro.optim.adamw import adamw_init, adamw_update, cosine_schedule, \
+    global_norm
+from repro.serve.engine import ServeEngine
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault import Watchdog, WatchdogTimeout, run_with_restarts
+from repro.train.loop import train_loop, train_with_recovery
+from repro.train.step import TrainState, init_train_state, make_train_step
+
+TINY = ModelConfig("tiny", "dense", num_layers=2, d_model=64, num_heads=4,
+                   num_kv_heads=2, d_ff=128, vocab_size=256, head_dim=16,
+                   dtype="float32")
+SHAPE = ShapeConfig("t", ShapeKind.TRAIN, seq_len=32, global_batch=4)
+
+
+def _run(tmp, **kw):
+    return RunConfig(
+        model=TINY, shape=SHAPE,
+        optimizer=OptimizerConfig(lr=1e-3, total_steps=10, warmup_steps=2),
+        sharding=ShardingConfig(remat="none"),
+        checkpoint=CheckpointConfig(directory=tmp, **kw))
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_matches_reference():
+    """One AdamW step against a hand-rolled numpy reference."""
+    cfg = OptimizerConfig(lr=1e-2, warmup_steps=0, total_steps=100,
+                          weight_decay=0.1, grad_clip_norm=1e9)
+    p = {"w": jnp.asarray([[1.0, -2.0], [0.5, 3.0]])}
+    g = {"w": jnp.asarray([[0.1, 0.2], [-0.3, 0.4]])}
+    st = adamw_init(p, cfg)
+    newp, st2, _ = adamw_update(g, st, p, cfg)
+
+    lr = float(cosine_schedule(cfg, jnp.asarray(1)))
+    m = 0.1 * np.asarray(g["w"])
+    v = 0.05 * np.asarray(g["w"]) ** 2
+    mh, vh = m / 0.1, v / 0.05
+    ref = np.asarray(p["w"]) - lr * (mh / (np.sqrt(vh) + cfg.eps)
+                                     + 0.1 * np.asarray(p["w"]))
+    np.testing.assert_allclose(np.asarray(newp["w"]), ref, rtol=1e-5)
+
+
+def test_grad_clipping():
+    cfg = OptimizerConfig(lr=1e-2, warmup_steps=0, grad_clip_norm=0.1)
+    p = {"w": jnp.ones((4,))}
+    g = {"w": jnp.full((4,), 100.0)}
+    st = adamw_init(p, cfg)
+    _, _, metrics = adamw_update(g, st, p, cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_cosine_schedule_shape():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                          min_lr_ratio=0.1)
+    lrs = [float(cosine_schedule(cfg, jnp.asarray(s)))
+           for s in [0, 5, 10, 60, 110, 200]]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert 0.1 < lrs[3] < 1.0
+    assert lrs[4] == pytest.approx(0.1, abs=1e-6)
+    assert lrs[5] == pytest.approx(0.1, abs=1e-6)
+
+
+def test_bf16_m_state_dtype():
+    cfg = OptimizerConfig(m_dtype="bfloat16")
+    p = {"w": jnp.ones((4,), jnp.bfloat16)}
+    st = adamw_init(p, cfg)
+    assert st.m["w"].dtype == jnp.bfloat16
+    assert st.v["w"].dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_lm_batch_deterministic_and_restartable():
+    b1 = make_lm_batch(7, 4, 64, 1000, seed=3)
+    b2 = make_lm_batch(7, 4, 64, 1000, seed=3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert (b1["labels"][:, :-1] == b1["tokens"][:, 1:]).all()
+
+    pipe = SyntheticLM(4, 64, 1000, seed=3)
+    first = next(pipe)
+    state = pipe.state
+    pipe.close()
+    pipe2 = SyntheticLM.restore(state, 4, 64, 1000)
+    second = next(pipe2)
+    pipe2.close()
+    expect = make_lm_batch(1, 4, 64, 1000, seed=3)
+    np.testing.assert_array_equal(second["tokens"], expect["tokens"])
+    np.testing.assert_array_equal(first["tokens"],
+                                  make_lm_batch(0, 4, 64, 1000, 3)["tokens"])
+
+
+def test_babi_generator_answers_consistent():
+    task = make_task()
+    data = generate_babi(task, 16, 20, seed=1)
+    for b in range(16):
+        actor = data["question"][b, 2]
+        # find last statement about that actor
+        place = None
+        for s in range(20):
+            if data["sentences"][b, s, 0] == actor:
+                place = data["sentences"][b, s, 2]
+        assert place is not None and place == data["answer"][b]
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(CheckpointConfig(directory=d, keep=2,
+                                                 async_save=False))
+        state = {"a": jnp.arange(6).reshape(2, 3),
+                 "nested": {"b": jnp.ones((4,), jnp.bfloat16)}}
+        for step in [5, 10, 15]:
+            mgr.save(step, state, extra={"step": step})
+        assert mgr.all_steps() == [10, 15]        # keep=2
+        target = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        restored, extra = mgr.restore(target)
+        assert extra["step"] == 15
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.asarray(state["a"]))
+        assert restored["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_async():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(CheckpointConfig(directory=d,
+                                                 async_save=True))
+        state = {"a": jnp.zeros((128, 128))}
+        mgr.save(1, state)
+        mgr.wait()
+        assert mgr.latest_step() == 1
+
+
+def test_checkpoint_shape_mismatch_raises():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(CheckpointConfig(directory=d,
+                                                 async_save=False))
+        mgr.save(1, {"a": jnp.zeros((4,))})
+        with pytest.raises(ValueError):
+            mgr.restore({"a": jax.ShapeDtypeStruct((5,), jnp.float32)})
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_watchdog_timeout():
+    wd = Watchdog(0.2)
+    with pytest.raises(WatchdogTimeout):
+        wd.run(lambda: time.sleep(2.0))
+    assert wd.run(lambda: 42) == 42
+
+
+def test_run_with_restarts():
+    calls = []
+
+    def body(attempt):
+        calls.append(attempt)
+        if attempt < 2:
+            raise RuntimeError("boom")
+        return "ok"
+
+    assert run_with_restarts(body, max_restarts=5) == "ok"
+    assert calls == [0, 1, 2]
+
+    with pytest.raises(RuntimeError):
+        run_with_restarts(lambda a: (_ for _ in ()).throw(RuntimeError()),
+                          max_restarts=1)
+
+
+def test_train_recovery_resumes_from_checkpoint():
+    with tempfile.TemporaryDirectory() as d:
+        run = _run(d, save_every=2, async_save=False)
+        out = train_with_recovery(run, num_steps=6, fail_at_step=4)
+        assert out["restarts"] == [1]
+        # after recovery the run completed all 6 steps; the post-restart
+        # segment starts from step 4 (checkpoint at 4)
+        assert out["final_step"] == 6
+        mgr = CheckpointManager(run.checkpoint)
+        assert mgr.latest_step() == 6
+
+
+def test_train_recovery_matches_uninterrupted():
+    """Recovered run must produce the same final loss as an unbroken
+    one (determinism of data pipeline + checkpointed state)."""
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        base = train_loop(_run(d1, save_every=100), num_steps=6)
+        rec = train_with_recovery(_run(d2, save_every=3, async_save=False),
+                                  num_steps=6, fail_at_step=4)
+        assert base["losses"][-1] == pytest.approx(rec["losses"][-1],
+                                                   rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def test_serve_engine_greedy_matches_manual():
+    params = decoder.init_params(jax.random.PRNGKey(0), TINY)
+    toks = np.arange(9) % TINY.vocab_size
+    lp, cache = decoder.prefill(params, TINY, jnp.asarray(toks)[None],
+                                max_len=64)
+    cur = int(jnp.argmax(lp[0]))
+    outs = [cur]
+    pos = 9
+    for _ in range(5):
+        lg, cache = decoder.decode_step(params, TINY, cache,
+                                        jnp.asarray([cur]), jnp.int32(pos))
+        cur = int(jnp.argmax(lg[0]))
+        outs.append(cur)
+        pos += 1
+    eng = ServeEngine(params, TINY, slots=2, max_len=64)
+    u = eng.submit(toks, max_new_tokens=6)
+    eng.run_to_completion()
+    assert eng.result(u) == outs
+
+
+def test_serve_engine_many_requests_slots():
+    params = decoder.init_params(jax.random.PRNGKey(0), TINY)
+    eng = ServeEngine(params, TINY, slots=3, max_len=64)
+    uids = [eng.submit(np.arange(4 + i) % TINY.vocab_size,
+                       max_new_tokens=3 + i % 3) for i in range(7)]
+    eng.run_to_completion()
+    for i, u in enumerate(uids):
+        r = eng.result(u)
+        assert r is not None and len(r) == 3 + i % 3
+    # token ids must be within the real vocab (padding masked)
+    for u in uids:
+        assert max(eng.result(u)) < TINY.vocab_size

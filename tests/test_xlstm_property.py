@@ -1,0 +1,88 @@
+"""Property tests (hypothesis): chunkwise-parallel mLSTM == sequential
+recurrence, sLSTM scan == per-step cell, RG-LRU scan == decode steps —
+the core invariant that makes prefill/decode serving exact.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models import xlstm as X
+from repro.models import rglru as R
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.integers(2, 33), st.integers(0, 2 ** 31 - 1),
+       st.sampled_from([4, 8]))
+def test_mlstm_chunkwise_equals_sequential(b, s, seed, chunk):
+    H, Dh, D = 2, 8, 32
+    key = jax.random.PRNGKey(seed % 1000)
+    p = X.mlstm_init(key, D, H, Dh, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed % 997), (b, s, D)) * 0.5
+    par = X.mlstm_parallel(p, x, H, Dh, chunk=chunk)
+    state = X.mlstm_init_state(b, H, Dh)
+    outs = []
+    for t in range(s):
+        o, state = X.mlstm_decode_step(p, x[:, t:t + 1], state, H, Dh)
+        outs.append(o)
+    seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(par), np.asarray(seq),
+                               atol=2e-5, rtol=2e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 3), st.integers(2, 17), st.integers(0, 2 ** 31 - 1))
+def test_slstm_scan_equals_steps(b, s, seed):
+    H, D = 2, 16
+    key = jax.random.PRNGKey(seed % 1000)
+    p = X.slstm_init(key, D, H, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed % 997), (b, s, D)) * 0.5
+    full, _ = X.slstm_apply_scan(p, x, H)
+    state = X.slstm_init_state(b, D)
+    outs = []
+    for t in range(s):
+        o, state = X.slstm_decode_step(p, x[:, t:t + 1], state, H)
+        outs.append(o)
+    seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(seq),
+                               atol=2e-5, rtol=2e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 2), st.integers(2, 17), st.integers(0, 2 ** 31 - 1))
+def test_rglru_scan_equals_steps(b, s, seed):
+    D, C = 16, 24
+    key = jax.random.PRNGKey(seed % 1000)
+    p = R.rglru_init(key, D, C, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed % 997), (b, s, D)) * 0.5
+    full, h_last, buf_last = R.rglru_apply_scan(p, x)
+    h = jnp.zeros((b, C), jnp.float32)
+    buf = jnp.zeros((b, R.CONV_WIDTH - 1, C), jnp.float32)
+    outs = []
+    for t in range(s):
+        o, h, buf = R.rglru_decode_step(p, x[:, t:t + 1], h, buf)
+        outs.append(o)
+    seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(seq),
+                               atol=2e-5, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(h),
+                               atol=2e-5, rtol=2e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(2, 20), st.integers(1, 6), st.integers(0, 2 ** 31 - 1))
+def test_rglru_state_handoff(s, split, seed):
+    """Running [0:k] then [k:s] with carried state == full scan."""
+    b, D, C = 1, 16, 24
+    k = min(split, s - 1)
+    key = jax.random.PRNGKey(seed % 1000)
+    p = R.rglru_init(key, D, C, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed % 997), (b, s, D)) * 0.5
+    full, _, _ = R.rglru_apply_scan(p, x)
+    o1, h1, buf1 = R.rglru_apply_scan(p, x[:, :k])
+    o2, _, _ = R.rglru_apply_scan(p, x[:, k:], h0=h1, conv_buf=buf1)
+    joined = jnp.concatenate([o1, o2], axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(joined),
+                               atol=2e-5, rtol=2e-4)
