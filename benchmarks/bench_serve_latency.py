@@ -1,0 +1,177 @@
+"""Serving-engine tick latency under staggered request arrivals.
+
+Staggered arrivals are the adversarial case for the old per-position-
+group decode loop: every active slot sat at a different position, so a
+tick cost one jitted dispatch (plus a full-cache merge copy) *per slot*.
+The ragged single-dispatch engine pays one dispatch and zero merge
+copies regardless of skew — this benchmark measures per-tick latency and
+tokens/sec on exactly that workload and writes machine-readable
+``BENCH_serve.json`` to seed the perf trajectory across PRs.
+
+  PYTHONPATH=src python benchmarks/bench_serve_latency.py \
+      [--slots 4] [--requests 8] [--stagger 2] [--out BENCH_serve.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.config import A3Config, ModelConfig
+from repro.models import decoder
+from repro.serve.engine import ServeEngine
+
+TINY = ModelConfig("bench-tiny", "dense", num_layers=4, d_model=128,
+                   num_heads=8, num_kv_heads=4, d_ff=256, vocab_size=512,
+                   head_dim=32, dtype="float32")
+
+
+def run_staggered(params, *, slots: int, requests: int, stagger: int,
+                  prompt_len: int, max_new: int, max_len: int,
+                  a3: A3Config) -> dict:
+    """Submit ``requests`` prompts of varying length, one every
+    ``stagger`` ticks, and time each engine tick."""
+    eng = ServeEngine(params, TINY, slots=slots, max_len=max_len, a3=a3)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, TINY.vocab_size,
+                            size=prompt_len + 3 * (i % 5))
+               for i in range(requests)]
+    # warm the decode jit (first tick compiles) before timing
+    w = eng.submit(prompts[0][:prompt_len], max_new_tokens=2)
+    eng.run_to_completion()
+    assert eng.result(w) is not None
+    warm_dispatches = eng.stats["decode_dispatches"]
+    warm_steps = eng.stats["decode_steps"]
+
+    pending = list(enumerate(prompts))
+    tick_times = []
+    uids, tick = [], 0
+    t_start = time.perf_counter()
+    while pending or eng._queue or any(s.active for s in eng.slots):
+        if pending and tick % stagger == 0:
+            i, p = pending.pop(0)
+            uids.append(eng.submit(p, max_new_tokens=max_new))
+        t0 = time.perf_counter()
+        eng.step()
+        jax.block_until_ready(jax.tree.leaves(eng.cache)[0])
+        tick_times.append(time.perf_counter() - t0)
+        tick += 1
+        if tick > 10_000:
+            raise RuntimeError("benchmark did not converge")
+    wall = time.perf_counter() - t_start
+
+    new_tokens = sum(len(eng.result(u) or []) for u in uids)
+    ts = np.asarray(tick_times)
+    dispatches = eng.stats["decode_dispatches"] - warm_dispatches
+    ticks_advanced = max(eng.stats["decode_steps"] - warm_steps, 1)
+    return {
+        "ticks": len(tick_times),
+        "wall_s": wall,
+        "new_tokens": new_tokens,
+        "tok_per_s": new_tokens / wall,
+        "tick_ms_p50": float(np.percentile(ts, 50) * 1e3),
+        "tick_ms_p90": float(np.percentile(ts, 90) * 1e3),
+        "tick_ms_mean": float(ts.mean() * 1e3),
+        "decode_dispatches": dispatches,
+        "decode_ticks": ticks_advanced,
+        "dispatches_per_tick": dispatches / ticks_advanced,
+    }
+
+
+def compare_dispatch_schemes(params, *, slots: int, max_len: int) -> dict:
+    """Micro-compare the decode hot path: ONE ragged dispatch for skewed
+    slots vs the pre-ragged scheme (one scalar-pos dispatch per position
+    group, each followed by the full-cache ``jnp.where`` merge)."""
+    import jax.numpy as jnp
+    from repro.serve.engine import make_serve_step
+
+    rng = np.random.default_rng(1)
+    pos_np = np.asarray([8 + 7 * i for i in range(slots)], np.int32)
+    toks = jnp.asarray(rng.integers(0, TINY.vocab_size, slots), jnp.int32)
+    cache = decoder.init_cache(TINY, slots, max_len)
+
+    ragged = jax.jit(make_serve_step(TINY))
+    scalar = jax.jit(make_serve_step(TINY))
+
+    def ragged_tick(cache):
+        logits, cache = ragged(params, cache, toks, jnp.asarray(pos_np))
+        return logits, cache
+
+    def grouped_tick(cache):
+        logits = None
+        for si in range(slots):          # worst case: every slot skewed
+            lg, new_cache = scalar(params, cache, toks,
+                                   jnp.int32(int(pos_np[si])))
+            sel = jnp.arange(slots) == si
+            cache = jax.tree.map(
+                lambda new, old: jnp.where(
+                    sel.reshape((1, slots) + (1,) * (new.ndim - 2)),
+                    new, old), new_cache, cache)
+            logits = lg
+        return logits, cache
+
+    def time_tick(fn, cache, iters=20, warmup=3):
+        for _ in range(warmup):
+            out, cache = fn(cache)
+        jax.block_until_ready(out)
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            out, cache = fn(cache)
+            jax.block_until_ready(out)
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts) * 1e3)
+
+    ragged_ms = time_tick(ragged_tick, cache)
+    grouped_ms = time_tick(grouped_tick, decoder.init_cache(TINY, slots,
+                                                            max_len))
+    return {
+        "ragged_tick_ms": ragged_ms,
+        "grouped_tick_ms": grouped_ms,
+        "speedup": grouped_ms / ragged_ms,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--stagger", type=int, default=2,
+                    help="ticks between request arrivals (position skew)")
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--a3", default="off",
+                    choices=["off", "conservative", "aggressive"])
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "BENCH_serve.json"))
+    args = ap.parse_args()
+
+    a3 = {"off": A3Config(), "conservative": A3Config.conservative(),
+          "aggressive": A3Config.aggressive()}[args.a3]
+    params = decoder.init_params(jax.random.PRNGKey(0), TINY)
+    res = run_staggered(params, slots=args.slots, requests=args.requests,
+                        stagger=args.stagger, prompt_len=args.prompt_len,
+                        max_new=args.max_new, max_len=args.max_len, a3=a3)
+    cmp = compare_dispatch_schemes(params, slots=args.slots,
+                                   max_len=args.max_len)
+    payload = {
+        "bench": "serve_latency_staggered",
+        "arch": TINY.name,
+        "config": {k: getattr(args, k) for k in
+                   ("slots", "requests", "stagger", "prompt_len",
+                    "max_new", "max_len", "a3")},
+        "result": res,
+        "dispatch_compare": cmp,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(json.dumps(payload, indent=2))
+
+
+if __name__ == "__main__":
+    main()

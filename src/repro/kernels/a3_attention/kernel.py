@@ -7,6 +7,14 @@ live kv blocks of each query block (``kv_indices``/``kv_counts``). The
 QKᵀ and PV MACs for dead blocks are never issued, which is the MXU-aligned
 analogue of the ASIC skipping non-candidate rows.
 
+GQA-shared KV fetch: the grid iterates over *kv* heads and the whole
+query-head group rides in the q block (``[G, bq, D]`` folded to a
+``[G·bq, D]`` MXU tile), so each live K/V block streams from HBM exactly
+once per group instead of ``group`` times — K/V traffic drops by the GQA
+factor. Candidate maps are correspondingly per kv head: the group's
+per-query-head candidate sets are **unioned** (``union_block_map_gqa``),
+which only ever adds candidates, never removes any.
+
 Post-scoring selection (§IV-D) is exact: a first (half-cost: no PV matmul)
 pass computes the true masked row max over live blocks, and the second pass
 drops every entry whose score trails it by more than ``threshold`` nats
@@ -40,12 +48,21 @@ def _block_mask(iq, jk_abs, *, block_q, block_k, seq_q, seq_k, causal,
     return mask
 
 
+def _group_mask(iq, jk_abs, *, group, block_q, block_k, seq_q, seq_k,
+                causal, window):
+    """Position mask replicated across the folded GQA group: [G·bq, bk]."""
+    m = _block_mask(iq, jk_abs, block_q=block_q, block_k=block_k,
+                    seq_q=seq_q, seq_k=seq_k, causal=causal, window=window)
+    return jnp.broadcast_to(m[None], (group, block_q, block_k)
+                            ).reshape(group * block_q, block_k)
+
+
 def _sparse_rowmax_kernel(
     idx_ref, cnt_ref,               # scalar prefetch
     q_ref, k_ref,                   # inputs
-    m_out,                          # output [1, 1, bq]
-    m_scr,                          # scratch [bq, 1]
-    *, scale, causal, window, block_q, block_k, seq_q, seq_k,
+    m_out,                          # output [1, 1, G, bq]
+    m_scr,                          # scratch [G*bq, 1]
+    *, group, scale, causal, window, block_q, block_k, seq_q, seq_k,
 ):
     b, h, iq, j = (pl.program_id(i) for i in range(4))
     nj = pl.num_programs(3)
@@ -59,19 +76,19 @@ def _sparse_rowmax_kernel(
 
     @pl.when(live)
     def _body():
-        q = q_ref[0, 0].astype(jnp.float32)
+        q = q_ref[0, 0].astype(jnp.float32).reshape(group * block_q, -1)
         k = k_ref[0, 0].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
-        mask = _block_mask(iq, jk_abs, block_q=block_q, block_k=block_k,
-                           seq_q=seq_q, seq_k=seq_k, causal=causal,
-                           window=window)
+        mask = _group_mask(iq, jk_abs, group=group, block_q=block_q,
+                           block_k=block_k, seq_q=seq_q, seq_k=seq_k,
+                           causal=causal, window=window)
         s = jnp.where(mask, s, NEG_INF)
         m_scr[...] = jnp.maximum(m_scr[...], jnp.max(s, -1, keepdims=True))
 
     @pl.when(j == nj - 1)
     def _emit():
-        m_out[0, 0] = m_scr[...][:, 0]
+        m_out[0, 0] = m_scr[...][:, 0].reshape(group, block_q)
 
 
 def _sparse_attend_kernel(
@@ -79,7 +96,8 @@ def _sparse_attend_kernel(
     q_ref, k_ref, v_ref, rowmax_ref,
     o_ref,
     l_scr, acc_scr,
-    *, scale, causal, window, threshold, block_q, block_k, seq_q, seq_k,
+    *, group, scale, causal, window, threshold, block_q, block_k,
+    seq_q, seq_k,
 ):
     b, h, iq, j = (pl.program_id(i) for i in range(4))
     nj = pl.num_programs(3)
@@ -94,15 +112,15 @@ def _sparse_attend_kernel(
 
     @pl.when(live)
     def _body():
-        q = q_ref[0, 0].astype(jnp.float32)
+        q = q_ref[0, 0].astype(jnp.float32).reshape(group * block_q, -1)
         k = k_ref[0, 0].astype(jnp.float32)
         v = v_ref[0, 0].astype(jnp.float32)
-        rm = rowmax_ref[0, 0][:, None]                   # [bq, 1]
+        rm = rowmax_ref[0, 0].reshape(group * block_q)[:, None]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
-        mask = _block_mask(iq, jk_abs, block_q=block_q, block_k=block_k,
-                           seq_q=seq_q, seq_k=seq_k, causal=causal,
-                           window=window)
+        mask = _group_mask(iq, jk_abs, group=group, block_q=block_q,
+                           block_k=block_k, seq_q=seq_q, seq_k=seq_k,
+                           causal=causal, window=window)
         if threshold is not None:
             # post-scoring selection: drop entries > threshold nats below max
             mask &= s >= rm - threshold
@@ -116,8 +134,8 @@ def _sparse_attend_kernel(
     def _emit():
         l = l_scr[...]
         safe = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0, 0] = jnp.where(l == 0.0, 0.0,
-                                acc_scr[...] / safe).astype(o_ref.dtype)
+        out = jnp.where(l == 0.0, 0.0, acc_scr[...] / safe)
+        o_ref[0, 0] = out.reshape(group, block_q, -1).astype(o_ref.dtype)
 
 
 @functools.partial(
@@ -129,8 +147,8 @@ def a3_sparse_attention(
     q: jax.Array,                   # [B, Hq, Sq, D]
     k: jax.Array,                   # [B, Hkv, Sk, D]
     v: jax.Array,                   # [B, Hkv, Sk, Dv]
-    kv_indices: jax.Array,          # [B, Hq, nq_blocks, max_blocks] int32
-    kv_counts: jax.Array,           # [B, Hq, nq_blocks] int32
+    kv_indices: jax.Array,          # [B, Hkv|Hq, nq_blocks, max_blocks] int32
+    kv_counts: jax.Array,           # [B, Hkv|Hq, nq_blocks] int32
     *,
     threshold: Optional[float] = None,
     causal: bool = True,
@@ -140,6 +158,12 @@ def a3_sparse_attention(
     block_k: int = 128,
     interpret: bool = False,
 ) -> jax.Array:
+    """Block-sparse A³ attention with GQA-folded KV streaming.
+
+    ``kv_indices``/``kv_counts`` are per *kv* head. Per-query-head maps
+    (head dim ``Hq``) are accepted for convenience and are unioned across
+    each GQA group first (a superset: candidates are only ever added).
+    """
     b, hq, sq, d = q.shape
     _, hkv, sk, dv = v.shape
     group = hq // hkv
@@ -147,69 +171,75 @@ def a3_sparse_attention(
         scale = d ** -0.5
     bq, bk = min(block_q, sq), min(block_k, sk)
     assert sq % bq == 0 and sk % bk == 0
-    nq = sq // bq
+    nq, nk = sq // bq, sk // bk
+    assert kv_counts.shape[:2] in ((b, hkv), (b, hq))
+    if kv_indices.shape[1] == hq and group > 1:
+        kv_indices, kv_counts = union_block_map_gqa(kv_indices, kv_counts,
+                                                    group, nk)
     maxb = kv_indices.shape[-1]
-    assert kv_indices.shape == (b, hq, nq, maxb)
-    assert kv_counts.shape == (b, hq, nq)
+    assert kv_indices.shape == (b, hkv, nq, maxb)
+    assert kv_counts.shape == (b, hkv, nq)
 
-    grid = (b, hq, nq, maxb)
+    # grid over kv heads: each live K/V block is fetched once per GQA
+    # group (the query-head group is folded into the q block).
+    grid = (b, hkv, nq, maxb)
+    qg = q.reshape(b, hkv, group, sq, d)
 
     def q_map(b_, h, iq, j, idx, cnt):
-        return (b_, h, iq, 0)
+        return (b_, h, 0, iq, 0)
 
     def kv_map(b_, h, iq, j, idx, cnt):
-        return (b_, h // group, idx[b_, h, iq, j], 0)
+        return (b_, h, idx[b_, h, iq, j], 0)
 
     def rm_map(b_, h, iq, j, idx, cnt):
-        return (b_, h, iq)
+        return (b_, h, 0, iq)
+
+    kw = dict(group=group, scale=scale, causal=causal, window=window,
+              block_q=bq, block_k=bk, seq_q=sq, seq_k=sk)
 
     # ---- pass 1: true row max over live candidate blocks ----
     rowmax = pl.pallas_call(
-        functools.partial(
-            _sparse_rowmax_kernel, scale=scale, causal=causal, window=window,
-            block_q=bq, block_k=bk, seq_q=sq, seq_k=sk),
+        functools.partial(_sparse_rowmax_kernel, **kw),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, 1, bq, d), q_map),
+                pl.BlockSpec((1, 1, group, bq, d), q_map),
                 pl.BlockSpec((1, 1, bk, d), kv_map),
             ],
-            out_specs=pl.BlockSpec((1, 1, bq), rm_map),
-            scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32)],
+            out_specs=pl.BlockSpec((1, 1, group, bq), rm_map),
+            scratch_shapes=[pltpu.VMEM((group * bq, 1), jnp.float32)],
         ),
-        out_shape=jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, sq), jnp.float32),
         interpret=interpret,
-    )(kv_indices, kv_counts, q, k)
+    )(kv_indices, kv_counts, qg, k)
 
     # ---- pass 2: post-scoring mask + weighted sum ----
     out = pl.pallas_call(
-        functools.partial(
-            _sparse_attend_kernel, scale=scale, causal=causal, window=window,
-            threshold=threshold, block_q=bq, block_k=bk, seq_q=sq, seq_k=sk),
+        functools.partial(_sparse_attend_kernel, threshold=threshold, **kw),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, 1, bq, d), q_map),
+                pl.BlockSpec((1, 1, group, bq, d), q_map),
                 pl.BlockSpec((1, 1, bk, d), kv_map),
                 pl.BlockSpec((1, 1, bk, dv), kv_map),
-                pl.BlockSpec((1, 1, bq), rm_map),
+                pl.BlockSpec((1, 1, group, bq), rm_map),
             ],
-            out_specs=pl.BlockSpec((1, 1, bq, dv), q_map),
+            out_specs=pl.BlockSpec((1, 1, group, bq, dv), q_map),
             scratch_shapes=[
-                pltpu.VMEM((bq, 1), jnp.float32),
-                pltpu.VMEM((bq, dv), jnp.float32),
+                pltpu.VMEM((group * bq, 1), jnp.float32),
+                pltpu.VMEM((group * bq, dv), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((b, hq, sq, dv), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, sq, dv), q.dtype),
         interpret=interpret,
-    )(kv_indices, kv_counts, q, k, v, rowmax)
-    return out
+    )(kv_indices, kv_counts, qg, k, v, rowmax)
+    return out.reshape(b, hq, sq, dv)
 
 
 def build_block_map(
-    block_mask: jax.Array,          # [B, Hq, nq, nk] bool
+    block_mask: jax.Array,          # [B, H, nq, nk] bool
     max_blocks: Optional[int] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Pack a boolean block mask into (kv_indices, kv_counts) for the kernel.
@@ -228,3 +258,37 @@ def build_block_map(
         idx, 0)
     counts = jnp.minimum(counts, max_blocks)
     return idx, counts
+
+
+def block_map_to_mask(kv_indices: jax.Array, kv_counts: jax.Array,
+                      nk: int) -> jax.Array:
+    """Inverse of :func:`build_block_map`: expand (indices, counts) back
+    to a dense [B, H, nq, nk] boolean block mask."""
+    b, h, nq, maxb = kv_indices.shape
+    live = jnp.arange(maxb)[None, None, None, :] < kv_counts[..., None]
+    bm = jnp.zeros((b, h, nq, nk), dtype=bool)
+    bi, hi, qi = jnp.meshgrid(jnp.arange(b), jnp.arange(h), jnp.arange(nq),
+                              indexing="ij")
+    bi = jnp.broadcast_to(bi[..., None], kv_indices.shape)
+    hi = jnp.broadcast_to(hi[..., None], kv_indices.shape)
+    qi = jnp.broadcast_to(qi[..., None], kv_indices.shape)
+    return bm.at[bi, hi, qi, kv_indices].max(live)
+
+
+def union_block_map_gqa(
+    kv_indices: jax.Array,          # [B, Hq, nq, maxb]
+    kv_counts: jax.Array,           # [B, Hq, nq]
+    group: int,
+    nk: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Union per-query-head candidate block maps across each GQA group.
+
+    The folded kernel streams each kv block once per *group*, so the map
+    must be per kv head; the union is the superset that preserves every
+    head's candidates (never drops attention an individual head wanted).
+    """
+    b, hq_, nq, _ = kv_indices.shape
+    hkv = hq_ // group
+    bm = block_map_to_mask(kv_indices, kv_counts, nk)
+    bm = bm.reshape(b, hkv, group, nq, nk).any(axis=2)
+    return build_block_map(bm)

@@ -22,8 +22,10 @@ def candidate_block_map_for_heads(
     k: jax.Array,                   # [B, Hkv, Sk, D]
     cfg: A3Config,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Run greedy candidate selection per (batch, head, query) and reduce to
-    kv-block granularity. Returns (kv_indices, kv_counts)."""
+    """Run greedy candidate selection per (batch, head, query), reduce to
+    kv-block granularity, and union across each GQA group — the kernel
+    streams K/V per kv head, so the map is per kv head too. Returns
+    (kv_indices [B, Hkv, nq, maxb], kv_counts [B, Hkv, nq])."""
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
     group = hq // hkv
@@ -40,6 +42,7 @@ def candidate_block_map_for_heads(
     bq, bk = min(cfg.block_q, sq), min(cfg.block_k, sk)
     nq, nk = sq // bq, sk // bk
     bm = masks.reshape(b, hq, nq, bq, nk, bk).any(axis=(3, 5))
+    bm = bm.reshape(b, hkv, group, nq, nk).any(axis=2)   # GQA union
     return build_block_map(bm)
 
 

@@ -4,6 +4,11 @@ Implements the *block-dilated* candidate semantics the kernel computes: a
 key position participates iff its kv block is live for the query's block,
 the causal/window mask admits it, and (optionally) its score is within
 ``threshold`` nats of the row max over participating positions.
+
+Matches the kernel's GQA contract: candidate maps are per kv head (every
+query head in a group shares its kv head's — unioned — map). Per-query-
+head maps are accepted and unioned across the group first, exactly as the
+kernel does.
 """
 from __future__ import annotations
 
@@ -16,8 +21,8 @@ def a3_sparse_attention_ref(
     q: jnp.ndarray,                 # [B, Hq, Sq, D]
     k: jnp.ndarray,                 # [B, Hkv, Sk, D]
     v: jnp.ndarray,                 # [B, Hkv, Sk, Dv]
-    kv_indices: jnp.ndarray,        # [B, Hq, nq, maxb] int32
-    kv_counts: jnp.ndarray,         # [B, Hq, nq] int32
+    kv_indices: jnp.ndarray,        # [B, Hkv|Hq, nq, maxb] int32
+    kv_counts: jnp.ndarray,         # [B, Hkv|Hq, nq] int32
     *,
     threshold: Optional[float] = None,
     causal: bool = True,
@@ -26,24 +31,24 @@ def a3_sparse_attention_ref(
     block_q: int = 128,
     block_k: int = 128,
 ) -> jnp.ndarray:
+    from repro.kernels.a3_attention.kernel import (
+        block_map_to_mask,
+        union_block_map_gqa,
+    )
+
     b, hq, sq, d = q.shape
     _, hkv, sk, dv = v.shape
     group = hq // hkv
     bq, bk = min(block_q, sq), min(block_k, sk)
     nq, nk = sq // bq, sk // bk
-    maxb = kv_indices.shape[-1]
     if scale is None:
         scale = d ** -0.5
 
-    # expand (indices, counts) back to a dense [B, Hq, nq, nk] block mask
-    live = jnp.arange(maxb)[None, None, None, :] < kv_counts[..., None]
-    bm = jnp.zeros((b, hq, nq, nk), dtype=bool)
-    bi, hi, qi = jnp.meshgrid(jnp.arange(b), jnp.arange(hq), jnp.arange(nq),
-                              indexing="ij")
-    bi = jnp.broadcast_to(bi[..., None], kv_indices.shape)
-    hi = jnp.broadcast_to(hi[..., None], kv_indices.shape)
-    qi = jnp.broadcast_to(qi[..., None], kv_indices.shape)
-    bm = bm.at[bi, hi, qi, kv_indices].max(live)
+    if kv_indices.shape[1] == hq and group > 1:
+        kv_indices, kv_counts = union_block_map_gqa(kv_indices, kv_counts,
+                                                    group, nk)
+    bm = block_map_to_mask(kv_indices, kv_counts, nk)   # [B, Hkv, nq, nk]
+    bm = jnp.repeat(bm, group, axis=1)                  # [B, Hq, nq, nk]
 
     # element-level mask
     elem = jnp.repeat(jnp.repeat(bm, bq, axis=2), bk, axis=3)  # [B,Hq,Sq,Sk]

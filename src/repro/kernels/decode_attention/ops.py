@@ -29,6 +29,7 @@ def a3_decode_attention(
     *,
     use_kernel: bool = False,
     interpret: bool = False,
+    exact_two_pass: bool = False,
 ) -> jax.Array:
     b, hq, d = q.shape
     _, hkv, s_len, _ = k.shape
@@ -62,7 +63,8 @@ def a3_decode_attention(
 
     if use_kernel:
         return decode_attention(q, k, v, mask, threshold=thr,
-                                interpret=interpret)
+                                interpret=interpret,
+                                exact_two_pass=exact_two_pass)
     return decode_attention_ref(q, k, v, mask, threshold=thr)
 
 

@@ -191,11 +191,16 @@ class HloModule:
                 out_elems = 1
                 for d in rdims:
                     out_elems *= d
-                # contracting size from lhs operand + dims attribute
-                ops = re.findall(r"%?([\w.\-]+)",
-                                 rhs[dm.end():].split(")")[0])
-                lhs_t = self.result_type.get(ops[0], "") if ops else ""
-                lhs_shapes = _shape_dims(lhs_t)
+                # contracting size from the lhs operand + dims attribute.
+                # Newer HLO prints operand types inline
+                # (``dot(f32[64,128]{1,0} %lhs, ...)``) — prefer those;
+                # fall back to the named operand's recorded result type.
+                args = rhs[dm.end():].split(")")[0]
+                lhs_shapes = _shape_dims(args)
+                if not lhs_shapes:
+                    ops = re.findall(r"%?([\w.\-]+)", args)
+                    lhs_t = self.result_type.get(ops[0], "") if ops else ""
+                    lhs_shapes = _shape_dims(lhs_t)
                 cdim = re.search(r"lhs_contracting_dims=\{([0-9,]+)\}", rhs)
                 csize = 1
                 if lhs_shapes and cdim:

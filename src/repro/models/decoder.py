@@ -422,14 +422,26 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 # decode step
 # ---------------------------------------------------------------------------
 
+def _ring_slot_positions(w: int, pos: jax.Array) -> jax.Array:
+    """Position held by each ring slot after writing position ``pos``.
+
+    Slot s holds position p(s) = largest p' <= pos with p' % w == s.
+    ``pos`` may be a scalar (-> [w]) or a per-batch vector [B] (-> [B, w]).
+    """
+    slots = jnp.arange(w, dtype=jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)[..., None]
+    return pos - jnp.mod(pos - slots, w)
+
+
 def _ring_valid_mask(w: int, pos: jax.Array, window: int) -> jax.Array:
     """Validity of ring slots after writing position ``pos`` at pos % w.
 
-    Slot s holds position p(s) = largest p' <= pos with p' % w == s.
-    Valid iff p(s) >= 0 (written) and p(s) > pos - window.
+    Valid iff p(s) >= 0 (written) and p(s) > pos - window. ``pos`` may be
+    scalar or per-batch [B] (ragged decode); the mask gains a matching
+    leading batch dim.
     """
-    slots = jnp.arange(w, dtype=jnp.int32)
-    slot_pos = pos - jnp.mod(pos - slots, w)
+    slot_pos = _ring_slot_positions(w, pos)
+    pos = jnp.asarray(pos, jnp.int32)[..., None]
     return (slot_pos >= 0) & (slot_pos > pos - window)
 
 
@@ -440,18 +452,21 @@ def _attn_decode_block(lp: Params, cache: Dict[str, jax.Array], h: jax.Array,
     b = h.shape[0]
     hd = cfg.resolved_head_dim
     hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
-    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    positions = pos[:, None]                                   # [B, 1]
     q, k, v = attention_qkv(lp["attn"], hn, positions, cfg.num_heads,
                             cfg.num_kv_heads, hd, cfg.rope_theta)
     q = shard_act(q, "q")
     w = cache["k"].shape[2]
-    slot = jnp.mod(pos, w)
-    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=2)
-    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=2)
+    # per-slot ring write: each sequence writes its own token at its own
+    # ring slot (ragged continuous batching — one dispatch serves slots
+    # at arbitrary position skew).
+    slot = jnp.mod(pos, w)                                     # [B]
+    bidx = jnp.arange(b, dtype=jnp.int32)
+    kc = cache["k"].at[bidx, :, slot].set(k[:, :, 0])
+    vc = cache["v"].at[bidx, :, slot].set(v[:, :, 0])
     kc = shard_act(kc, "kv_cache")
     vc = shard_act(vc, "kv_cache")
-    valid = _ring_valid_mask(w, pos, seg.window)               # [w]
-    valid = jnp.broadcast_to(valid[None], (b, w))
+    valid = _ring_valid_mask(w, pos, seg.window)               # [B, w]
     # A^3 approximate decode only on global-attention layers: windowed
     # layers already bound the search (DESIGN.md SS5).
     use_a3 = a3.mode != A3Mode.OFF and seg.window >= FULL_WINDOW
@@ -465,9 +480,8 @@ def _attn_decode_block(lp: Params, cache: Dict[str, jax.Array], h: jax.Array,
         from repro.core.candidate_selection import SortedKeys
         from repro.kernels.decode_attention.ops import \
             a3_decode_attention_compact
-        slots = jnp.arange(w, dtype=jnp.int32)
-        slot_pos = pos - jnp.mod(pos - slots, w)
-        fresh = slot_pos[None, :] >= cache["sorted_upto"][:, None]  # [B, w]
+        slot_pos = _ring_slot_positions(w, pos)                 # [B, w]
+        fresh = slot_pos >= cache["sorted_upto"][:, None]       # [B, w]
         sk = SortedKeys(values=shard_act(cache["sk_vals"], "kv_cache"),
                         rows=shard_act(cache["sk_rows"], "kv_cache"))
         o = a3_decode_attention_compact(
@@ -532,17 +546,25 @@ def decode_step(
     cfg: ModelConfig,
     cache: Dict[str, Any],
     token: Optional[jax.Array] = None,          # [B] int32
-    pos: jax.Array = None,                      # scalar int32 position
+    pos: jax.Array = None,                      # int32 position: scalar or [B]
     *,
     input_embed: Optional[jax.Array] = None,    # [B, D]
     a3: A3Config = A3Config(),
     use_kernel: bool = False,
 ) -> Tuple[jax.Array, Dict[str, Any]]:
-    """One autoregressive step -> (logits [B, Vp], new cache)."""
+    """One autoregressive step -> (logits [B, Vp], new cache).
+
+    ``pos`` may be a scalar (all sequences at the same position) or a
+    per-sequence vector [B] (*ragged* decode): each sequence writes its
+    token at its own ring slot and masks its own valid window, so a
+    continuous-batching engine can advance slots at arbitrary position
+    skew in a single dispatch.
+    """
     if input_embed is not None:
         h = input_embed[:, None, :].astype(jnp.dtype(cfg.dtype))
     else:
         h = embed_tokens(params, cfg, token[:, None])
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (h.shape[0],))
     new_cache: Dict[str, Any] = {}
     _RO = ("sk_vals", "sk_rows", "sorted_upto")
     for si, seg in enumerate(build_segments(cfg)):

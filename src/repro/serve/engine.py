@@ -6,6 +6,22 @@ into a free slot (per-slot prefill keeps the batched decode loop hot);
 every ``decode`` call advances all active slots by one token. Slots whose
 request finished free up immediately — the decode batch never drains.
 
+Hot-path design (the tick is the latency unit):
+
+* **One dispatch per tick.** ``decode_step`` takes a per-slot position
+  vector, so slots at arbitrary position skew (staggered arrivals,
+  different prompt lengths) advance in a *single* jitted call — there is
+  no group-by-position Python loop and no O(cache) ``jnp.where`` merge.
+  ``stats["decode_dispatches"]`` counts jitted decode dispatches; it
+  equals ``stats["decode_steps"]`` (ticks that advanced) by construction.
+* **Cache donation.** The decode jit donates the KV cache argument
+  (``donate_argnums``, as train/step.py does for the train state), so
+  the ring buffers are updated in place instead of copied each tick —
+  decode stays one HBM sweep of the cache.
+* **One host read per tick.** ``_maybe_resort`` fetches all segments'
+  ``sorted_upto`` watermarks in a single ``device_get`` and batches the
+  re-sorts of all due slots per segment.
+
 A^3 state at serve time: the paper's "comprehension-time" preprocessing
 maps to prefill — the prompt's keys are column-sorted once per slot and
 reused across all decode steps (amortization argument of SSIV-C). Tokens
@@ -35,7 +51,7 @@ def make_serve_step(
     *,
     use_kernel: bool = False,
 ) -> Callable:
-    """Returns step(params, cache, token [B], pos scalar) ->
+    """Returns step(params, cache, token [B], pos scalar or [B]) ->
     (logits [B, Vp], new_cache)."""
 
     def step(params, cache, token, pos):
@@ -74,12 +90,16 @@ class ServeEngine:
         self.slots = [SlotState() for _ in range(slots)]
         self.cache = decoder.init_cache(cfg, slots, max_len,
                                         a3=self._use_a3)
-        self._decode = jax.jit(make_serve_step(cfg, a3))
+        # donate the cache argument: ring buffers update in place (no
+        # full-cache copy per tick; the jit aliases input to output).
+        self._decode = jax.jit(make_serve_step(cfg, a3),
+                               donate_argnums=(1,))
         self._queue: List[Request] = []
         self._done: Dict[int, List[int]] = {}
         self._uid = 0
         self.greedy = greedy
-        self.stats = {"prefill_tokens": 0, "decode_steps": 0, "resorts": 0}
+        self.stats = {"prefill_tokens": 0, "decode_steps": 0,
+                      "decode_dispatches": 0, "resorts": 0}
 
     # -- public API ---------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
@@ -103,26 +123,40 @@ class ServeEngine:
         """Re-sort a slot's key columns when the exact-tail (tokens
         written since the last sort) grows past ``resort_every`` — the
         serving-time analogue of the paper's comprehension-time
-        preprocessing, amortized over ``resort_every`` decode steps."""
-        for si, slot in enumerate(self.slots):
-            if not slot.active:
+        preprocessing, amortized over ``resort_every`` decode steps.
+
+        All segments' ``sorted_upto`` watermarks come back in one
+        ``device_get`` (one host read per tick), and due slots are
+        re-sorted together per segment (one batched sort + scatter)."""
+        active = [si for si, s in enumerate(self.slots) if s.active]
+        if not active:
+            return
+        upto_tree = {name: sc["sorted_upto"]
+                     for name, sc in self.cache.items() if "sk_vals" in sc}
+        if not upto_tree:
+            return
+        upto_host = jax.device_get(upto_tree)      # single host read
+        from repro.core.candidate_selection import sort_key_columns
+        for seg_name, upto in upto_host.items():
+            due = [si for si in active
+                   if self.slots[si].pos - int(upto[0, si])
+                   >= self.resort_every]
+            if not due:
                 continue
-            for seg_name, seg_cache in self.cache.items():
-                if "sk_vals" not in seg_cache:
-                    continue
-                upto = int(jax.device_get(seg_cache["sorted_upto"][0, si]))
-                if slot.pos - upto < self.resort_every:
-                    continue
-                from repro.core.candidate_selection import sort_key_columns
-                k_slot = seg_cache["k"][:, si]          # [L, Hkv, W, D]
-                sk = jax.vmap(jax.vmap(sort_key_columns))(k_slot)
-                self.cache[seg_name]["sk_vals"] = \
-                    seg_cache["sk_vals"].at[:, si].set(sk.values)
-                self.cache[seg_name]["sk_rows"] = \
-                    seg_cache["sk_rows"].at[:, si].set(sk.rows)
-                self.cache[seg_name]["sorted_upto"] = \
-                    seg_cache["sorted_upto"].at[:, si].set(slot.pos)
-                self.stats["resorts"] += 1
+            seg_cache = self.cache[seg_name]
+            idx = jnp.asarray(due, jnp.int32)
+            k_due = seg_cache["k"][:, idx]          # [L, n, Hkv, W, D]
+            sk = jax.vmap(jax.vmap(jax.vmap(sort_key_columns)))(k_due)
+            new_upto = jnp.asarray([self.slots[si].pos for si in due],
+                                   jnp.int32)
+            self.cache[seg_name] = {
+                **seg_cache,
+                "sk_vals": seg_cache["sk_vals"].at[:, idx].set(sk.values),
+                "sk_rows": seg_cache["sk_rows"].at[:, idx].set(sk.rows),
+                "sorted_upto": seg_cache["sorted_upto"].at[:, idx].set(
+                    new_upto[None]),
+            }
+            self.stats["resorts"] += len(due)
 
     def run_to_completion(self, max_ticks: int = 10_000):
         ticks = 0
@@ -160,46 +194,31 @@ class ServeEngine:
         self.cache = jax.tree.map(write, self.cache, pcache)
 
     def _advance(self):
-        active = [s for s in self.slots if s.active]
+        active = [si for si, s in enumerate(self.slots) if s.active]
         if not active:
             return
-        # batched decode over all slots (inactive slots decode garbage,
-        # ignored). all slots share one pos per call -> use max; per-slot
-        # positions differ, so decode per unique pos group.
-        groups: Dict[int, List[int]] = {}
-        for si, s in enumerate(self.slots):
-            if s.active:
-                groups.setdefault(s.pos, []).append(si)
-        for pos, sis in groups.items():
-            tokens = np.zeros((len(self.slots),), np.int32)
-            for si in sis:
-                tokens[si] = self.slots[si].generated[-1]
-            logits, new_cache = self._decode(
-                self.params, self.cache, jnp.asarray(tokens),
-                jnp.int32(pos))
-            self.stats["decode_steps"] += 1
-            # merge: only slots in this group take the new cache
-            sel = np.zeros((len(self.slots),), bool)
-            for si in sis:
-                sel[si] = True
-            selj = jnp.asarray(sel)
-
-            def merge(new, old):
-                b_axis = 1  # caches are [L, B, ...]
-                shape = [1] * new.ndim
-                shape[b_axis] = len(self.slots)
-                m = selj.reshape(shape)
-                return jnp.where(m, new, old)
-
-            self.cache = jax.tree.map(merge, new_cache, self.cache)
-            nxt = np.asarray(jnp.argmax(logits, -1))
-            for si in sis:
-                slot = self.slots[si]
-                slot.generated.append(int(nxt[si]))
-                slot.pos += 1
-                slot.budget -= 1
-                if slot.budget <= 0 or slot.pos >= self.max_len - 1:
-                    self._finish(si)
+        # ragged batched decode: every active slot advances in ONE jitted
+        # dispatch, each writing its own ring slot at its own position.
+        # Inactive slots decode garbage at pos 0 (ignored; their cache
+        # rows are fully overwritten at admit).
+        n = len(self.slots)
+        tokens = np.zeros((n,), np.int32)
+        pos = np.zeros((n,), np.int32)
+        for si in active:
+            tokens[si] = self.slots[si].generated[-1]
+            pos[si] = self.slots[si].pos
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(pos))
+        self.stats["decode_steps"] += 1
+        self.stats["decode_dispatches"] += 1
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        for si in active:
+            slot = self.slots[si]
+            slot.generated.append(int(nxt[si]))
+            slot.pos += 1
+            slot.budget -= 1
+            if slot.budget <= 0 or slot.pos >= self.max_len - 1:
+                self._finish(si)
 
     def _finish(self, si: int):
         slot = self.slots[si]

@@ -1,15 +1,53 @@
-"""Test helpers: run a snippet in a subprocess with N host devices.
+"""Test helpers: run a snippet in a subprocess with N host devices, and
+an optional-``hypothesis`` shim.
 
 Multi-device tests (sharding rules, compression, pipeline, dry-run)
 need ``--xla_force_host_platform_device_count``, which must be set
 before jax initializes — so they run in a fresh interpreter. The parent
 test process keeps its single device.
+
+``hypothesis`` is a dev-only dependency; when it is absent, property
+tests must *skip* while the rest of their module keeps running. Import
+``given``/``settings``/``st`` from here instead of from ``hypothesis``:
+with hypothesis installed they are the real thing, without it ``given``
+turns the test into a skip.
 """
 from __future__ import annotations
 
 import os
 import subprocess
 import sys
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                    # pragma: no cover - env-dependent
+    import pytest as _pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # zero-arg replacement (no functools.wraps: pytest must not
+            # see the original signature and hunt for fixtures)
+            def skipper():
+                _pytest.skip("hypothesis not installed")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _Strategies:
+        """Stub: strategy constructors are only evaluated at decoration
+        time and never executed (the test body is replaced by a skip)."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
 
 SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                    "src")

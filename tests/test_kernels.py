@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from helpers import given, settings, st
 
 from repro.config import A3Config, A3Mode
 from repro.kernels.a3_attention.kernel import a3_sparse_attention, build_block_map
@@ -105,6 +105,54 @@ def test_a3_sparse_sweep(dtype, threshold, density):
         np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype))
 
 
+@pytest.mark.parametrize("group", [2, 4])
+@pytest.mark.parametrize("threshold", [None, 2.0])
+def test_a3_sparse_gqa_folded_matches_ref(group, threshold):
+    """GQA-folded kernel (grid over kv heads, group in the q block) ==
+    dense reference, for both per-kv-head and per-query-head (auto-
+    unioned) candidate maps."""
+    from repro.kernels.a3_attention.kernel import union_block_map_gqa
+    rng = np.random.default_rng(group * 10 + (0 if threshold is None
+                                              else int(threshold)))
+    b, hkv, s, d = 2, 2, 256, 32
+    hq = hkv * group
+    q, k, v = _qkv(rng, b, hq, hkv, s, s, d, d, jnp.float32)
+    nq = nk = s // 128
+    # per-query-head random maps with the diagonal kept live
+    bm_hq = jnp.asarray(rng.random((b, hq, nq, nk)) < 0.5)
+    bm_hq = bm_hq | jnp.eye(nq, nk, dtype=bool)[None, None]
+    idx_hq, cnt_hq = build_block_map(bm_hq)
+    out_hq = a3_sparse_attention(q, k, v, idx_hq, cnt_hq,
+                                 threshold=threshold, causal=True,
+                                 interpret=True)
+    ref_hq = a3_sparse_attention_ref(q, k, v, idx_hq, cnt_hq,
+                                     threshold=threshold, causal=True)
+    np.testing.assert_allclose(np.asarray(out_hq), np.asarray(ref_hq),
+                               rtol=2e-5, atol=2e-5)
+    # explicitly pre-unioned per-kv-head maps give the identical result
+    idx_kv, cnt_kv = union_block_map_gqa(idx_hq, cnt_hq, group, nk)
+    assert idx_kv.shape[1] == hkv and cnt_kv.shape[1] == hkv
+    out_kv = a3_sparse_attention(q, k, v, idx_kv, cnt_kv,
+                                 threshold=threshold, causal=True,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(out_kv), np.asarray(out_hq),
+                               rtol=2e-6, atol=2e-6)
+
+
+def test_a3_sparse_gqa_full_map_equals_flash():
+    """With every block live, the folded GQA kernel equals dense flash
+    attention (union changes nothing when maps are already full)."""
+    rng = np.random.default_rng(11)
+    q, k, v = _qkv(rng, 1, 4, 2, 256, 256, 32, 32, jnp.float32)
+    bm = jnp.ones((1, 2, 2, 2), dtype=bool)          # per-kv-head map
+    idx, cnt = build_block_map(bm)
+    out = a3_sparse_attention(q, k, v, idx, cnt, threshold=None,
+                              causal=True, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
 def test_a3_sparse_full_map_equals_flash():
     """With every block live and no threshold, the sparse kernel must equal
     dense flash attention."""
@@ -158,25 +206,109 @@ def test_block_map_roundtrip():
 # decode_attention
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-@pytest.mark.parametrize("b,hq,hkv,s,d,block_k", [
-    (1, 4, 1, 512, 64, 256),
-    (2, 8, 2, 1024, 64, 512),
-    (1, 16, 16, 256, 32, 128),      # MHA
-    (4, 8, 4, 2048, 128, 512),
-])
-def test_decode_attention_sweep(b, hq, hkv, s, d, block_k, dtype):
-    rng = np.random.default_rng(hash((b, hq, s)) % 2**31)
+def _decode_inputs(rng, b, hq, hkv, s, d, dtype):
     q = jnp.asarray(rng.standard_normal((b, hq, d)), dtype=dtype)
     k = jnp.asarray(rng.standard_normal((b, hkv, s, d)), dtype=dtype)
     v = jnp.asarray(rng.standard_normal((b, hkv, s, d)), dtype=dtype)
     mask = jnp.asarray(rng.random((b, hq, s)) < 0.6)
     mask = mask.at[..., 0].set(True)
+    return q, k, v, mask
+
+
+DECODE_SHAPES = [
+    (1, 4, 1, 512, 64, 256),
+    (2, 8, 2, 1024, 64, 512),
+    (1, 16, 16, 256, 32, 128),      # MHA
+    (4, 8, 4, 2048, 128, 512),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,hq,hkv,s,d,block_k", DECODE_SHAPES)
+def test_decode_attention_two_pass_sweep(b, hq, hkv, s, d, block_k, dtype):
+    """exact_two_pass=True reproduces the literal SSIV-D threshold."""
+    rng = np.random.default_rng(hash((b, hq, s)) % 2**31)
+    q, k, v, mask = _decode_inputs(rng, b, hq, hkv, s, d, dtype)
     out = decode_attention(q, k, v, mask, threshold=2.0, block_k=block_k,
-                           interpret=True)
+                           interpret=True, exact_two_pass=True)
     ref = decode_attention_ref(q, k, v, mask, threshold=2.0)
     np.testing.assert_allclose(
         np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,hq,hkv,s,d,block_k", DECODE_SHAPES)
+def test_decode_attention_fused_no_threshold_exact(b, hq, hkv, s, d,
+                                                   block_k, dtype):
+    """The fused single-pass kernel is exact when no threshold is set."""
+    rng = np.random.default_rng(hash((b, hq, s)) % 2**31)
+    q, k, v, mask = _decode_inputs(rng, b, hq, hkv, s, d, dtype)
+    out = decode_attention(q, k, v, mask, threshold=None, block_k=block_k,
+                           interpret=True)
+    ref = decode_attention_ref(q, k, v, mask, threshold=None)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def _fused_threshold_ref(q, k, v, mask, threshold, block_k):
+    """jnp simulation of the fused kernel's running-max threshold
+    semantics: blocks stream in order, each tested against the max seen
+    so far — the documented superset relaxation of SSIV-D."""
+    b, hq, d = q.shape
+    _, hkv, s, dv = v.shape
+    group = hq // hkv
+    scale = d ** -0.5
+    kq = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vq = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    sc = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kq) * scale
+    sc = jnp.where(mask, sc, -jnp.inf)
+    nb = s // block_k
+    blocks = sc.reshape(b, hq, nb, block_k)
+    run_max = jax.lax.cummax(jnp.max(blocks, axis=-1), axis=2)  # [B,H,nb]
+    keep = mask.reshape(b, hq, nb, block_k) & \
+        (blocks >= run_max[..., None] - threshold)
+    keep = keep.reshape(b, hq, s)
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(keep, jnp.exp(sc - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    w = p / jnp.maximum(l, 1e-30)
+    return jnp.einsum("bhk,bhkd->bhd", w, vq).astype(q.dtype), keep
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,d,block_k", DECODE_SHAPES[:2])
+def test_decode_attention_fused_threshold_semantics(b, hq, hkv, s, d,
+                                                    block_k):
+    """Fused threshold path == the running-max simulation, keeps a
+    superset of the exact-threshold entries, and its output delta vs the
+    exact pass is bounded by the relaxation band's weight mass."""
+    rng = np.random.default_rng(hash((b, s)) % 2**31)
+    thr = 2.0
+    q, k, v, mask = _decode_inputs(rng, b, hq, hkv, s, d, jnp.float32)
+    out = decode_attention(q, k, v, mask, threshold=thr, block_k=block_k,
+                           interpret=True)
+    sim, keep_relaxed = _fused_threshold_ref(q, k, v, mask, thr, block_k)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(sim),
+                               rtol=2e-5, atol=2e-5)
+
+    # superset property: every entry the exact pass keeps is kept
+    group = hq // hkv
+    kq = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    sc = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kq) * d ** -0.5
+    sc = jnp.where(mask, sc, -jnp.inf)
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    keep_exact = mask & (sc >= m - thr)
+    assert bool(jnp.all(keep_relaxed | ~keep_exact))
+
+    # bounded delta: extra entries each carry relative weight < exp(-thr),
+    # so ||fused - exact||_inf <= extra_mass / (exact_mass) * 2 * |v|_max
+    exact = decode_attention_ref(q, k, v, mask, threshold=thr)
+    p = jnp.exp(sc - m)
+    extra = jnp.sum(jnp.where(keep_relaxed & ~keep_exact, p, 0.0), -1)
+    base = jnp.sum(jnp.where(keep_exact, p, 0.0), -1)
+    bound = (2.0 * extra / base)[..., None] * float(jnp.abs(v).max())
+    delta = jnp.abs(out.astype(jnp.float32) - exact.astype(jnp.float32))
+    assert bool(jnp.all(delta <= bound + 1e-5))
 
 
 def test_decode_attention_empty_mask_row_is_zero():
@@ -185,6 +317,8 @@ def test_decode_attention_empty_mask_row_is_zero():
     k = jnp.asarray(rng.standard_normal((1, 1, 128, 32)), dtype=jnp.float32)
     v = jnp.asarray(rng.standard_normal((1, 1, 128, 32)), dtype=jnp.float32)
     mask = jnp.zeros((1, 2, 128), dtype=bool).at[0, 1].set(True)
-    out = decode_attention(q, k, v, mask, interpret=True, block_k=128)
-    assert float(jnp.abs(out[0, 0]).max()) == 0.0
-    assert float(jnp.abs(out[0, 1]).max()) > 0.0
+    for two_pass in (False, True):
+        out = decode_attention(q, k, v, mask, interpret=True, block_k=128,
+                               exact_two_pass=two_pass)
+        assert float(jnp.abs(out[0, 0]).max()) == 0.0
+        assert float(jnp.abs(out[0, 1]).max()) > 0.0

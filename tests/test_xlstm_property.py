@@ -7,7 +7,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from helpers import given, settings, st
 
 from repro.models import xlstm as X
 from repro.models import rglru as R
