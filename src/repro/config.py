@@ -295,10 +295,29 @@ class FaultToleranceConfig:
 
 
 @dataclass(frozen=True)
+class ServeConfig:
+    """Engine / admission-prefill knobs (``serve.engine.ServeEngine``)."""
+    slots: int = 4
+    max_len: int = 2048
+    # Admission-prefill granularity: prompts prefill in chunks of this
+    # many tokens, one ragged batched dispatch per engine tick, so a
+    # long prompt never stalls decoding slots for more than one chunk
+    # and multiple queued prompts share a single padded dispatch.
+    # None = whole-prompt prefill at admit (one dispatch per admit; the
+    # only mode for archs with recurrent blocks).
+    prefill_chunk: Optional[int] = None
+    # A^3: decode steps a slot may accumulate past its sorted_upto
+    # watermark before its key columns are re-sorted.
+    resort_every: int = 64
+    greedy: bool = True
+
+
+@dataclass(frozen=True)
 class RunConfig:
     model: ModelConfig
     shape: ShapeConfig
     a3: A3Config = field(default_factory=A3Config)
+    serve: ServeConfig = field(default_factory=ServeConfig)
     optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
     sharding: ShardingConfig = field(default_factory=ShardingConfig)
     checkpoint: CheckpointConfig = field(default_factory=CheckpointConfig)

@@ -66,12 +66,15 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
         if cfg.frontend:
             return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)}
         return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
-    # DECODE: one new token against a cache of length s
+    # DECODE: one new token against a cache of length s. ``pos`` is the
+    # per-slot position vector [B] — the sharded path lowers the same
+    # ragged continuous-batching dispatch the single-host engine runs,
+    # not a scalar-position special case.
     if cfg.frontend:
         tok = {"embed": jax.ShapeDtypeStruct((b, cfg.d_model), dt)}
     else:
         tok = {"token": jax.ShapeDtypeStruct((b,), jnp.int32)}
-    return {**tok, "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    return {**tok, "pos": jax.ShapeDtypeStruct((b,), jnp.int32)}
 
 
 def model_flops_for(cfg: ModelConfig, shape: ShapeConfig) -> float:
@@ -123,6 +126,8 @@ def lower_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh,
 def lower_decode(cfg: ModelConfig, shape: ShapeConfig, mesh,
                  sharding_cfg: ShardingConfig,
                  a3: A3Config = A3Config()):
+    """Lower the ragged decode dispatch: per-slot pos vector [B] and a
+    donated KV cache, exactly as the serving engine dispatches it."""
     from repro.models.common import activation_shardings
     from repro.sharding.rules import act_specs
     params_shape = decoder.init_params_shape(cfg)
@@ -142,7 +147,7 @@ def lower_decode(cfg: ModelConfig, shape: ShapeConfig, mesh,
                 return decoder.decode_step(params, cfg, cache, None, pos,
                                            input_embed=embed, a3=a3)
         jf = jax.jit(fn, in_shardings=(pspecs, cspecs, rep, rep),
-                     out_shardings=(None, cspecs))
+                     out_shardings=(None, cspecs), donate_argnums=(1,))
         return jf.lower(params_shape, cache_shape, spec["embed"],
                         spec["pos"])
 
@@ -151,8 +156,45 @@ def lower_decode(cfg: ModelConfig, shape: ShapeConfig, mesh,
             return decoder.decode_step(params, cfg, cache, token, pos,
                                        a3=a3)
     jf = jax.jit(fn, in_shardings=(pspecs, cspecs, rep, rep),
-                 out_shardings=(None, cspecs))
+                 out_shardings=(None, cspecs), donate_argnums=(1,))
     return jf.lower(params_shape, cache_shape, spec["token"], spec["pos"])
+
+
+def lower_prefill_chunk(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                        sharding_cfg: ShardingConfig, *,
+                        chunk: int = 256, a3: A3Config = A3Config()):
+    """Lower the ragged admission-prefill dispatch: a padded [B, chunk]
+    token block extends the per-slot caches from per-slot start
+    positions (pos [B], length [B]) — the third serving dispatch next to
+    prefill/decode, sharded over the same cache specs."""
+    from repro.models.common import activation_shardings
+    from repro.sharding.rules import act_specs
+    if cfg.frontend:
+        raise ValueError(f"{cfg.name}: chunked admission prefill takes "
+                         "token prompts; frontend archs admit whole-prompt")
+    params_shape = decoder.init_params_shape(cfg)
+    pspecs = shardings_for(param_specs(params_shape, sharding_cfg, mesh),
+                           mesh)
+    use_a3 = a3.mode != A3Mode.OFF
+    cache_shape = jax.eval_shape(
+        lambda: decoder.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                   a3=use_a3))
+    cspecs = shardings_for(cache_specs(cache_shape, shape, mesh,
+                                       sharding_cfg), mesh)
+    a_specs = act_specs(cfg, shape, mesh, sharding_cfg)
+    rep = NamedSharding(mesh, P())
+
+    def fn(params, cache, tokens, pos, length):
+        with activation_shardings(a_specs):
+            return decoder.prefill_chunk(params, cfg, cache, tokens, pos,
+                                         length, a3=use_a3)
+
+    jf = jax.jit(fn, in_shardings=(pspecs, cspecs, rep, rep, rep),
+                 out_shardings=(None, cspecs), donate_argnums=(1,))
+    b = shape.global_batch
+    tok = jax.ShapeDtypeStruct((b, chunk), jnp.int32)
+    vec = jax.ShapeDtypeStruct((b,), jnp.int32)
+    return jf.lower(params_shape, cache_shape, tok, vec, vec)
 
 
 # ---------------------------------------------------------------------------
@@ -162,6 +204,7 @@ def lower_decode(cfg: ModelConfig, shape: ShapeConfig, mesh,
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              sharding_cfg: Optional[ShardingConfig] = None,
              a3: A3Config = A3Config(),
+             prefill_chunk: Optional[int] = None,
              verbose: bool = True,
              save_hlo_dir: Optional[str] = None) -> Dict[str, Any]:
     cfg = get_arch(arch)
@@ -178,7 +221,18 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         if shape.kind == ShapeKind.TRAIN:
             lowered = lower_train(cfg, shape, mesh, sharding_cfg)
         elif shape.kind == ShapeKind.PREFILL:
-            lowered = lower_prefill(cfg, shape, mesh, sharding_cfg)
+            chunkable = bool(prefill_chunk) and not cfg.frontend and \
+                decoder.supports_chunked_prefill(cfg)
+            if prefill_chunk and not chunkable and verbose:
+                print(f"  {arch}: chunked admission unsupported "
+                      f"(frontend/recurrent); lowering whole-prompt "
+                      f"prefill")
+            if chunkable:
+                lowered = lower_prefill_chunk(cfg, shape, mesh,
+                                              sharding_cfg,
+                                              chunk=prefill_chunk, a3=a3)
+            else:
+                lowered = lower_prefill(cfg, shape, mesh, sharding_cfg)
         else:
             lowered = lower_decode(cfg, shape, mesh, sharding_cfg, a3)
         t_lower = time.time() - t0
@@ -238,6 +292,10 @@ def main() -> None:
     ap.add_argument("--select-shards", type=int, default=16,
                     help="A3 distributed-selection blocks (align with the "
                          "sharded ring: 16 = model axis, 256 = full grid)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="lower prefill cells as the chunked ragged "
+                         "admission-prefill dispatch with this chunk "
+                         "size (0 = whole-prompt prefill)")
     ap.add_argument("--out", default=None)
     ap.add_argument("--save-hlo", default=None,
                     help="directory for gzipped per-cell compiled HLO")
@@ -270,9 +328,10 @@ def main() -> None:
                 continue
             for mp in meshes:
                 try:
-                    results.append(run_cell(arch, shape_name, multi_pod=mp,
-                                            a3=a3,
-                                            save_hlo_dir=args.save_hlo))
+                    results.append(run_cell(
+                        arch, shape_name, multi_pod=mp, a3=a3,
+                        prefill_chunk=args.prefill_chunk or None,
+                        save_hlo_dir=args.save_hlo))
                 except Exception as e:   # noqa: BLE001
                     print(f"FAIL {arch} x {shape_name} "
                           f"({'2x16x16' if mp else '16x16'}): {e!r}")

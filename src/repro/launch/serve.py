@@ -12,7 +12,7 @@ import time
 import jax
 import numpy as np
 
-from repro.config import A3Config, get_arch, smoke_variant
+from repro.config import A3Config, ServeConfig, get_arch, smoke_variant
 from repro.models import decoder
 from repro.serve.engine import ServeEngine
 
@@ -26,6 +26,9 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="admission-prefill chunk size in tokens; 0 = "
+                         "whole-prompt prefill at admit")
     ap.add_argument("--a3", default="off",
                     choices=["off", "conservative", "aggressive"])
     ap.add_argument("--seed", type=int, default=0)
@@ -36,10 +39,11 @@ def main() -> None:
         cfg = smoke_variant(cfg)
     a3 = {"off": A3Config(), "conservative": A3Config.conservative(),
           "aggressive": A3Config.aggressive()}[args.a3]
+    serve = ServeConfig(slots=args.slots, max_len=args.max_len,
+                        prefill_chunk=args.prefill_chunk or None)
 
     params = decoder.init_params(jax.random.PRNGKey(args.seed), cfg)
-    engine = ServeEngine(params, cfg, slots=args.slots,
-                         max_len=args.max_len, a3=a3)
+    engine = ServeEngine.from_config(params, cfg, serve, a3=a3)
 
     rng = np.random.default_rng(args.seed)
     uids = [engine.submit(

@@ -459,11 +459,13 @@ def _attn_decode_block(lp: Params, cache: Dict[str, jax.Array], h: jax.Array,
     w = cache["k"].shape[2]
     # per-slot ring write: each sequence writes its own token at its own
     # ring slot (ragged continuous batching — one dispatch serves slots
-    # at arbitrary position skew).
-    slot = jnp.mod(pos, w)                                     # [B]
+    # at arbitrary position skew). Lanes with pos < 0 (idle/prefilling
+    # engine slots riding along in the batch) scatter out of bounds and
+    # are dropped, so mid-prefill cache rows are never clobbered.
+    slot = jnp.where(pos >= 0, jnp.mod(pos, w), w)             # [B]
     bidx = jnp.arange(b, dtype=jnp.int32)
-    kc = cache["k"].at[bidx, :, slot].set(k[:, :, 0])
-    vc = cache["v"].at[bidx, :, slot].set(v[:, :, 0])
+    kc = cache["k"].at[bidx, :, slot].set(k[:, :, 0], mode="drop")
+    vc = cache["v"].at[bidx, :, slot].set(v[:, :, 0], mode="drop")
     kc = shard_act(kc, "kv_cache")
     vc = shard_act(vc, "kv_cache")
     valid = _ring_valid_mask(w, pos, seg.window)               # [B, w]
@@ -696,6 +698,216 @@ def prefill(
 
     logits = unembed(params, cfg, h[:, -1:])[:, 0]
     return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# chunked / ragged admission prefill: extend per-slot caches in place
+# ---------------------------------------------------------------------------
+
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Chunked prefill extends KV ring buffers from an arbitrary start
+    position; recurrent blocks would need carried mid-prompt state, which
+    the chunked path does not implement — those archs admit via the
+    whole-prompt :func:`prefill`."""
+    return all(seg.kind == BlockKind.ATTENTION for seg in build_segments(cfg))
+
+
+def _attn_prefill_chunk_block(
+    lp: Params,
+    cache: Dict[str, jax.Array],      # per-layer slices: k/v [B, Hkv, w, D]
+    h: jax.Array,                     # [B, C, D]
+    positions: jax.Array,             # [B, C] absolute positions
+    valid_tok: jax.Array,             # [B, C] chunk-slot validity
+    pos: jax.Array,                   # [B] chunk start position
+    length: jax.Array,                # [B] valid tokens (0 = untouched lane)
+    sort_lanes: jax.Array,            # [B] fold this chunk into the A3 sort
+    cfg: ModelConfig,
+    seg: SegmentSpec,
+    use_a3: bool,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    b, c, _ = h.shape
+    hd = cfg.resolved_head_dim
+    hkv, group = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads
+    hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+    q, k, v = attention_qkv(lp["attn"], hn, positions, cfg.num_heads,
+                            hkv, hd, cfg.rope_theta)           # [B, H, C, D]
+    q = shard_act(q, "q")
+    k = shard_act(k, "kv")
+    v = shard_act(v, "kv")
+    ck, cv = cache["k"], cache["v"]
+    # A lane starting a new prompt (pos 0) zeroes its ring rows inside
+    # the donated dispatch — the slot may hold a finished request's rows,
+    # and whole-prompt-parity (incl. the A3 sort over the full ring)
+    # needs unwritten rows to read as zeros. Fused here, this costs no
+    # extra HBM sweep, unlike a host-side reset copy per admission.
+    fresh = ((pos == 0) & (length > 0))[:, None, None, None]
+    zero = jnp.asarray(0, ck.dtype)
+    ck = jnp.where(fresh, zero, ck)
+    cv = jnp.where(fresh, zero, cv)
+    w = ck.shape[2]
+    window = seg.window
+
+    # Attention BEFORE the ring write: chunk queries see (a) the ring as
+    # it stood before this chunk and (b) in-chunk keys, so a wrapping
+    # write can never clobber a position an earlier query still needs.
+    scale = hd ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(b, hkv, group, c, hd)
+    offs = jnp.arange(c, dtype=jnp.int32)
+    slots = jnp.arange(w, dtype=jnp.int32)
+    last_prev = pos - 1                                        # [B]
+    slot_pos = last_prev[:, None] - jnp.mod(
+        last_prev[:, None] - slots[None, :], w)                # [B, w]
+    ring_mask = (slot_pos[:, None, :] >= 0) & \
+        (slot_pos[:, None, :] > positions[:, :, None] - window)  # [B, C, w]
+    chunk_mask = (offs[None, :, None] >= offs[None, None, :]) & \
+        (offs[None, :, None] - offs[None, None, :] < window) & \
+        valid_tok[:, None, :]                                  # [B, C, C]
+    mask = jnp.concatenate([ring_mask, chunk_mask], -1)        # [B, C, w+C]
+
+    s_ring = jnp.einsum("bhgqd,bhkd->bhgqk", qf,
+                        ck.astype(jnp.float32))                # [B,Hkv,G,C,w]
+    s_chunk = jnp.einsum("bhgqd,bhkd->bhgqk", qf,
+                         k.astype(jnp.float32))                # [B,Hkv,G,C,C]
+    s = jnp.concatenate([s_ring, s_chunk], -1)
+    mb = mask[:, None, None]
+    s = jnp.where(mb, s, -1e30)
+    m = jnp.max(s, -1, keepdims=True)
+    p = jnp.where(mb, jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, -1, keepdims=True)
+    vcat = jnp.concatenate([cv, v], 2).astype(jnp.float32)     # [B,Hkv,w+C,D]
+    acc = jnp.einsum("bhgqk,bhkd->bhgqd", p, vcat)
+    o = jnp.where(l == 0.0, 0.0, acc / jnp.where(l == 0.0, 1.0, l))
+    o = o.reshape(b, cfg.num_heads, c, hd).astype(h.dtype)
+    h = h + attention_out(lp["attn"], o)
+
+    # Ragged ring write: pad slots and inactive lanes scatter to index w
+    # (out of bounds -> dropped), leaving other slots' rows untouched.
+    # When the chunk exceeds the ring (sliding windows) only the last w
+    # chunk positions land, as in whole-prompt prefill.
+    writable = valid_tok & (positions > (pos + length - 1)[:, None] - w)
+    tgt = jnp.where(writable, jnp.mod(positions, w), w)        # [B, C]
+    b2 = jnp.broadcast_to(jnp.arange(b, dtype=jnp.int32)[:, None], (b, c))
+    kc = ck.at[b2, :, tgt].set(jnp.swapaxes(k, 1, 2), mode="drop")
+    vc = cv.at[b2, :, tgt].set(jnp.swapaxes(v, 1, 2), mode="drop")
+    new_slice = {"k": kc, "v": vc}
+
+    if use_a3 and "sk_vals" in cache:
+        # incremental comprehension-time preprocessing: fold the chunk's
+        # keys into the per-column sort for lanes in ``sort_lanes``
+        # (whole-ring sort; other lanes keep their sorted state +
+        # watermark). The engine only sets sort_lanes on a prompt's
+        # final chunk — nothing reads a PREFILLING slot's sort — so the
+        # O(w log w) sort runs once per admitted prompt, as in
+        # whole-prompt prefill; lax.cond skips it entirely on ticks
+        # where no lane finishes.
+        from repro.core.candidate_selection import sort_key_columns
+
+        def _fold(_):
+            sk = jax.vmap(jax.vmap(sort_key_columns))(kc)
+            l4 = sort_lanes[:, None, None, None]
+            return (jnp.where(l4, sk.values, cache["sk_vals"]),
+                    jnp.where(l4, sk.rows, cache["sk_rows"]),
+                    jnp.where(sort_lanes, pos + length,
+                              cache["sorted_upto"]))
+
+        def _keep(_):
+            return (cache["sk_vals"], cache["sk_rows"],
+                    cache["sorted_upto"])
+
+        sk_vals, sk_rows, upto = jax.lax.cond(jnp.any(sort_lanes),
+                                              _fold, _keep, None)
+        new_slice["sk_vals"] = sk_vals
+        new_slice["sk_rows"] = sk_rows
+        new_slice["sorted_upto"] = upto
+    if seg.ffn == "dense":
+        hn = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+        h = h + ffn_apply(lp["ffn"], hn, act=cfg.act)
+    elif seg.ffn == "moe":
+        hn = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+        o2, _ = moe_apply(lp["moe"], hn, _moe_cfg(cfg))
+        h = h + o2
+    return h, new_slice
+
+
+def prefill_chunk(
+    params: Params,
+    cfg: ModelConfig,
+    cache: Dict[str, Any],
+    tokens: jax.Array,                # [B, C] int32 (ragged, zero-padded)
+    pos: jax.Array,                   # [B] int32 per-slot chunk start
+    length: jax.Array,                # [B] int32 valid tokens; 0 = skip lane
+    *,
+    a3: bool = False,
+    sort_lanes: Optional[jax.Array] = None,   # [B] bool; default: length > 0
+    update_sort: bool = True,                 # static: False = sk leaves RO
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Extend per-slot decode caches with one ragged batch of prompt chunks.
+
+    Every lane processes ``length[b]`` tokens of its prompt starting at
+    absolute position ``pos[b]`` — a single dispatch serves slots at
+    arbitrary prompt cursors (ragged admission prefill). Lanes with
+    ``length == 0`` are passed through untouched (their cache rows are
+    bit-identical on output), so decoding slots can share the dispatch
+    batch with prefilling ones. A lane at ``pos == 0`` first zeroes its
+    ring rows (a reused slot may hold a finished request's keys).
+
+    With ``a3=True``, lanes in ``sort_lanes`` fold the updated ring into
+    the per-column sorted-key matrices and advance ``sorted_upto`` to
+    ``pos + length``. The engine passes only lanes on their *final*
+    chunk (one sort per admitted prompt); the default sorts every
+    active lane's chunk, which is correct but does the sort work
+    per-chunk instead of per-prompt. ``update_sort=False`` (a *static*
+    flag — a separate jit specialization) additionally keeps the sorted
+    leaves out of the layer scan entirely, so non-final chunk ticks do
+    not pay a per-layer copy of the sorted-key cache (the same
+    read-only-leaf treatment ``decode_step`` applies).
+
+    Chunking is output-invariant: a query's attention set (positions
+    ``<= q``, within the segment window) does not depend on where chunk
+    boundaries fall, so running a prompt through any chunk split yields
+    the same cache rows and logits as :func:`prefill` up to fp
+    summation order. With ``a3=True`` the chunk's keys are folded into
+    the per-column sorted-key matrices (incremental comprehension-time
+    preprocessing) and ``sorted_upto`` advances to ``pos + length``.
+
+    Returns (logits [B, Vp] at each lane's last valid position, cache).
+    """
+    if not supports_chunked_prefill(cfg):
+        raise NotImplementedError(
+            f"chunked prefill requires attention-only segments; "
+            f"{cfg.name} has recurrent blocks — use prefill()")
+    b, c = tokens.shape
+    h = embed_tokens(params, cfg, tokens)
+    pos = jnp.asarray(pos, jnp.int32)
+    length = jnp.asarray(length, jnp.int32)
+    if sort_lanes is None:
+        sort_lanes = length > 0
+    sort_lanes = jnp.asarray(sort_lanes, bool)
+    offs = jnp.arange(c, dtype=jnp.int32)
+    positions = pos[:, None] + offs[None, :]               # [B, C]
+    valid_tok = offs[None, :] < length[:, None]            # [B, C]
+    new_cache: Dict[str, Any] = {}
+    _RO = ("sk_vals", "sk_rows", "sorted_upto")
+    for si, seg in enumerate(build_segments(cfg)):
+        seg_cache = cache[f"seg{si}"]
+        ro = {} if update_sort else \
+            {k: v for k, v in seg_cache.items() if k in _RO}
+        mut = seg_cache if update_sort else \
+            {k: v for k, v in seg_cache.items() if k not in _RO}
+
+        def body(carry, xs, seg=seg):
+            lp, cs = xs
+            out, ns = _attn_prefill_chunk_block(
+                lp, cs, carry, positions, valid_tok, pos, length,
+                sort_lanes, cfg, seg, a3)
+            return out, ns
+
+        h, new_seg = jax.lax.scan(body, h, (params[f"seg{si}"], mut))
+        new_cache[f"seg{si}"] = {**new_seg, **ro}
+    bidx = jnp.arange(b, dtype=jnp.int32)
+    last = jnp.clip(length - 1, 0, c - 1)
+    logits = unembed(params, cfg, h[bidx, last][:, None])[:, 0]
+    return logits, new_cache
 
 
 def _mlstm_with_state(p: Params, x: jax.Array, cfg: ModelConfig):

@@ -1,36 +1,56 @@
-"""Serving engine: batched prefill + decode with slot-based continuous
-batching, and the A^3 approximate decode path.
+"""Serving engine: chunked + ragged admission prefill and ragged batched
+decode with slot-based continuous batching, plus the A^3 approximate
+decode path.
 
-The engine holds a fixed number of request *slots*. New requests prefill
-into a free slot (per-slot prefill keeps the batched decode loop hot);
-every ``decode`` call advances all active slots by one token. Slots whose
-request finished free up immediately — the decode batch never drains.
+The engine holds a fixed number of request *slots*. Every engine tick
+runs the admission state machine::
 
-Hot-path design (the tick is the latency unit):
+    admit -> chunked prefill -> (A^3 re-sort) -> decode
 
-* **One dispatch per tick.** ``decode_step`` takes a per-slot position
-  vector, so slots at arbitrary position skew (staggered arrivals,
-  different prompt lengths) advance in a *single* jitted call — there is
-  no group-by-position Python loop and no O(cache) ``jnp.where`` merge.
-  ``stats["decode_dispatches"]`` counts jitted decode dispatches; it
-  equals ``stats["decode_steps"]`` (ticks that advanced) by construction.
-* **Cache donation.** The decode jit donates the KV cache argument
-  (``donate_argnums``, as train/step.py does for the train state), so
-  the ring buffers are updated in place instead of copied each tick —
-  decode stays one HBM sweep of the cache.
+* **Admit.** Queued requests claim free slots and enter the PREFILLING
+  phase with a per-slot prompt cursor. No forward pass and no cache
+  work runs at admit time — the slot's first chunk dispatch zeroes its
+  ring rows in-graph, so chunked prefill reproduces the whole-prompt
+  prefill cache state without a host-side reset copy.
+* **Chunked ragged prefill — one dispatch per tick.** All PREFILLING
+  slots advance by at most ``prefill_chunk`` prompt tokens in a *single*
+  jitted ``prefill_chunk`` dispatch: a padded ``[slots, chunk]`` token
+  block with per-slot start positions and lengths (lanes not prefilling
+  ride along with length 0 and their cache rows pass through
+  untouched). Long prompts therefore never stall decoding slots for
+  more than one chunk, and multiple queued prompts prefill together
+  instead of one ``decoder.prefill`` call per admit.
+  ``stats["prefill_dispatches"]`` counts these dispatches; it is at most
+  ``stats["ticks"]`` by construction. With ``prefill_chunk=None`` (or
+  for archs with recurrent blocks, where chunked prefill is
+  unsupported) admission falls back to one whole-prompt
+  ``decoder.prefill`` per admit.
+* **Decode — one dispatch per tick.** ``decode_step`` takes a per-slot
+  position vector, so DECODING slots at arbitrary position skew advance
+  in a single jitted call. ``stats["decode_dispatches"]`` equals
+  ``stats["decode_steps"]`` by construction.
+* **Cache donation.** Both the prefill-chunk and decode jits donate the
+  KV cache argument, so the ring buffers update in place instead of
+  being copied each tick.
 * **One host read per tick.** ``_maybe_resort`` fetches all segments'
   ``sorted_upto`` watermarks in a single ``device_get`` and batches the
-  re-sorts of all due slots per segment.
+  re-sorts of all due slots per segment. Slots still PREFILLING are
+  skipped — chunked prefill maintains their sort incrementally.
 
 A^3 state at serve time: the paper's "comprehension-time" preprocessing
-maps to prefill — the prompt's keys are column-sorted once per slot and
-reused across all decode steps (amortization argument of SSIV-C). Tokens
-generated after prefill form the *fresh tail*, always treated as
-candidates (exact attention) until a periodic re-sort folds them in.
+maps to prefill — the prompt's keys are column-sorted per slot and
+reused across all decode steps (amortization argument of SSIV-C). With
+chunked prefill the sort stays once-per-prompt: the dispatch of a
+prompt's *final* chunk folds the completed ring into the per-column
+sorted matrices and advances the ``sorted_upto`` watermark (a
+``lax.cond`` skips the sort on every other tick — nothing reads a
+PREFILLING slot's sort). Tokens generated after prefill form the
+*fresh tail*, always treated as candidates (exact attention) until a
+periodic re-sort folds them in.
 
-``make_serve_step`` builds the jitted decode step used by both the
-engine and the multi-pod dry-run (serve_step is what ``decode_*`` shapes
-lower).
+``make_serve_step`` / ``make_prefill_chunk_step`` build the jitted
+dispatches used by both the engine and the multi-pod dry-run (they are
+what the ``decode_*`` / chunked-prefill shapes lower).
 """
 from __future__ import annotations
 
@@ -41,7 +61,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import A3Config, A3Mode, ModelConfig
+from repro.config import A3Config, A3Mode, ModelConfig, ServeConfig
+from repro.core.candidate_selection import sort_key_columns
 from repro.models import decoder
 
 
@@ -61,10 +82,34 @@ def make_serve_step(
     return step
 
 
+def make_prefill_chunk_step(cfg: ModelConfig, *, a3: bool = False,
+                            update_sort: bool = True) -> Callable:
+    """Returns step(params, cache, tokens [B, C], pos [B], length [B],
+    sort_lanes [B]) -> (logits [B, Vp], new_cache) — the ragged
+    chunked-prefill dispatch. ``sort_lanes`` marks lanes on their final
+    chunk (A^3: fold the completed prompt into the column sort);
+    ``update_sort=False`` builds the cheaper specialization that treats
+    the sorted-key leaves as read-only (dispatched on ticks where no
+    lane finishes its prompt)."""
+
+    def step(params, cache, tokens, pos, length, sort_lanes):
+        return decoder.prefill_chunk(params, cfg, cache, tokens, pos,
+                                     length, a3=a3, sort_lanes=sort_lanes,
+                                     update_sort=update_sort)
+
+    return step
+
+
 class Request(NamedTuple):
     uid: int
     prompt: np.ndarray            # [S] int32
     max_new_tokens: int
+
+
+# slot phases
+IDLE = "idle"
+PREFILLING = "prefilling"
+DECODING = "decoding"
 
 
 @dataclasses.dataclass
@@ -73,20 +118,37 @@ class SlotState:
     pos: int = 0                  # next position to write
     generated: List[int] = dataclasses.field(default_factory=list)
     budget: int = 0
-    active: bool = False
+    phase: str = IDLE
+    prompt: Optional[np.ndarray] = None
+    cursor: int = 0               # prompt tokens prefilled so far
+
+    @property
+    def active(self) -> bool:
+        """Occupied (prefilling or decoding)."""
+        return self.phase != IDLE
+
+    @property
+    def decoding(self) -> bool:
+        return self.phase == DECODING
 
 
 class ServeEngine:
     """Slot-based batched serving. Single-host reference implementation —
-    the sharded path reuses make_serve_step under a mesh (launch.serve)."""
+    the sharded path reuses make_serve_step / make_prefill_chunk_step
+    under a mesh (launch.serve)."""
 
     def __init__(self, params: Any, cfg: ModelConfig, *, slots: int = 4,
                  max_len: int = 2048, a3: A3Config = A3Config(),
-                 greedy: bool = True, resort_every: int = 64):
+                 greedy: bool = True, resort_every: int = 64,
+                 prefill_chunk: Optional[int] = None):
         self.params, self.cfg, self.a3 = params, cfg, a3
         self.max_len = max_len
         self._use_a3 = a3.mode != A3Mode.OFF
         self.resort_every = resort_every
+        if prefill_chunk is not None and \
+                not decoder.supports_chunked_prefill(cfg):
+            prefill_chunk = None      # recurrent blocks: whole-prompt admit
+        self.prefill_chunk = prefill_chunk
         self.slots = [SlotState() for _ in range(slots)]
         self.cache = decoder.init_cache(cfg, slots, max_len,
                                         a3=self._use_a3)
@@ -94,27 +156,56 @@ class ServeEngine:
         # full-cache copy per tick; the jit aliases input to output).
         self._decode = jax.jit(make_serve_step(cfg, a3),
                                donate_argnums=(1,))
+        self._prefill = None
+        self._prefill_nosort = None
+        if prefill_chunk is not None:
+            self._prefill = jax.jit(
+                make_prefill_chunk_step(cfg, a3=self._use_a3),
+                donate_argnums=(1,))
+            if self._use_a3:
+                # ticks where no lane finishes its prompt skip the sort
+                # AND the per-layer sorted-key passthrough copy
+                self._prefill_nosort = jax.jit(
+                    make_prefill_chunk_step(cfg, a3=True,
+                                            update_sort=False),
+                    donate_argnums=(1,))
         self._queue: List[Request] = []
         self._done: Dict[int, List[int]] = {}
         self._uid = 0
         self.greedy = greedy
         self.stats = {"prefill_tokens": 0, "decode_steps": 0,
-                      "decode_dispatches": 0, "resorts": 0}
+                      "decode_dispatches": 0, "prefill_dispatches": 0,
+                      "ticks": 0, "resorts": 0}
+
+    @classmethod
+    def from_config(cls, params: Any, cfg: ModelConfig, serve: ServeConfig,
+                    a3: A3Config = A3Config()) -> "ServeEngine":
+        return cls(params, cfg, slots=serve.slots, max_len=serve.max_len,
+                   a3=a3, greedy=serve.greedy,
+                   resort_every=serve.resort_every,
+                   prefill_chunk=serve.prefill_chunk)
 
     # -- public API ---------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.size == 0:
+            # neither admission path supports empty prompts (chunked
+            # would fold a reused slot's stale ring into the A^3 sort;
+            # whole-prompt prefill has no last position to unembed)
+            raise ValueError("empty prompt")
         uid = self._uid
         self._uid += 1
-        self._queue.append(Request(uid, np.asarray(prompt, np.int32),
-                                   max_new_tokens))
+        self._queue.append(Request(uid, prompt, max_new_tokens))
         return uid
 
     def result(self, uid: int) -> Optional[List[int]]:
         return self._done.get(uid)
 
     def step(self):
-        """One engine tick: admit queued requests, advance decode."""
+        """One engine tick: admit -> chunked prefill -> resort -> decode."""
+        self.stats["ticks"] += 1
         self._admit()
+        self._prefill_tick()
         if self._use_a3:
             self._maybe_resort()
         self._advance()
@@ -127,8 +218,10 @@ class ServeEngine:
 
         All segments' ``sorted_upto`` watermarks come back in one
         ``device_get`` (one host read per tick), and due slots are
-        re-sorted together per segment (one batched sort + scatter)."""
-        active = [si for si, s in enumerate(self.slots) if s.active]
+        re-sorted together per segment (one batched sort + scatter).
+        PREFILLING slots are skipped: the chunked prefill dispatch
+        already maintains their sort incrementally."""
+        active = [si for si, s in enumerate(self.slots) if s.decoding]
         if not active:
             return
         upto_tree = {name: sc["sorted_upto"]
@@ -136,7 +229,6 @@ class ServeEngine:
         if not upto_tree:
             return
         upto_host = jax.device_get(upto_tree)      # single host read
-        from repro.core.candidate_selection import sort_key_columns
         for seg_name, upto in upto_host.items():
             due = [si for si in active
                    if self.slots[si].pos - int(upto[0, si])
@@ -171,22 +263,80 @@ class ServeEngine:
             if slot.active or not self._queue:
                 continue
             req = self._queue.pop(0)
-            s = len(req.prompt)
-            toks = jnp.asarray(req.prompt)[None]
-            # per-slot prefill: fill this slot's cache rows (comprehension
-            # time: includes the A^3 column sort when approximating)
-            logits, pcache = decoder.prefill(self.params, self.cfg, toks,
-                                             max_len=self.max_len,
-                                             a3=self._use_a3)
-            self._write_slot_cache(si, pcache)
-            nxt = int(jnp.argmax(logits[0]))
-            self.slots[si] = SlotState(uid=req.uid, pos=s,
-                                       generated=[nxt],
-                                       budget=req.max_new_tokens - 1,
-                                       active=True)
-            self.stats["prefill_tokens"] += s
-            if self.slots[si].budget <= 0:
-                self._finish(si)
+            if self.prefill_chunk is None:
+                self._admit_whole_prompt(si, req)
+                continue
+            # no host-side cache work at admit: the slot's first chunk
+            # dispatch zeroes its ring rows in-graph (pos == 0), so
+            # chunked prefill reproduces the whole-prompt cache state.
+            self.slots[si] = SlotState(uid=req.uid, pos=0, generated=[],
+                                       budget=req.max_new_tokens,
+                                       phase=PREFILLING,
+                                       prompt=req.prompt, cursor=0)
+
+    def _admit_whole_prompt(self, si: int, req: Request):
+        """Legacy per-admit path: one whole-prompt prefill dispatch."""
+        s = len(req.prompt)
+        toks = jnp.asarray(req.prompt)[None]
+        logits, pcache = decoder.prefill(self.params, self.cfg, toks,
+                                         max_len=self.max_len,
+                                         a3=self._use_a3)
+        self._write_slot_cache(si, pcache)
+        nxt = int(jnp.argmax(logits[0]))
+        self.slots[si] = SlotState(uid=req.uid, pos=s,
+                                   generated=[nxt],
+                                   budget=req.max_new_tokens - 1,
+                                   phase=DECODING)
+        self.stats["prefill_tokens"] += s
+        self.stats["prefill_dispatches"] += 1
+        if self.slots[si].budget <= 0:
+            self._finish(si)
+
+    def _prefill_tick(self):
+        """Advance every PREFILLING slot by one prompt chunk in a single
+        ragged padded dispatch."""
+        if self._prefill is None:
+            return
+        pre = [si for si, s in enumerate(self.slots)
+               if s.phase == PREFILLING]
+        if not pre:
+            return
+        n, c = len(self.slots), self.prefill_chunk
+        tokens = np.zeros((n, c), np.int32)
+        pos = np.zeros((n,), np.int32)
+        length = np.zeros((n,), np.int32)
+        sort_lanes = np.zeros((n,), bool)
+        takes = {}
+        for si in pre:
+            s = self.slots[si]
+            take = min(c, len(s.prompt) - s.cursor)
+            tokens[si, :take] = s.prompt[s.cursor:s.cursor + take]
+            pos[si] = s.cursor
+            length[si] = take
+            takes[si] = take
+            # A^3 sort amortization: fold into the column sort only on
+            # the prompt's final chunk (one sort per admitted prompt).
+            sort_lanes[si] = s.cursor + take >= len(s.prompt)
+        fn = self._prefill
+        if self._prefill_nosort is not None and not sort_lanes.any():
+            fn = self._prefill_nosort
+        logits, self.cache = fn(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(pos), jnp.asarray(length),
+            jnp.asarray(sort_lanes))
+        self.stats["prefill_dispatches"] += 1
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        for si in pre:
+            s = self.slots[si]
+            s.cursor += takes[si]
+            s.pos = s.cursor
+            self.stats["prefill_tokens"] += takes[si]
+            if s.cursor >= len(s.prompt):
+                s.phase = DECODING
+                s.generated = [int(nxt[si])]
+                s.budget -= 1
+                if s.budget <= 0:
+                    self._finish(si)
 
     def _write_slot_cache(self, si: int, pcache: Dict[str, Any]):
         def write(dst, src):
@@ -194,16 +344,17 @@ class ServeEngine:
         self.cache = jax.tree.map(write, self.cache, pcache)
 
     def _advance(self):
-        active = [si for si, s in enumerate(self.slots) if s.active]
+        active = [si for si, s in enumerate(self.slots) if s.decoding]
         if not active:
             return
-        # ragged batched decode: every active slot advances in ONE jitted
-        # dispatch, each writing its own ring slot at its own position.
-        # Inactive slots decode garbage at pos 0 (ignored; their cache
-        # rows are fully overwritten at admit).
+        # ragged batched decode: every DECODING slot advances in ONE
+        # jitted dispatch, each writing its own ring slot at its own
+        # position. Idle/prefilling slots ride along at pos=-1: their
+        # logits are garbage (ignored) and their ring write is dropped,
+        # so mid-prefill cache rows stay intact.
         n = len(self.slots)
         tokens = np.zeros((n,), np.int32)
-        pos = np.zeros((n,), np.int32)
+        pos = np.full((n,), -1, np.int32)
         for si in active:
             tokens[si] = self.slots[si].generated[-1]
             pos[si] = self.slots[si].pos

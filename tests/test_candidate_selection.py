@@ -57,6 +57,64 @@ def test_property_equivalence(n, d, m_frac, seed, heuristic):
     np.testing.assert_allclose(np.asarray(score_v), score_o, rtol=2e-4, atol=2e-4)
 
 
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(4, 64),
+    d=st.integers(2, 16),
+    m_frac=st.sampled_from([0.25, 0.5, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+    heuristic=st.booleans(),
+)
+def test_property_permutation_invariance(n, d, m_frac, seed, heuristic):
+    """Column-sorting is row-order-free: permuting the key rows permutes
+    the candidate mask and greedy scores, nothing else. (This is what
+    makes the sorted-key matrix a valid *comprehension-time* artifact —
+    the ring-buffer write order at serve time cannot affect selection.)"""
+    rng = np.random.default_rng(seed)
+    key, query = _random_kq(rng, n, d)
+    m = max(1, int(m_frac * n))
+    perm = rng.permutation(n)
+    sk = sort_key_columns(jnp.asarray(key))
+    mask, score = select_candidates(sk, jnp.asarray(query), m, heuristic)
+    sk_p = sort_key_columns(jnp.asarray(key[perm]))
+    mask_p, score_p = select_candidates(sk_p, jnp.asarray(query), m,
+                                        heuristic)
+    score, score_p = np.asarray(score), np.asarray(score_p)
+    np.testing.assert_allclose(score_p, score[perm], rtol=1e-5, atol=1e-6)
+    # mask = (score > 0); compare away from the boundary where fp
+    # reassociation of the scatter-adds could legitimately flip the sign
+    stable = np.abs(score[perm]) > 1e-5
+    np.testing.assert_array_equal(np.asarray(mask_p)[stable],
+                                  np.asarray(mask)[perm][stable])
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(4, 48),
+    d=st.integers(2, 12),
+    seed=st.integers(0, 2**31 - 1),
+    m_top=st.integers(1, 8),
+)
+def test_property_full_walk_superset_of_exact_topm(n, d, seed, m_top):
+    """With the full pop budget (M = n*d, heuristic off) the greedy
+    score telescopes to the exact dot product — so the candidate set
+    contains every positive-scoring row, in particular the exact top-M
+    rows of k @ q (the retrieval set A^3 must never miss)."""
+    rng = np.random.default_rng(seed)
+    key, query = _random_kq(rng, n, d)
+    sk = sort_key_columns(jnp.asarray(key))
+    mask, score = select_candidates(sk, jnp.asarray(query), n * d,
+                                    use_heuristic=False)
+    exact = key @ query
+    np.testing.assert_allclose(np.asarray(score), exact, rtol=2e-4,
+                               atol=2e-4)
+    mask = np.asarray(mask)
+    top = np.argsort(exact)[::-1][:min(m_top, n)]
+    for r in top:
+        if exact[r] > 1e-4:        # positive with fp margin
+            assert mask[r], (r, exact[r])
+
+
 def test_candidates_contain_top_scores():
     """Sanity: a key genuinely similar to the query (the retrieval case the
     paper targets) is reliably selected at the conservative M=n/2."""

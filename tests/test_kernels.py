@@ -311,6 +311,116 @@ def test_decode_attention_fused_threshold_semantics(b, hq, hkv, s, d,
     assert bool(jnp.all(delta <= bound + 1e-5))
 
 
+# ---------------------------------------------------------------------------
+# cross-family conformance sweep: every kernel family vs its oracle over
+# GQA head ratios and odd (non-block-aligned) sequence lengths
+# ---------------------------------------------------------------------------
+
+def _mlstm_gates(rng, b, h, s):
+    li = jnp.asarray(rng.standard_normal((b, h, s)) - 0.5, jnp.float32)
+    lf = jnp.asarray(jax.nn.log_sigmoid(
+        jnp.asarray(rng.standard_normal((b, h, s)) + 1.0)), jnp.float32)
+    return li, lf
+
+
+FAMILY_SWEEP = [
+    # (hq, hkv, s): GQA ratios 1/2/4/8 x odd + non-128-multiple lengths
+    (8, 8, 64),      # MHA, small
+    (4, 2, 96),      # GQA 2, non-block-multiple
+    (4, 1, 97),      # MQA, genuinely odd length
+    (8, 2, 160),     # GQA 4, non-128-multiple
+    (8, 1, 33),      # MQA 8, odd
+]
+
+
+@pytest.mark.parametrize("family", ["flash", "a3", "decode", "mlstm_chunk"])
+@pytest.mark.parametrize("hq,hkv,s", FAMILY_SWEEP)
+def test_kernel_family_matches_ref(family, hq, hkv, s):
+    """One conformance contract for all four kernel families: the Pallas
+    kernel (interpret mode) equals its pure-jnp oracle at every GQA
+    ratio and at sequence lengths that do not align with the default
+    block sizes (the kernels clamp their blocks to the sequence)."""
+    import zlib
+    # crc32, not hash(): string hashing is salted per process, and the
+    # test data must be reproducible across CI runs
+    rng = np.random.default_rng(
+        zlib.crc32(f"{family}:{hq}:{hkv}:{s}".encode()) % 2**31)
+    d = 32
+    tol = dict(rtol=3e-5, atol=3e-5)
+    if family == "flash":
+        q, k, v = _qkv(rng, 1, hq, hkv, s, s, d, d, jnp.float32)
+        out = flash_attention(q, k, v, causal=True, block_q=256,
+                              block_k=256, interpret=True)
+        ref = attention_ref(q, k, v, causal=True)
+    elif family == "a3":
+        q, k, v = _qkv(rng, 1, hq, hkv, s, s, d, d, jnp.float32)
+        bm = jnp.ones((1, hkv, 1, 1), dtype=bool)   # whole-seq block pair
+        idx, cnt = build_block_map(bm)
+        out = a3_sparse_attention(q, k, v, idx, cnt, threshold=2.0,
+                                  causal=True, block_q=256, block_k=256,
+                                  interpret=True)
+        ref = a3_sparse_attention_ref(q, k, v, idx, cnt, threshold=2.0,
+                                      causal=True, block_q=256,
+                                      block_k=256)
+    elif family == "decode":
+        q, k, v, mask = _decode_inputs(rng, 2, hq, hkv, s, d, jnp.float32)
+        out = decode_attention(q, k, v, mask, threshold=None, block_k=512,
+                               interpret=True)
+        ref = decode_attention_ref(q, k, v, mask, threshold=None)
+    else:                                           # mlstm_chunk
+        from repro.kernels.mlstm_chunk.kernel import mlstm_chunk_kernel
+        from repro.kernels.mlstm_chunk.ref import mlstm_chunk_ref
+        h = hq                                      # no GQA in mLSTM
+        q = jnp.asarray(rng.standard_normal((1, h, s, d)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((1, h, s, d)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((1, h, s, d)), jnp.float32)
+        li, lf = _mlstm_gates(rng, 1, h, s)
+        out = mlstm_chunk_kernel(q, k, v, li, lf, chunk=512,
+                                 scale=d ** -0.5, interpret=True)
+        ref = mlstm_chunk_ref(q, k, v, li, lf, scale=d ** -0.5)
+        tol = dict(rtol=2e-4, atol=2e-4)            # sequential vs chunked
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol)
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,d,block_k", DECODE_SHAPES[:2])
+def test_decode_fused_vs_exact_two_pass_bounded_delta(b, hq, hkv, s, d,
+                                                      block_k):
+    """Kernel-vs-kernel: the fused single-pass path (running-max
+    threshold relaxation) deviates from the exact two-pass kernel by at
+    most the softmax mass of the relaxation band — every extra entry the
+    fused pass keeps carries relative weight < exp(-t)."""
+    rng = np.random.default_rng(hash((b, s, d)) % 2**31)
+    thr = 2.0
+    q, k, v, mask = _decode_inputs(rng, b, hq, hkv, s, d, jnp.float32)
+    fused = decode_attention(q, k, v, mask, threshold=thr, block_k=block_k,
+                             interpret=True, exact_two_pass=False)
+    two_pass = decode_attention(q, k, v, mask, threshold=thr,
+                                block_k=block_k, interpret=True,
+                                exact_two_pass=True)
+    _, keep_relaxed = _fused_threshold_ref(q, k, v, mask, thr, block_k)
+    group = hq // hkv
+    kq = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    sc = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kq) * d ** -0.5
+    sc = jnp.where(mask, sc, -jnp.inf)
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    keep_exact = mask & (sc >= m - thr)
+    p = jnp.exp(sc - m)
+    extra = jnp.sum(jnp.where(keep_relaxed & ~keep_exact, p, 0.0), -1)
+    base = jnp.sum(jnp.where(keep_exact, p, 0.0), -1)
+    bound = (2.0 * extra / base)[..., None] * float(jnp.abs(v).max())
+    delta = jnp.abs(fused.astype(jnp.float32) - two_pass.astype(jnp.float32))
+    assert bool(jnp.all(delta <= bound + 1e-5))
+    # and the band mass itself is small: relative extra weight < exp(-t)
+    # per entry means the total deviation shrinks as t grows
+    loose = decode_attention(q, k, v, mask, threshold=8.0, block_k=block_k,
+                             interpret=True, exact_two_pass=False)
+    loose2 = decode_attention(q, k, v, mask, threshold=8.0, block_k=block_k,
+                              interpret=True, exact_two_pass=True)
+    tight_delta = float(jnp.abs(loose - loose2).max())
+    assert tight_delta <= float(delta.max()) + 1e-5
+
+
 def test_decode_attention_empty_mask_row_is_zero():
     rng = np.random.default_rng(10)
     q = jnp.asarray(rng.standard_normal((1, 2, 32)), dtype=jnp.float32)

@@ -1,0 +1,344 @@
+"""Serving conformance suite: the engine is an *oracle-checked* system.
+
+Chunked + ragged admission prefill is a pure scheduling change — it must
+not alter what the model computes. Every test here pins ``ServeEngine``
+generations against the sequential single-request reference
+(whole-prompt ``decoder.prefill`` + a scalar decode loop), across slot
+counts, admission orders, and ``prefill_chunk`` settings (including the
+whole-prompt ``None`` mode), plus the engine's dispatch-count
+invariants:
+
+* ``decode_dispatches == decode_steps``   (one ragged decode per tick)
+* ``prefill_dispatches <= ticks``         (one ragged prefill per tick)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import check, run_with_devices
+
+from repro.config import A3Config, ModelConfig
+from repro.models import decoder as dec
+from repro.serve.engine import ServeEngine
+
+TINY = ModelConfig("tiny", "dense", num_layers=2, d_model=64, num_heads=4,
+                   num_kv_heads=2, d_ff=128, vocab_size=256, head_dim=16,
+                   dtype="float32")
+MAX_LEN = 96
+MAX_NEW = 6
+PROMPT_LENS = (5, 12, 23, 31, 9)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return dec.init_params(jax.random.PRNGKey(0), TINY)
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    rng = np.random.default_rng(7)
+    return [rng.integers(0, TINY.vocab_size, size=n) for n in PROMPT_LENS]
+
+
+def _reference_generate(params, prompt, max_new, a3=A3Config()):
+    """Sequential single-request oracle: whole-prompt prefill + scalar
+    greedy decode (no batching, no chunking, no engine)."""
+    use_a3 = a3.mode.value != "off"
+    lg, cache = dec.prefill(params, TINY, jnp.asarray(prompt, jnp.int32)[None],
+                            max_len=MAX_LEN, a3=use_a3)
+    cur, pos, out = int(jnp.argmax(lg[0])), len(prompt), []
+    out.append(cur)
+    for _ in range(max_new - 1):
+        lg, cache = dec.decode_step(params, TINY, cache,
+                                    jnp.asarray([cur], jnp.int32),
+                                    jnp.int32(pos), a3=a3)
+        cur = int(jnp.argmax(lg[0]))
+        out.append(cur)
+        pos += 1
+    return out
+
+
+@pytest.fixture(scope="module")
+def refs(params, prompts):
+    return [_reference_generate(params, p, MAX_NEW) for p in prompts]
+
+
+def _assert_invariants(eng):
+    assert eng.stats["decode_dispatches"] == eng.stats["decode_steps"]
+    assert eng.stats["prefill_dispatches"] <= eng.stats["ticks"]
+
+
+def _run_engine(params, prompts, *, slots, chunk, order="upfront",
+                a3=A3Config(), resort_every=64):
+    eng = ServeEngine(params, TINY, slots=slots, max_len=MAX_LEN, a3=a3,
+                      prefill_chunk=chunk, resort_every=resort_every)
+    uids = {}
+    if order == "upfront":
+        for i, p in enumerate(prompts):
+            uids[i] = eng.submit(p, max_new_tokens=MAX_NEW)
+        eng.run_to_completion()
+    elif order == "reversed":
+        for i in reversed(range(len(prompts))):
+            uids[i] = eng.submit(prompts[i], max_new_tokens=MAX_NEW)
+        eng.run_to_completion()
+    elif order == "staggered":
+        pending = list(enumerate(prompts))
+        while pending or eng._queue or any(s.active for s in eng.slots):
+            if pending and eng.stats["ticks"] % 2 == 0:
+                i, p = pending.pop(0)
+                uids[i] = eng.submit(p, max_new_tokens=MAX_NEW)
+            eng.step()
+    else:
+        raise ValueError(order)
+    return {i: eng.result(u) for i, u in uids.items()}, eng
+
+
+# ---------------------------------------------------------------------------
+# chunking is output-invariant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("slots", [1, 4])
+@pytest.mark.parametrize("chunk", [8, 64, None])  # None = whole-prompt
+def test_engine_matches_sequential_reference(params, prompts, refs, slots,
+                                             chunk):
+    """Engine generations are identical to per-request sequential decode
+    for every (slot count, prefill chunking) combination — chunk
+    boundaries and ragged admission batching change *scheduling*, never
+    outputs."""
+    out, eng = _run_engine(params, prompts, slots=slots, chunk=chunk)
+    for i, ref in enumerate(refs):
+        assert out[i] == ref, (i, chunk, slots)
+    _assert_invariants(eng)
+
+
+def test_admission_order_does_not_change_outputs(params, prompts, refs):
+    """Each request's generation depends only on its own prompt — not on
+    queue order or on which slots are decoding while it prefills."""
+    for order in ("reversed", "staggered"):
+        out, eng = _run_engine(params, prompts, slots=4, chunk=8,
+                               order=order)
+        for i, ref in enumerate(refs):
+            assert out[i] == ref, (i, order)
+        _assert_invariants(eng)
+
+
+def test_ragged_admission_batches_prefills(params, prompts):
+    """With chunk >= every prompt, all slots admitted on the same tick
+    prefill in ONE padded dispatch — strictly fewer dispatches than the
+    one-prefill-per-admit path."""
+    out, eng = _run_engine(params, prompts, slots=4, chunk=64)
+    # 5 requests through 4 slots: 4 admitted on tick 1 (1 dispatch), the
+    # 5th after a slot frees (1 more) — far fewer than 5 per-admit calls.
+    assert eng.stats["prefill_dispatches"] <= 2
+    assert eng.stats["prefill_tokens"] == sum(PROMPT_LENS)
+    _assert_invariants(eng)
+
+
+def test_long_prompt_prefill_interleaves_with_decode(params, prompts, refs):
+    """A long prompt admitted mid-stream advances chunk-by-chunk while
+    already-decoding slots keep producing a token every tick (no
+    multi-tick stall), and still generates the reference tokens."""
+    rng = np.random.default_rng(11)
+    long_prompt = rng.integers(0, TINY.vocab_size, size=64)
+    long_ref = _reference_generate(params, long_prompt, MAX_NEW)
+
+    eng = ServeEngine(params, TINY, slots=2, max_len=MAX_LEN,
+                      prefill_chunk=8)
+    u0 = eng.submit(prompts[0], max_new_tokens=16)
+    eng.step()                       # prompt 0 starts prefilling
+    eng.step()
+    gen_before = len(eng.slots[0].generated)
+    u1 = eng.submit(long_prompt, max_new_tokens=MAX_NEW)
+    # 64-token prompt at chunk=8 -> 8 prefill ticks; slot 0 must advance
+    # by one token on every one of them.
+    for _ in range(8):
+        before = len(eng.slots[0].generated)
+        eng.step()
+        assert len(eng.slots[0].generated) == before + 1
+    assert eng.slots[1].decoding     # long prompt finished prefilling
+    eng.run_to_completion()
+    assert eng.result(u1) == long_ref
+    assert eng.result(u0) == _reference_generate(params, prompts[0], 16)
+    _assert_invariants(eng)
+
+
+# ---------------------------------------------------------------------------
+# A^3 path: chunked incremental sort == whole-prompt comprehension sort
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [8, None])
+def test_a3_chunked_matches_sequential_reference(params, prompts, chunk):
+    a3 = A3Config.conservative()
+    refs_a3 = [_reference_generate(params, p, MAX_NEW, a3=a3)
+               for p in prompts[:3]]
+    out, eng = _run_engine(params, prompts[:3], slots=2, chunk=chunk,
+                           a3=a3, resort_every=4)
+    for i, ref in enumerate(refs_a3):
+        assert out[i] == ref, (i, chunk)
+    _assert_invariants(eng)
+
+
+# ---------------------------------------------------------------------------
+# decoder-level: prefill_chunk == prefill (cache + logits)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("a3", [False, True])
+@pytest.mark.parametrize("plen,chunk", [(23, 8), (23, 64), (7, 3), (16, 16)])
+def test_prefill_chunk_extends_cache_like_whole_prompt(params, a3, plen,
+                                                       chunk):
+    """Running a prompt through prefill_chunk in any chunk split yields
+    the same cache rows (incl. the A^3 sorted-key matrices and
+    watermarks) and final logits as one whole-prompt prefill."""
+    rng = np.random.default_rng(plen * 100 + chunk)
+    p = rng.integers(0, TINY.vocab_size, size=plen)
+    lg_ref, cache_ref = dec.prefill(params, TINY,
+                                    jnp.asarray(p, jnp.int32)[None],
+                                    max_len=32, a3=a3)
+    cache = dec.init_cache(TINY, 1, 32, a3=a3)
+    cur = 0
+    lg = None
+    while cur < plen:
+        take = min(chunk, plen - cur)
+        toks = np.zeros((1, chunk), np.int32)
+        toks[0, :take] = p[cur:cur + take]
+        lg, cache = dec.prefill_chunk(params, TINY, cache,
+                                      jnp.asarray(toks),
+                                      jnp.asarray([cur], jnp.int32),
+                                      jnp.asarray([take], jnp.int32),
+                                      a3=a3)
+        cur += take
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_ref),
+                               rtol=1e-5, atol=1e-5)
+    flat_c, _ = jax.tree_util.tree_flatten_with_path(cache)
+    flat_r, _ = jax.tree_util.tree_flatten_with_path(cache_ref)
+    for (ka, a), (kb, b) in zip(flat_c, flat_r):
+        assert str(ka) == str(kb)
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-5, err_msg=str(ka))
+
+
+@pytest.mark.parametrize("plen,chunk", [(24, 20), (30, 7), (16, 16)])
+def test_prefill_chunk_ring_wrap_matches_whole_prompt(plen, chunk):
+    """Sliding-window segments keep an O(window) ring; prompts longer
+    than the ring wrap it, and chunks longer than the ring land only
+    their last ``w`` positions — chunked prefill must still reproduce
+    whole-prompt prefill (which computes windowed attention over the
+    full prompt and stores the last ``w`` rows)."""
+    import dataclasses
+    from repro.config import AttentionKind
+    swa = dataclasses.replace(TINY, name="tiny-swa",
+                              attention_kind=AttentionKind.SLIDING,
+                              window_size=16)
+    params = dec.init_params(jax.random.PRNGKey(1), swa)
+    rng = np.random.default_rng(plen * 10 + chunk)
+    p = rng.integers(0, swa.vocab_size, size=plen)
+    lg_ref, cache_ref = dec.prefill(params, swa,
+                                    jnp.asarray(p, jnp.int32)[None],
+                                    max_len=32)
+    cache = dec.init_cache(swa, 1, 32)
+    cur, lg = 0, None
+    while cur < plen:
+        take = min(chunk, plen - cur)
+        toks = np.zeros((1, chunk), np.int32)
+        toks[0, :take] = p[cur:cur + take]
+        lg, cache = dec.prefill_chunk(params, swa, cache,
+                                      jnp.asarray(toks),
+                                      jnp.asarray([cur], jnp.int32),
+                                      jnp.asarray([take], jnp.int32))
+        cur += take
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_ref),
+                               rtol=1e-5, atol=1e-5)
+    flat_c, _ = jax.tree_util.tree_flatten_with_path(cache)
+    flat_r, _ = jax.tree_util.tree_flatten_with_path(cache_ref)
+    for (ka, a), (kb, b) in zip(flat_c, flat_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5, err_msg=str(ka))
+
+
+def test_engine_rejects_empty_prompt(params):
+    eng = ServeEngine(params, TINY, slots=1, max_len=32, prefill_chunk=8)
+    with pytest.raises(ValueError):
+        eng.submit(np.asarray([], np.int32))
+
+
+def test_prefill_chunk_zero_length_lane_is_identity(params):
+    """Lanes with length 0 (idle/decoding slots sharing the dispatch
+    batch) pass their cache rows through bit-identically."""
+    rng = np.random.default_rng(3)
+    p = rng.integers(0, TINY.vocab_size, size=(2, 9))
+    _, cache = dec.prefill(params, TINY, jnp.asarray(p, jnp.int32),
+                           max_len=32)
+    toks = np.zeros((2, 4), np.int32)
+    toks[0] = rng.integers(0, TINY.vocab_size, size=4)
+    _, new_cache = dec.prefill_chunk(params, TINY, cache,
+                                     jnp.asarray(toks),
+                                     jnp.asarray([9, 0], jnp.int32),
+                                     jnp.asarray([4, 0], jnp.int32))
+    flat_n, _ = jax.tree_util.tree_flatten_with_path(new_cache)
+    flat_o, _ = jax.tree_util.tree_flatten_with_path(cache)
+    for (ka, a), (kb, b) in zip(flat_n, flat_o):
+        np.testing.assert_array_equal(np.asarray(a)[:, 1],
+                                      np.asarray(b)[:, 1], err_msg=str(ka))
+
+
+def test_decode_negative_pos_lane_drops_ring_write(params):
+    """pos=-1 lanes (idle/prefilling engine slots riding along in the
+    decode batch) must not touch their cache rows."""
+    rng = np.random.default_rng(4)
+    p = rng.integers(0, TINY.vocab_size, size=(2, 9))
+    _, cache = dec.prefill(params, TINY, jnp.asarray(p, jnp.int32),
+                           max_len=32)
+    tok = jnp.asarray([5, 6], jnp.int32)
+    pos = jnp.asarray([9, -1], jnp.int32)
+    logits, new_cache = dec.decode_step(params, TINY, cache, tok, pos)
+    flat_n, _ = jax.tree_util.tree_flatten_with_path(new_cache)
+    flat_o, _ = jax.tree_util.tree_flatten_with_path(cache)
+    for (ka, a), (kb, b) in zip(flat_n, flat_o):
+        np.testing.assert_array_equal(np.asarray(a)[:, 1],
+                                      np.asarray(b)[:, 1], err_msg=str(ka))
+    # the active lane still decoded normally
+    lg_ref, _ = dec.decode_step(params, TINY,
+                                jax.tree.map(lambda x: x[:, :1], cache),
+                                tok[:1], jnp.int32(9))
+    np.testing.assert_allclose(np.asarray(logits[0]),
+                               np.asarray(lg_ref[0]), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# sharded serve lowering (exercised on the multi-device CI matrix entry)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_sharded_serve_lowering_ragged_shapes():
+    """The sharded serve path lowers the same ragged dispatches the
+    engine runs: decode with a per-slot pos *vector* + donated cache,
+    and the chunked admission-prefill dispatch."""
+    out = check(run_with_devices("""
+import jax
+from repro.config import A3Config, ShapeConfig, ShapeKind, ShardingConfig, \\
+    get_arch, smoke_variant
+from repro.launch.mesh import make_mesh
+from repro.launch.dryrun import input_specs, lower_decode, \\
+    lower_prefill_chunk
+
+cfg = smoke_variant(get_arch("phi4-mini-3.8b"))
+dshape = ShapeConfig("decode_smoke", ShapeKind.DECODE, 256, 8)
+pshape = ShapeConfig("prefill_smoke", ShapeKind.PREFILL, 256, 8)
+spec = input_specs(cfg, dshape)
+assert spec["pos"].shape == (8,), spec["pos"]        # vector, not scalar
+mesh = make_mesh((2, 4), ("data", "model"))
+scfg = ShardingConfig(remat="none")
+with mesh:
+    c = lower_decode(cfg, dshape, mesh, scfg, A3Config.conservative()
+                     ).compile()
+    assert c.memory_analysis().alias_size_in_bytes > 0   # donation held
+    c2 = lower_prefill_chunk(cfg, pshape, mesh, scfg, chunk=64,
+                             a3=A3Config.conservative()).compile()
+    assert c2.memory_analysis().alias_size_in_bytes > 0
+print("OK")
+""", devices=8, timeout=600))
+    assert "OK" in out
