@@ -18,6 +18,13 @@ admission window included — stays ~<=2x chunked) and
 a constant multiple set by the chunk size, independent of prompt
 length, where whole-prompt scales with the prompt).
 
+The *decode-block sweep* measures the multi-step scanned decode claim:
+at ``decode_block`` in {1, 8, 32}, T decode steps run device-resident
+per dispatch (in-graph sampling + in-graph A^3 re-sort) and the host
+syncs once per block, so ``syncs_per_token`` falls as ~1/T and
+``per_token_ms`` improves monotonically from T=1 to T=8 as dispatch +
+sync overhead amortizes.
+
   PYTHONPATH=src python benchmarks/bench_serve_latency.py \
       [--slots 4] [--requests 8] [--stagger 2] [--out BENCH_serve.json]
 """
@@ -230,6 +237,74 @@ def run_tail_latency(params, *, slots: int = 4, prompt_len: int = 2048,
     return results
 
 
+def run_decode_block_sweep(params, *, slots: int = 4, requests: int = 4,
+                           prompt_len: int = 16, max_new: int = 65,
+                           max_len: int = 128,
+                           blocks=(1, 8, 32)) -> dict:
+    """Multi-step scanned decode: per-token tick latency and host syncs
+    per token at ``decode_block`` in {1, 8, 32} on decode-heavy traffic.
+
+    decode_block=1 is the old engine's cadence: every generated token
+    pays a full dispatch + blocking host read round-trip. Larger blocks
+    run T steps device-resident per dispatch (in-graph sampling +
+    re-sort) and sync once per block, so ``syncs_per_token`` falls as
+    ~1/T and the decode-phase ``per_token_ms`` drops as the per-dispatch
+    overhead amortizes. ``max_new`` is chosen so every block size
+    divides the decode-step count evenly (65 -> 64 steps after the
+    prefill token): partial blocks still execute their masked tail
+    steps, which would charge T=32 for work it throws away and muddy
+    the overhead-amortization comparison this scenario isolates.
+    Requests admit upfront via one chunked-prefill dispatch and the
+    measured window starts after the admission tick, so the per-token
+    figure is pure decode."""
+    results = {}
+    for t in blocks:
+        eng = ServeEngine(params, TINY, slots=slots, max_len=max_len,
+                          decode_block=t, prefill_chunk=prompt_len)
+        rng = np.random.default_rng(0)
+        # warm every dispatch shape (prefill + blocked decode compile)
+        w = eng.submit(rng.integers(0, TINY.vocab_size, size=prompt_len),
+                       max_new_tokens=2 * t)
+        eng.run_to_completion()
+        assert eng.result(w) is not None
+        eng.stats = {k: 0 for k in eng.stats}
+
+        uids = [eng.submit(rng.integers(0, TINY.vocab_size,
+                                        size=prompt_len),
+                           max_new_tokens=max_new)
+                for _ in range(requests)]
+        eng.step()                 # admission tick: prefill + first block
+        jax.block_until_ready(jax.tree.leaves(eng.cache)[0])
+        admitted = sum(len(s.generated) for s in eng.slots if s.active)
+        t0 = time.perf_counter()
+        eng.run_to_completion()
+        jax.block_until_ready(jax.tree.leaves(eng.cache)[0])
+        wall = time.perf_counter() - t0
+        new_tokens = sum(len(eng.result(u) or []) for u in uids)
+        decode_tokens = new_tokens - admitted
+        results[str(t)] = {
+            "decode_block": t,
+            "decode_wall_s": wall,
+            "new_tokens": new_tokens,
+            "decode_tokens": decode_tokens,
+            "per_token_ms": wall / decode_tokens * 1e3,
+            "tok_per_s": decode_tokens / wall,
+            "host_syncs": eng.stats["host_syncs"],
+            "syncs_per_token": eng.stats["host_syncs"] / new_tokens,
+            "decode_dispatches": eng.stats["decode_dispatches"],
+            "decode_blocks": eng.stats["decode_blocks"],
+            "ticks": eng.stats["ticks"],
+        }
+    ks = [str(t) for t in blocks]
+    results["speedup_1_to_8"] = (results[ks[0]]["per_token_ms"]
+                                 / results["8"]["per_token_ms"]
+                                 if "8" in results else None)
+    results["config"] = {"slots": slots, "requests": requests,
+                         "prompt_len": prompt_len, "max_new": max_new,
+                         "max_len": max_len, "blocks": list(blocks)}
+    return results
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--slots", type=int, default=4)
@@ -260,6 +335,7 @@ def main() -> None:
     tail = run_tail_latency(params, slots=args.slots,
                             prompt_len=args.tail_prompt_len,
                             chunk=args.prefill_chunk, a3=a3)
+    blocks = run_decode_block_sweep(params, slots=args.slots)
     payload = {
         "bench": "serve_latency_staggered",
         "arch": TINY.name,
@@ -269,6 +345,7 @@ def main() -> None:
         "result": res,
         "dispatch_compare": cmp,
         "tail_latency": tail,
+        "decode_block_sweep": blocks,
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)

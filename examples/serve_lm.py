@@ -4,7 +4,8 @@ reporting agreement + engine stats.
 
 Every ``engine.step()`` is one *tick* of the admission state machine::
 
-    admit -> chunked prefill -> (A^3 re-sort) -> decode
+    admit -> chunked prefill -> blocked decode
+                                 (T x [in-graph resort -> step -> sample])
 
 * **admit**: queued requests claim free slots and enter the PREFILLING
   phase (no forward pass; the first chunk dispatch zeroes the slot's
@@ -14,18 +15,21 @@ Every ``engine.step()`` is one *tick* of the admission state machine::
   slot cursors), so a long prompt never stalls decoding slots for more
   than one chunk. A slot whose cursor reaches the end of its prompt
   emits its first token and flips to DECODING.
-* **re-sort** (A^3 only): slots whose exact fresh tail outgrew
-  ``resort_every`` get their key columns re-sorted (comprehension-time
-  preprocessing, amortized); PREFILLING slots are skipped because the
-  chunked prefill dispatch maintains their sort incrementally.
-* **decode**: every DECODING slot advances one token in ONE ragged
-  jitted dispatch (per-slot positions, donated in-place KV cache).
+* **blocked decode**: every DECODING slot advances up to
+  ``decode_block`` = T tokens in ONE jitted ``lax.scan`` dispatch
+  (per-slot positions, donated in-place KV cache). Sampling runs
+  in-graph (greedy argmax; temperature hook in ``ServeConfig``), each
+  step feeding the next, and the A^3 ``sorted_upto`` watermark check +
+  fresh-tail re-sort also run in-graph — the host never reads a
+  watermark, and syncs only once per block to harvest the [slots, T]
+  token ring (``stats["host_syncs"]``). Lanes that exhaust their
+  budget mid-block ride along masked at pos=-1.
 
-Chunking is a scheduling decision, not a model change — the example
-runs the same prompts with whole-prompt and chunked admission, reports
-whether the generations are identical (they are, up to fp-tie flips;
-``tests/test_serve_conformance.py`` asserts it), then compares exact
-vs A^3.
+Chunking and decode blocking are scheduling decisions, not model
+changes — the example runs the same prompts with whole-prompt,
+chunked, and blocked-decode engines, reports that the generations are
+identical (up to fp-tie flips; ``tests/test_serve_conformance.py``
+asserts it), then compares exact vs A^3.
 
     PYTHONPATH=src python examples/serve_lm.py [--arch phi4-mini-3.8b]
 """
@@ -46,6 +50,7 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--decode-block", type=int, default=8)
     args = ap.parse_args()
 
     cfg = smoke_variant(get_arch(args.arch))
@@ -55,16 +60,20 @@ def main():
                for _ in range(args.requests)]
 
     results = {}
-    runs = [("exact", A3Config(), None),
-            ("exact-chunked", A3Config(), args.prefill_chunk),
-            ("a3-conservative", A3Config.conservative(), None)]
-    for label, a3, chunk in runs:
+    runs = [("exact", A3Config(), None, 1),
+            ("exact-chunked", A3Config(), args.prefill_chunk, 1),
+            ("exact-blocked", A3Config(), args.prefill_chunk,
+             args.decode_block),
+            ("a3-conservative", A3Config.conservative(), None, 1)]
+    syncs = {}
+    for label, a3, chunk, block in runs:
         eng = ServeEngine(params, cfg, slots=4, max_len=256, a3=a3,
-                          prefill_chunk=chunk)
+                          prefill_chunk=chunk, decode_block=block)
         uids = [eng.submit(p, max_new_tokens=args.max_new) for p in prompts]
         eng.run_to_completion()
         results[label] = [eng.result(u) for u in uids]
         total = sum(len(r) for r in results[label])
+        syncs[label] = eng.stats["host_syncs"] / max(total, 1)
         print(f"{label:16s}: {total} tokens generated, stats={eng.stats}")
 
     if results["exact"] == results["exact-chunked"]:
@@ -73,6 +82,12 @@ def main():
     else:
         print("\nWARNING: chunked admission changed outputs "
               "(fp-tie flip or recurrent-arch fallback)")
+    if results["exact"] == results["exact-blocked"]:
+        print(f"blocked decode (T={args.decode_block}) == per-step decode "
+              f"at {syncs['exact-blocked']:.2f} host syncs/token "
+              f"(vs {syncs['exact']:.2f} per-step)")
+    else:
+        print("\nWARNING: blocked decode changed outputs (fp-tie flip)")
 
     agree = np.mean([
         np.mean(np.asarray(a) == np.asarray(b))

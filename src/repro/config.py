@@ -307,9 +307,24 @@ class ServeConfig:
     # only mode for archs with recurrent blocks).
     prefill_chunk: Optional[int] = None
     # A^3: decode steps a slot may accumulate past its sorted_upto
-    # watermark before its key columns are re-sorted.
+    # watermark before its key columns are re-sorted (in-graph: the
+    # watermark check and the fold both live inside the decode dispatch).
     resort_every: int = 64
-    greedy: bool = True
+    # Decode steps per jitted dispatch (``decoder.decode_block``): the
+    # T-step inner loop runs device-resident under one ``lax.scan`` with
+    # in-graph sampling, and the host syncs once per block to harvest
+    # the [slots, T] token ring — host syncs per token ~ 1/T.
+    decode_block: int = 1
+    # Route decode attention through the fused single-pass Pallas kernel
+    # (TPU; the jnp reference path is the CPU/CI default).
+    use_kernel: bool = False
+    # Sampling: temperature == 0 pins greedy argmax (the conformance-
+    # tested path); temperature > 0 draws in-graph from the tempered
+    # softmax, keyed per (seed, request uid, position) so draws are
+    # invariant to how steps are blocked into dispatches and
+    # decorrelated across requests.
+    temperature: float = 0.0
+    sample_seed: int = 0
 
 
 @dataclass(frozen=True)

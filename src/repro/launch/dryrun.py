@@ -160,6 +160,46 @@ def lower_decode(cfg: ModelConfig, shape: ShapeConfig, mesh,
     return jf.lower(params_shape, cache_shape, spec["token"], spec["pos"])
 
 
+def lower_decode_block(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                       sharding_cfg: ShardingConfig, *,
+                       steps: int = 8, a3: A3Config = A3Config(),
+                       resort_every: int = 64):
+    """Lower the multi-step scanned decode dispatch: ``steps`` decode
+    iterations per dispatch under one ``lax.scan`` with in-graph greedy
+    sampling and (A^3) in-graph re-sort — the serving engine's blocked
+    inner loop, with per-lane ``steps_left`` masking and a donated
+    cache, on the production mesh. Returns the [B, steps] token ring
+    plus the updated cache."""
+    from repro.models.common import activation_shardings
+    from repro.sharding.rules import act_specs
+    if cfg.frontend:
+        raise ValueError(f"{cfg.name}: blocked decode feeds sampled token "
+                         "ids back in-graph; frontend archs decode "
+                         "single-step from precomputed embeddings")
+    params_shape = decoder.init_params_shape(cfg)
+    pspecs = shardings_for(param_specs(params_shape, sharding_cfg, mesh),
+                           mesh)
+    use_a3 = a3.mode != A3Mode.OFF
+    cache_shape = jax.eval_shape(
+        lambda: decoder.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                   a3=use_a3))
+    cspecs = shardings_for(cache_specs(cache_shape, shape, mesh,
+                                       sharding_cfg), mesh)
+    a_specs = act_specs(cfg, shape, mesh, sharding_cfg)
+    rep = NamedSharding(mesh, P())
+
+    def fn(params, cache, token, pos, steps_left):
+        with activation_shardings(a_specs):
+            return decoder.decode_block(
+                params, cfg, cache, token, pos, steps_left, steps=steps,
+                a3=a3, resort_every=resort_every if use_a3 else 0)
+
+    jf = jax.jit(fn, in_shardings=(pspecs, cspecs, rep, rep, rep),
+                 out_shardings=(None, cspecs), donate_argnums=(1,))
+    vec = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    return jf.lower(params_shape, cache_shape, vec, vec, vec)
+
+
 def lower_prefill_chunk(cfg: ModelConfig, shape: ShapeConfig, mesh,
                         sharding_cfg: ShardingConfig, *,
                         chunk: int = 256, a3: A3Config = A3Config()):
@@ -205,6 +245,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              sharding_cfg: Optional[ShardingConfig] = None,
              a3: A3Config = A3Config(),
              prefill_chunk: Optional[int] = None,
+             decode_block: Optional[int] = None,
              verbose: bool = True,
              save_hlo_dir: Optional[str] = None) -> Dict[str, Any]:
     cfg = get_arch(arch)
@@ -234,7 +275,18 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             else:
                 lowered = lower_prefill(cfg, shape, mesh, sharding_cfg)
         else:
-            lowered = lower_decode(cfg, shape, mesh, sharding_cfg, a3)
+            blockable = bool(decode_block) and decode_block > 1 \
+                and not cfg.frontend
+            if decode_block and decode_block > 1 and cfg.frontend \
+                    and verbose:
+                print(f"  {arch}: blocked decode unsupported (frontend "
+                      f"embeds); lowering single-step decode")
+            if blockable:
+                lowered = lower_decode_block(cfg, shape, mesh,
+                                             sharding_cfg,
+                                             steps=decode_block, a3=a3)
+            else:
+                lowered = lower_decode(cfg, shape, mesh, sharding_cfg, a3)
         t_lower = time.time() - t0
         t0 = time.time()
         compiled = lowered.compile()
@@ -296,6 +348,11 @@ def main() -> None:
                     help="lower prefill cells as the chunked ragged "
                          "admission-prefill dispatch with this chunk "
                          "size (0 = whole-prompt prefill)")
+    ap.add_argument("--decode-block", type=int, default=0,
+                    help="lower decode cells as the multi-step scanned "
+                         "decode dispatch with this many steps per block "
+                         "(in-graph sampling + A^3 re-sort; 0/1 = "
+                         "single-step decode)")
     ap.add_argument("--out", default=None)
     ap.add_argument("--save-hlo", default=None,
                     help="directory for gzipped per-cell compiled HLO")
@@ -331,6 +388,7 @@ def main() -> None:
                     results.append(run_cell(
                         arch, shape_name, multi_pod=mp, a3=a3,
                         prefill_chunk=args.prefill_chunk or None,
+                        decode_block=args.decode_block or None,
                         save_hlo_dir=args.save_hlo))
                 except Exception as e:   # noqa: BLE001
                     print(f"FAIL {arch} x {shape_name} "

@@ -29,6 +29,15 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="admission-prefill chunk size in tokens; 0 = "
                          "whole-prompt prefill at admit")
+    ap.add_argument("--decode-block", type=int, default=1,
+                    help="decode steps per jitted dispatch (lax.scan with "
+                         "in-graph sampling + A^3 re-sort; the host syncs "
+                         "once per block)")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route decode attention through the fused "
+                         "single-pass Pallas kernel (TPU)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="in-graph sampling temperature; 0 = greedy argmax")
     ap.add_argument("--a3", default="off",
                     choices=["off", "conservative", "aggressive"])
     ap.add_argument("--seed", type=int, default=0)
@@ -40,7 +49,11 @@ def main() -> None:
     a3 = {"off": A3Config(), "conservative": A3Config.conservative(),
           "aggressive": A3Config.aggressive()}[args.a3]
     serve = ServeConfig(slots=args.slots, max_len=args.max_len,
-                        prefill_chunk=args.prefill_chunk or None)
+                        prefill_chunk=args.prefill_chunk or None,
+                        decode_block=args.decode_block,
+                        use_kernel=args.use_kernel,
+                        temperature=args.temperature,
+                        sample_seed=args.seed)
 
     params = decoder.init_params(jax.random.PRNGKey(args.seed), cfg)
     engine = ServeEngine.from_config(params, cfg, serve, a3=a3)

@@ -587,6 +587,154 @@ def decode_step(
 
 
 # ---------------------------------------------------------------------------
+# multi-step scanned decode: T steps per dispatch, sampling in-graph
+# ---------------------------------------------------------------------------
+
+def resort_sorted_keys(cache: Dict[str, Any], pos: jax.Array,
+                       resort_every: int) -> Dict[str, Any]:
+    """In-graph A^3 re-sort: fold each lane's ring into its sorted key
+    columns when the exact tail outgrew ``resort_every``.
+
+    The serving-time analogue of the paper's comprehension-time
+    preprocessing (SSIV-C), previously scheduled by a host-side read of
+    the ``sorted_upto`` watermarks every tick. Here the watermark check
+    is part of the dispatch: for each global-attention segment a lane is
+    *due* when ``pos - sorted_upto >= resort_every``; a ``lax.cond``
+    skips the O(w log w) sort entirely on steps where no lane is due,
+    and due lanes select the fresh sort via ``jnp.where`` (others keep
+    their matrices and watermark bit-identically). Lanes riding along at
+    ``pos < 0`` are never due.
+
+    ``pos`` is the per-lane position about to be written — the sort runs
+    *before* the step's ring write, so it sees exactly the ring the
+    host-side re-sort used to see between dispatches.
+    """
+    from repro.core.candidate_selection import sort_key_columns
+    new_cache: Dict[str, Any] = {}
+    pos = jnp.asarray(pos, jnp.int32)
+    for name, sc in cache.items():
+        if not isinstance(sc, dict) or "sk_vals" not in sc:
+            new_cache[name] = sc
+            continue
+        due = (pos >= 0) & (pos - sc["sorted_upto"][0] >= resort_every)
+
+        def _fold(op, due=due):
+            k, skv, skr, upto = op
+            sk = jax.vmap(jax.vmap(jax.vmap(sort_key_columns)))(k)
+            d5 = due[None, :, None, None, None]
+            return (jnp.where(d5, sk.values, skv),
+                    jnp.where(d5, sk.rows, skr),
+                    jnp.where(due[None, :], pos[None, :], upto))
+
+        def _keep(op):
+            _, skv, skr, upto = op
+            return skv, skr, upto
+
+        skv, skr, upto = jax.lax.cond(
+            jnp.any(due), _fold, _keep,
+            (sc["k"], sc["sk_vals"], sc["sk_rows"], sc["sorted_upto"]))
+        new_cache[name] = {**sc, "sk_vals": skv, "sk_rows": skr,
+                           "sorted_upto": upto}
+    return new_cache
+
+
+def sample_logits(logits: jax.Array, *, temperature: float = 0.0,
+                  rng: Optional[jax.Array] = None,
+                  pos: Optional[jax.Array] = None,
+                  ids: Optional[jax.Array] = None) -> jax.Array:
+    """In-graph next-token sampling -> token ids [B].
+
+    ``temperature == 0`` (or no ``rng``) is greedy argmax — identical to
+    the host-side ``argmax`` the engine used to run after a device
+    round-trip. With ``temperature > 0`` each lane draws from the
+    tempered softmax with a key folded from (``ids``, ``pos``): the
+    per-lane request id decorrelates concurrent and successive requests
+    (identical prompts do not share a key stream), while folding the
+    absolute position — not the step index — keeps a lane's draw at
+    position p independent of how decode steps are blocked into
+    dispatches or which engine slot the request occupies.
+    """
+    if temperature <= 0.0 or rng is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if pos is None:
+        pos = jnp.zeros((logits.shape[0],), jnp.int32)
+    if ids is None:
+        ids = jnp.zeros((logits.shape[0],), jnp.int32)
+    keys = jax.vmap(lambda u, p: jax.random.fold_in(
+        jax.random.fold_in(rng, u), p))(ids, pos)
+    draw = lambda k, lg: jax.random.categorical(
+        k, lg.astype(jnp.float32) / temperature)
+    return jax.vmap(draw)(keys, logits).astype(jnp.int32)
+
+
+def decode_block(
+    params: Params,
+    cfg: ModelConfig,
+    cache: Dict[str, Any],
+    token: jax.Array,                 # [B] int32 last emitted token per lane
+    pos: jax.Array,                   # [B] int32 next position; -1 = ride-along
+    steps_left: jax.Array,            # [B] int32 steps this lane may advance
+    *,
+    steps: int,
+    a3: A3Config = A3Config(),
+    use_kernel: bool = False,
+    resort_every: int = 0,
+    temperature: float = 0.0,
+    rng: Optional[jax.Array] = None,
+    sample_ids: Optional[jax.Array] = None,   # [B] per-request sample keys
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Run ``steps`` autoregressive decode steps in ONE dispatch via
+    ``lax.scan`` -> (token ring [B, steps] int32, new cache).
+
+    The whole inner loop is device-resident: each scan step (a) re-sorts
+    due lanes' A^3 key columns in-graph (:func:`resort_sorted_keys` —
+    no host watermark read), (b) runs :func:`decode_step`, and (c)
+    samples the next token in-graph (:func:`sample_logits`), feeding it
+    to the following step. The host syncs once per block to harvest the
+    emitted-token ring instead of once (or three times) per token.
+
+    Lanes are masked per step: a lane is *active* while ``pos >= 0`` and
+    its ``steps_left`` budget is unspent. Inactive lanes ride along at
+    ``pos = -1`` — their ring writes scatter out of bounds and are
+    dropped (the ragged-decode machinery), their ring entries read -1,
+    and their carried token/pos freeze — so lanes that exhaust budget or
+    hit ``max_len`` mid-block leave attention (ring) cache rows
+    untouched. Recurrent segments (RG-LRU / xLSTM) carry no per-step
+    masking, matching :func:`decode_step`'s existing ``pos = -1``
+    semantics: a masked lane's recurrent state keeps advancing on its
+    frozen token and must be rewritten at the next admission (the
+    engine's whole-prompt prefill does exactly that) before the lane is
+    trusted again. With ``steps=1`` this is exactly one
+    :func:`decode_step` plus in-graph sampling.
+    """
+    b = token.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    steps_left = jnp.broadcast_to(jnp.asarray(steps_left, jnp.int32), (b,))
+    do_resort = resort_every > 0 and a3.mode != A3Mode.OFF
+
+    def one_step(carry, _):
+        token, pos, remaining, cache = carry
+        active = (pos >= 0) & (remaining > 0)
+        eff_pos = jnp.where(active, pos, -1)
+        if do_resort:
+            cache = resort_sorted_keys(cache, eff_pos, resort_every)
+        logits, cache = decode_step(params, cfg, cache, token, eff_pos,
+                                    a3=a3, use_kernel=use_kernel)
+        nxt = sample_logits(logits, temperature=temperature, rng=rng,
+                            pos=eff_pos, ids=sample_ids)
+        emit = jnp.where(active, nxt, -1)
+        token = jnp.where(active, nxt, token)
+        pos = jnp.where(active, pos + 1, pos)
+        remaining = jnp.where(active, remaining - 1, remaining)
+        return (token, pos, remaining, cache), emit
+
+    (_, _, _, cache), ring = jax.lax.scan(
+        one_step, (token.astype(jnp.int32), pos, steps_left, cache),
+        None, length=steps)
+    return jnp.moveaxis(ring, 0, 1), cache
+
+
+# ---------------------------------------------------------------------------
 # prefill: full-sequence forward that also fills the decode caches
 # ---------------------------------------------------------------------------
 

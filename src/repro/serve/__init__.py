@@ -1,3 +1,4 @@
-from repro.serve.engine import ServeEngine, make_serve_step
+from repro.serve.engine import ServeEngine, make_decode_block_step, \
+    make_serve_step
 
-__all__ = ["ServeEngine", "make_serve_step"]
+__all__ = ["ServeEngine", "make_decode_block_step", "make_serve_step"]

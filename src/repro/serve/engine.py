@@ -1,11 +1,12 @@
-"""Serving engine: chunked + ragged admission prefill and ragged batched
-decode with slot-based continuous batching, plus the A^3 approximate
-decode path.
+"""Serving engine: chunked + ragged admission prefill and multi-step
+*scanned* decode with slot-based continuous batching, plus the A^3
+approximate decode path.
 
 The engine holds a fixed number of request *slots*. Every engine tick
 runs the admission state machine::
 
-    admit -> chunked prefill -> (A^3 re-sort) -> decode
+    admit -> chunked prefill -> blocked decode
+                                 (T x [in-graph resort -> step -> sample])
 
 * **Admit.** Queued requests claim free slots and enter the PREFILLING
   phase with a per-slot prompt cursor. No forward pass and no cache
@@ -25,17 +26,38 @@ runs the admission state machine::
   for archs with recurrent blocks, where chunked prefill is
   unsupported) admission falls back to one whole-prompt
   ``decoder.prefill`` per admit.
-* **Decode — one dispatch per tick.** ``decode_step`` takes a per-slot
-  position vector, so DECODING slots at arbitrary position skew advance
-  in a single jitted call. ``stats["decode_dispatches"]`` equals
-  ``stats["decode_steps"]`` by construction.
-* **Cache donation.** Both the prefill-chunk and decode jits donate the
-  KV cache argument, so the ring buffers update in place instead of
-  being copied each tick.
-* **One host read per tick.** ``_maybe_resort`` fetches all segments'
-  ``sorted_upto`` watermarks in a single ``device_get`` and batches the
-  re-sorts of all due slots per segment. Slots still PREFILLING are
-  skipped — chunked prefill maintains their sort incrementally.
+* **Blocked decode — T steps per dispatch, fully device-resident.**
+  ``decoder.decode_block`` runs ``decode_block`` = T decode steps under
+  one jitted ``lax.scan``: each step samples its successor token from
+  its own on-device logits (greedy argmax; temperature hook behind
+  ``ServeConfig``), re-sorts due lanes' A^3 key columns in-graph, and
+  appends to an on-device ``[slots, T]`` token ring. The host syncs
+  *once per block* to harvest the ring and run the finish/admit state
+  machine — per-token host round-trips drop from ~3 (watermark read +
+  two blocking argmax reads) to ~1/T. Lanes that exhaust their budget
+  or hit ``max_len`` mid-block ride along at ``pos = -1`` with dropped
+  ring writes. ``stats["decode_steps"]`` counts executed scan
+  iterations (``decode_block x decode_dispatches``);
+  ``stats["decode_steps_advanced"]`` counts the subset that advanced
+  at least one lane — the gap is partial-block padding, and dispatch
+  efficiency obeys the falsifiable bound ``decode_dispatches <=
+  ceil(decode_steps_advanced / T) + prefill_dispatches`` (a partial
+  block means every active lane finished, which can only follow a
+  prefill dispatch that flipped its cohort). ``stats["host_syncs"]``
+  counts blocking device reads — one ring harvest per decode dispatch
+  plus a first-token read only on prefill ticks where a lane finishes
+  its prompt, so ``host_syncs <= ceil(decode_steps / T) +
+  prefill_dispatches``.
+* **Cache donation.** Both the prefill-chunk and decode-block jits
+  donate the KV cache argument, so the ring buffers update in place
+  instead of being copied each tick.
+* **In-graph A^3 re-sort — zero host watermark reads.** The
+  ``sorted_upto`` watermark check lives inside the decode dispatch
+  (``decoder.resort_sorted_keys``): per segment, a ``lax.cond`` folds a
+  due lane's fresh tail into its sorted key columns when
+  ``pos - sorted_upto >= resort_every``. The host mirrors the watermark
+  arithmetic (it is deterministic in ``pos``) to keep the
+  ``stats["resorts"]`` counter without any device read.
 
 A^3 state at serve time: the paper's "comprehension-time" preprocessing
 maps to prefill — the prompt's keys are column-sorted per slot and
@@ -45,24 +67,26 @@ prompt's *final* chunk folds the completed ring into the per-column
 sorted matrices and advances the ``sorted_upto`` watermark (a
 ``lax.cond`` skips the sort on every other tick — nothing reads a
 PREFILLING slot's sort). Tokens generated after prefill form the
-*fresh tail*, always treated as candidates (exact attention) until a
-periodic re-sort folds them in.
+*fresh tail*, always treated as candidates (exact attention) until an
+in-graph re-sort folds them in.
 
-``make_serve_step`` / ``make_prefill_chunk_step`` build the jitted
-dispatches used by both the engine and the multi-pod dry-run (they are
-what the ``decode_*`` / chunked-prefill shapes lower).
+``make_serve_step`` / ``make_decode_block_step`` /
+``make_prefill_chunk_step`` build the jitted dispatches used by both
+the engine and the multi-pod dry-run (they are what the ``decode_*`` /
+chunked-prefill shapes lower).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, List, NamedTuple, Optional, \
+    Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config import A3Config, A3Mode, ModelConfig, ServeConfig
-from repro.core.candidate_selection import sort_key_columns
 from repro.models import decoder
 
 
@@ -78,6 +102,41 @@ def make_serve_step(
     def step(params, cache, token, pos):
         return decoder.decode_step(params, cfg, cache, token, pos, a3=a3,
                                    use_kernel=use_kernel)
+
+    return step
+
+
+def make_decode_block_step(
+    cfg: ModelConfig,
+    a3: A3Config = A3Config(),
+    *,
+    steps: int = 1,
+    use_kernel: bool = False,
+    resort_every: int = 0,
+    temperature: float = 0.0,
+) -> Callable:
+    """Returns the blocked-decode dispatch: step(params, cache,
+    token [B], pos [B], steps_left [B][, rng, sample_ids]) ->
+    (ring [B, steps], new_cache). ``steps`` decode iterations run
+    device-resident under one ``lax.scan`` — in-graph sampling feeds
+    each step's token from the previous step's logits, and
+    ``resort_every > 0`` folds due lanes' A^3 fresh tails into the
+    sorted key columns in-graph (no host watermark read). The ``rng``
+    and per-request ``sample_ids`` arguments exist only when
+    ``temperature > 0`` (greedy dispatches keep the production
+    signature the dry-run lowers)."""
+
+    if temperature > 0.0:
+        def step(params, cache, token, pos, steps_left, rng, sample_ids):
+            return decoder.decode_block(
+                params, cfg, cache, token, pos, steps_left, steps=steps,
+                a3=a3, use_kernel=use_kernel, resort_every=resort_every,
+                temperature=temperature, rng=rng, sample_ids=sample_ids)
+    else:
+        def step(params, cache, token, pos, steps_left):
+            return decoder.decode_block(
+                params, cfg, cache, token, pos, steps_left, steps=steps,
+                a3=a3, use_kernel=use_kernel, resort_every=resort_every)
 
     return step
 
@@ -121,6 +180,9 @@ class SlotState:
     phase: str = IDLE
     prompt: Optional[np.ndarray] = None
     cursor: int = 0               # prompt tokens prefilled so far
+    # host-side mirror of the in-graph A^3 ``sorted_upto`` watermark
+    # (deterministic in pos; keeps stats["resorts"] without device reads)
+    sorted_upto: int = 0
 
     @property
     def active(self) -> bool:
@@ -139,23 +201,44 @@ class ServeEngine:
 
     def __init__(self, params: Any, cfg: ModelConfig, *, slots: int = 4,
                  max_len: int = 2048, a3: A3Config = A3Config(),
-                 greedy: bool = True, resort_every: int = 64,
-                 prefill_chunk: Optional[int] = None):
+                 resort_every: int = 64,
+                 prefill_chunk: Optional[int] = None,
+                 decode_block: int = 1, use_kernel: bool = False,
+                 temperature: float = 0.0, sample_seed: int = 0):
         self.params, self.cfg, self.a3 = params, cfg, a3
         self.max_len = max_len
         self._use_a3 = a3.mode != A3Mode.OFF
-        self.resort_every = resort_every
+        # clamp to >= 1: the in-graph dispatch treats resort_every <= 0
+        # as "resort disabled", while the historical host-side meaning
+        # of 0 was "resort whenever any fresh tail exists" — which is
+        # what 1 expresses (0 would only add no-op sorts at pos == upto)
+        self.resort_every = max(1, int(resort_every))
         if prefill_chunk is not None and \
                 not decoder.supports_chunked_prefill(cfg):
             prefill_chunk = None      # recurrent blocks: whole-prompt admit
         self.prefill_chunk = prefill_chunk
+        self.decode_block = max(1, int(decode_block))
+        self.use_kernel = use_kernel
+        # temperature > 0 is THE sampling switch: 0 pins greedy argmax
+        self.temperature = max(0.0, temperature)
+        self._sample_rng = (jax.random.PRNGKey(sample_seed)
+                            if self.temperature > 0.0 else None)
         self.slots = [SlotState() for _ in range(slots)]
         self.cache = decoder.init_cache(cfg, slots, max_len,
                                         a3=self._use_a3)
+        # host-side mirror input for stats["resorts"]: number of
+        # global-attention segments carrying sorted-key state (dict-key
+        # inspection only — no device read).
+        self._n_a3_segs = sum(1 for sc in self.cache.values()
+                              if isinstance(sc, dict) and "sk_vals" in sc)
         # donate the cache argument: ring buffers update in place (no
         # full-cache copy per tick; the jit aliases input to output).
-        self._decode = jax.jit(make_serve_step(cfg, a3),
-                               donate_argnums=(1,))
+        self._decode_block = jax.jit(
+            make_decode_block_step(
+                cfg, a3, steps=self.decode_block, use_kernel=use_kernel,
+                resort_every=self.resort_every if self._use_a3 else 0,
+                temperature=self.temperature),
+            donate_argnums=(1,))
         self._prefill = None
         self._prefill_nosort = None
         if prefill_chunk is not None:
@@ -169,21 +252,25 @@ class ServeEngine:
                     make_prefill_chunk_step(cfg, a3=True,
                                             update_sort=False),
                     donate_argnums=(1,))
-        self._queue: List[Request] = []
+        self._queue: Deque[Request] = collections.deque()
         self._done: Dict[int, List[int]] = {}
         self._uid = 0
-        self.greedy = greedy
         self.stats = {"prefill_tokens": 0, "decode_steps": 0,
-                      "decode_dispatches": 0, "prefill_dispatches": 0,
+                      "decode_steps_advanced": 0,
+                      "decode_dispatches": 0, "decode_blocks": 0,
+                      "prefill_dispatches": 0, "host_syncs": 0,
                       "ticks": 0, "resorts": 0}
 
     @classmethod
     def from_config(cls, params: Any, cfg: ModelConfig, serve: ServeConfig,
                     a3: A3Config = A3Config()) -> "ServeEngine":
         return cls(params, cfg, slots=serve.slots, max_len=serve.max_len,
-                   a3=a3, greedy=serve.greedy,
-                   resort_every=serve.resort_every,
-                   prefill_chunk=serve.prefill_chunk)
+                   a3=a3, resort_every=serve.resort_every,
+                   prefill_chunk=serve.prefill_chunk,
+                   decode_block=serve.decode_block,
+                   use_kernel=serve.use_kernel,
+                   temperature=serve.temperature,
+                   sample_seed=serve.sample_seed)
 
     # -- public API ---------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
@@ -202,53 +289,12 @@ class ServeEngine:
         return self._done.get(uid)
 
     def step(self):
-        """One engine tick: admit -> chunked prefill -> resort -> decode."""
+        """One engine tick: admit -> chunked prefill -> blocked decode
+        (the A^3 re-sort runs *inside* the decode dispatch)."""
         self.stats["ticks"] += 1
         self._admit()
         self._prefill_tick()
-        if self._use_a3:
-            self._maybe_resort()
         self._advance()
-
-    def _maybe_resort(self):
-        """Re-sort a slot's key columns when the exact-tail (tokens
-        written since the last sort) grows past ``resort_every`` — the
-        serving-time analogue of the paper's comprehension-time
-        preprocessing, amortized over ``resort_every`` decode steps.
-
-        All segments' ``sorted_upto`` watermarks come back in one
-        ``device_get`` (one host read per tick), and due slots are
-        re-sorted together per segment (one batched sort + scatter).
-        PREFILLING slots are skipped: the chunked prefill dispatch
-        already maintains their sort incrementally."""
-        active = [si for si, s in enumerate(self.slots) if s.decoding]
-        if not active:
-            return
-        upto_tree = {name: sc["sorted_upto"]
-                     for name, sc in self.cache.items() if "sk_vals" in sc}
-        if not upto_tree:
-            return
-        upto_host = jax.device_get(upto_tree)      # single host read
-        for seg_name, upto in upto_host.items():
-            due = [si for si in active
-                   if self.slots[si].pos - int(upto[0, si])
-                   >= self.resort_every]
-            if not due:
-                continue
-            seg_cache = self.cache[seg_name]
-            idx = jnp.asarray(due, jnp.int32)
-            k_due = seg_cache["k"][:, idx]          # [L, n, Hkv, W, D]
-            sk = jax.vmap(jax.vmap(jax.vmap(sort_key_columns)))(k_due)
-            new_upto = jnp.asarray([self.slots[si].pos for si in due],
-                                   jnp.int32)
-            self.cache[seg_name] = {
-                **seg_cache,
-                "sk_vals": seg_cache["sk_vals"].at[:, idx].set(sk.values),
-                "sk_rows": seg_cache["sk_rows"].at[:, idx].set(sk.rows),
-                "sorted_upto": seg_cache["sorted_upto"].at[:, idx].set(
-                    new_upto[None]),
-            }
-            self.stats["resorts"] += len(due)
 
     def run_to_completion(self, max_ticks: int = 10_000):
         ticks = 0
@@ -262,7 +308,7 @@ class ServeEngine:
         for si, slot in enumerate(self.slots):
             if slot.active or not self._queue:
                 continue
-            req = self._queue.pop(0)
+            req = self._queue.popleft()
             if self.prefill_chunk is None:
                 self._admit_whole_prompt(si, req)
                 continue
@@ -282,11 +328,19 @@ class ServeEngine:
                                          max_len=self.max_len,
                                          a3=self._use_a3)
         self._write_slot_cache(si, pcache)
-        nxt = int(jnp.argmax(logits[0]))
+        # blocking first-token read; the draw goes through sample_logits
+        # so temperature sampling covers position s too (keyed at the
+        # producing step's position s-1, disjoint from the decode steps'
+        # s, s+1, ... keys)
+        nxt = int(decoder.sample_logits(
+            logits, temperature=self.temperature, rng=self._sample_rng,
+            pos=jnp.asarray([s - 1], jnp.int32),
+            ids=jnp.asarray([req.uid], jnp.int32))[0])
+        self.stats["host_syncs"] += 1
         self.slots[si] = SlotState(uid=req.uid, pos=s,
                                    generated=[nxt],
                                    budget=req.max_new_tokens - 1,
-                                   phase=DECODING)
+                                   phase=DECODING, sorted_upto=s)
         self.stats["prefill_tokens"] += s
         self.stats["prefill_dispatches"] += 1
         if self.slots[si].budget <= 0:
@@ -325,7 +379,23 @@ class ServeEngine:
             jnp.asarray(pos), jnp.asarray(length),
             jnp.asarray(sort_lanes))
         self.stats["prefill_dispatches"] += 1
-        nxt = np.asarray(jnp.argmax(logits, -1))
+        nxt = None
+        if sort_lanes.any():
+            # blocking first-token read — only on ticks where some lane
+            # finishes its prompt (mid-prompt chunk logits are unused).
+            # The draw goes through sample_logits so temperature
+            # sampling covers each request's first token too, keyed at
+            # the producing position len(prompt)-1.
+            pos_v = np.zeros((n,), np.int32)
+            ids_v = np.zeros((n,), np.int32)
+            for si in pre:
+                pos_v[si] = len(self.slots[si].prompt) - 1
+                ids_v[si] = self.slots[si].uid
+            nxt = np.asarray(decoder.sample_logits(
+                logits, temperature=self.temperature,
+                rng=self._sample_rng, pos=jnp.asarray(pos_v),
+                ids=jnp.asarray(ids_v)))
+            self.stats["host_syncs"] += 1
         for si in pre:
             s = self.slots[si]
             s.cursor += takes[si]
@@ -335,6 +405,7 @@ class ServeEngine:
                 s.phase = DECODING
                 s.generated = [int(nxt[si])]
                 s.budget -= 1
+                s.sorted_upto = len(s.prompt)  # final chunk folded the sort
                 if s.budget <= 0:
                     self._finish(si)
 
@@ -344,31 +415,66 @@ class ServeEngine:
         self.cache = jax.tree.map(write, self.cache, pcache)
 
     def _advance(self):
+        # lanes already at the max_len clamp cannot take a single step
+        # (a prompt of length >= max_len finishes with just its prefill
+        # token): finish them host-side so every dispatched lane has
+        # steps_left >= 1 and the ring harvest never slices negatively.
+        for si, s in enumerate(self.slots):
+            if s.decoding and self.max_len - 1 - s.pos <= 0:
+                self._finish(si)
         active = [si for si, s in enumerate(self.slots) if s.decoding]
         if not active:
             return
-        # ragged batched decode: every DECODING slot advances in ONE
-        # jitted dispatch, each writing its own ring slot at its own
-        # position. Idle/prefilling slots ride along at pos=-1: their
-        # logits are garbage (ignored) and their ring write is dropped,
-        # so mid-prefill cache rows stay intact.
-        n = len(self.slots)
+        # blocked ragged decode: every DECODING slot advances up to
+        # ``decode_block`` tokens in ONE jitted dispatch — sampling,
+        # token feedback, and the A^3 re-sort all happen in-graph, and
+        # the host syncs once per block to harvest the emitted-token
+        # ring. Idle/prefilling slots ride along at pos=-1 (dropped ring
+        # writes); lanes that exhaust their budget or hit max_len
+        # mid-block are masked off in-graph via ``steps_left``.
+        n, t = len(self.slots), self.decode_block
         tokens = np.zeros((n,), np.int32)
         pos = np.full((n,), -1, np.int32)
+        steps_left = np.zeros((n,), np.int32)
         for si in active:
-            tokens[si] = self.slots[si].generated[-1]
-            pos[si] = self.slots[si].pos
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(pos))
-        self.stats["decode_steps"] += 1
+            s = self.slots[si]
+            tokens[si] = s.generated[-1]
+            pos[si] = s.pos
+            steps_left[si] = min(s.budget, self.max_len - 1 - s.pos)
+        args = (self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(pos), jnp.asarray(steps_left))
+        if self._sample_rng is not None:
+            ids = np.zeros((n,), np.int32)
+            for si in active:         # per-request key stream (fold by uid)
+                ids[si] = self.slots[si].uid
+            ring, self.cache = self._decode_block(*args, self._sample_rng,
+                                                  jnp.asarray(ids))
+        else:
+            ring, self.cache = self._decode_block(*args)
+        # decode_steps counts executed scan iterations (T per dispatch);
+        # decode_steps_advanced counts sequential steps that advanced at
+        # least one lane (the deepest lane's progress) — iterations past
+        # it only push masked ride-along lanes
+        self.stats["decode_steps"] += t
+        self.stats["decode_steps_advanced"] += int(min(t, steps_left.max()))
         self.stats["decode_dispatches"] += 1
-        nxt = np.asarray(jnp.argmax(logits, -1))
+        self.stats["decode_blocks"] += 1
+        ring_host = np.asarray(ring)           # THE host sync of the block
+        self.stats["host_syncs"] += 1
         for si in active:
-            slot = self.slots[si]
-            slot.generated.append(int(nxt[si]))
-            slot.pos += 1
-            slot.budget -= 1
-            if slot.budget <= 0 or slot.pos >= self.max_len - 1:
+            s = self.slots[si]
+            nb = int(min(t, steps_left[si]))
+            s.generated.extend(int(tok) for tok in ring_host[si, :nb])
+            if self._use_a3:
+                # mirror the in-graph watermark (checked before each
+                # step's ring write, exactly as resort_sorted_keys does)
+                for p in range(s.pos, s.pos + nb):
+                    if p - s.sorted_upto >= self.resort_every:
+                        s.sorted_upto = p
+                        self.stats["resorts"] += self._n_a3_segs
+            s.pos += nb
+            s.budget -= nb
+            if s.budget <= 0 or s.pos >= self.max_len - 1:
                 self._finish(si)
 
     def _finish(self, si: int):

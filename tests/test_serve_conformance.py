@@ -1,24 +1,41 @@
 """Serving conformance suite: the engine is an *oracle-checked* system.
 
-Chunked + ragged admission prefill is a pure scheduling change — it must
-not alter what the model computes. Every test here pins ``ServeEngine``
-generations against the sequential single-request reference
-(whole-prompt ``decoder.prefill`` + a scalar decode loop), across slot
-counts, admission orders, and ``prefill_chunk`` settings (including the
-whole-prompt ``None`` mode), plus the engine's dispatch-count
+Chunked + ragged admission prefill and multi-step *blocked* decode are
+pure scheduling changes — they must not alter what the model computes.
+Every test here pins ``ServeEngine`` generations against the sequential
+single-request reference (whole-prompt ``decoder.prefill`` + a scalar
+decode loop), across slot counts, admission orders, ``prefill_chunk``
+settings (including the whole-prompt ``None`` mode), and
+``decode_block`` sizes (T decode steps per dispatch with in-graph
+sampling + in-graph A^3 re-sort), plus the engine's dispatch/sync-count
 invariants:
 
-* ``decode_dispatches == decode_steps``   (one ragged decode per tick)
-* ``prefill_dispatches <= ticks``         (one ragged prefill per tick)
+* ``decode_steps == T * decode_dispatches`` (executed scan iterations),
+  with ``decode_dispatches <= decode_steps_advanced <= decode_steps``
+  (the steps that advanced at least one lane; T=1 recovers the old
+  one-step-per-tick engine exactly)
+* ``decode_dispatches <= ceil(decode_steps_advanced / T) +
+  prefill_dispatches`` — the falsifiable dispatch-efficiency bound: a
+  partial block (every active lane finishes in it) can only follow a
+  prefill dispatch that flipped its cohort to DECODING
+* ``prefill_dispatches <= ticks``        (one ragged prefill per tick)
+* ``host_syncs <= decode_dispatches + prefill_dispatches`` — one ring
+  harvest per decode dispatch, and a first-token read only on prefill
+  ticks where a lane finishes its prompt
+* both ``host_syncs`` and ``decode_dispatches`` are bounded by
+  ``ceil(decode_steps / T) + prefill_dispatches`` (the sync-elimination
+  acceptance bound): syncs per generated token fall as ~1/T.
 """
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from helpers import check, run_with_devices
+from helpers import check, given, run_with_devices, settings, st
 
 from repro.config import A3Config, ModelConfig
 from repro.models import decoder as dec
@@ -67,14 +84,41 @@ def refs(params, prompts):
 
 
 def _assert_invariants(eng):
-    assert eng.stats["decode_dispatches"] == eng.stats["decode_steps"]
-    assert eng.stats["prefill_dispatches"] <= eng.stats["ticks"]
+    t, s = eng.decode_block, eng.stats
+    assert s["decode_steps"] == t * s["decode_dispatches"]  # scan iterations
+    # decode_steps_advanced = sequential steps that advanced at least one
+    # lane (deepest lane per dispatch); the gap is partial-block padding
+    adv = s["decode_steps_advanced"]
+    assert s["decode_dispatches"] <= adv <= s["decode_steps"]
+    # falsifiable dispatch-efficiency bound on the *advanced* work: a
+    # partial block means every active lane finished in it, which can
+    # only follow a prefill dispatch that flipped that cohort to
+    # DECODING — so an engine that re-dispatched blocks for finished
+    # slots (inflating dispatches without advancing lanes) fails here
+    assert s["decode_dispatches"] <= (math.ceil(adv / t)
+                                      + s["prefill_dispatches"])
+    if eng.prefill_chunk is not None:
+        # chunked admission: at most one ragged prefill dispatch per tick
+        # (whole-prompt mode instead dispatches once per admit, and
+        # blocked decode compresses the tick count below the admit count)
+        assert s["prefill_dispatches"] <= s["ticks"]
+    # one ring harvest per decode dispatch; prefill ticks sync only when
+    # a lane finishes its prompt
+    assert s["host_syncs"] <= (s["decode_dispatches"]
+                               + s["prefill_dispatches"])
+    # the sync-elimination acceptance bound: with decode_block=T both
+    # the dispatch count and the host-sync count are at most
+    # ceil(decode_steps / T) + prefill_dispatches
+    bound = math.ceil(s["decode_steps"] / t) + s["prefill_dispatches"]
+    assert s["decode_dispatches"] <= bound
+    assert s["host_syncs"] <= bound
 
 
 def _run_engine(params, prompts, *, slots, chunk, order="upfront",
-                a3=A3Config(), resort_every=64):
+                a3=A3Config(), resort_every=64, decode_block=1):
     eng = ServeEngine(params, TINY, slots=slots, max_len=MAX_LEN, a3=a3,
-                      prefill_chunk=chunk, resort_every=resort_every)
+                      prefill_chunk=chunk, resort_every=resort_every,
+                      decode_block=decode_block)
     uids = {}
     if order == "upfront":
         for i, p in enumerate(prompts):
@@ -182,6 +226,243 @@ def test_a3_chunked_matches_sequential_reference(params, prompts, chunk):
 
 
 # ---------------------------------------------------------------------------
+# blocked decode: T scanned steps per dispatch == per-step sequential
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("block", [4, 16])
+@pytest.mark.parametrize("chunk", [8, None])
+def test_blocked_decode_matches_sequential_reference(params, prompts, refs,
+                                                     block, chunk):
+    """decode_block=T runs T decode steps per jitted dispatch with
+    in-graph sampling; generations must be token-for-token identical to
+    the per-step sequential reference. MAX_NEW=6 < 16 forces mid-block
+    slot finishes (masked lanes with dropped ring writes) at block=16,
+    and 5 remaining decode steps against block=4 forces a partial
+    second block."""
+    out, eng = _run_engine(params, prompts, slots=4, chunk=chunk,
+                           decode_block=block)
+    for i, ref in enumerate(refs):
+        assert out[i] == ref, (i, block, chunk)
+    _assert_invariants(eng)
+
+
+@pytest.mark.parametrize("block", [4, 16])
+def test_blocked_decode_mixed_prefill_decode_ticks(params, prompts, refs,
+                                                   block):
+    """Ticks where some lanes prefill a chunk while others run a decode
+    block: prefilling lanes ride the block at pos=-1, and admission
+    order stays irrelevant to outputs."""
+    for order in ("reversed", "staggered"):
+        out, eng = _run_engine(params, prompts, slots=4, chunk=8,
+                               order=order, decode_block=block)
+        for i, ref in enumerate(refs):
+            assert out[i] == ref, (i, order, block)
+        _assert_invariants(eng)
+
+
+def test_blocked_decode_cuts_host_syncs_per_token(params, prompts):
+    """The point of the tentpole: same workload, same tokens, ~1/T the
+    host syncs and dispatches on decode-heavy traffic."""
+    outs, stats = {}, {}
+    for block in (1, 8):
+        out, eng = _run_engine(params, prompts, slots=4, chunk=64,
+                               decode_block=block)
+        outs[block], stats[block] = out, eng.stats
+    assert outs[1] == outs[8]
+    assert stats[8]["decode_dispatches"] < stats[1]["decode_dispatches"]
+    assert stats[8]["host_syncs"] < stats[1]["host_syncs"]
+
+
+@pytest.mark.parametrize("block", [4, 16])
+def test_a3_blocked_decode_across_resort_boundaries(params, prompts, block):
+    """A^3 blocked decode with an aggressive re-sort cadence: the
+    in-graph watermark check fires mid-block, and the blocked engine
+    must replay the per-step engine's schedule exactly — same tokens,
+    same re-sort count (host mirror)."""
+    a3 = A3Config.conservative()
+    ref_out, ref_eng = _run_engine(params, prompts[:3], slots=2, chunk=8,
+                                   a3=a3, resort_every=2, decode_block=1)
+    out, eng = _run_engine(params, prompts[:3], slots=2, chunk=8, a3=a3,
+                           resort_every=2, decode_block=block)
+    assert ref_eng.stats["resorts"] > 0          # boundaries were crossed
+    for i in ref_out:
+        assert out[i] == ref_out[i], (i, block)
+    assert eng.stats["resorts"] == ref_eng.stats["resorts"]
+    _assert_invariants(eng)
+
+
+@pytest.mark.parametrize("resort_every", [0, 2])
+def test_in_graph_resort_advances_device_watermark(params, resort_every):
+    """The engine's jitted dispatch must actually run the in-graph
+    resort (not just count it host-side): after decoding past the
+    cadence, the *device* ``sorted_upto`` watermark equals the host
+    mirror's prediction, and ``stats["resorts"]`` matches. Also covers
+    the ``resort_every=0`` clamp (historical meaning: resort whenever
+    any fresh tail exists, i.e. cadence 1)."""
+    plen, new = 10, 5
+    rng = np.random.default_rng(9)
+    eng = ServeEngine(params, TINY, slots=1, max_len=MAX_LEN,
+                      prefill_chunk=8, a3=A3Config.conservative(),
+                      resort_every=resort_every, decode_block=4)
+    eng.submit(rng.integers(0, TINY.vocab_size, size=plen),
+               max_new_tokens=new)
+    eng.run_to_completion()
+    upto, resorts = plen, 0
+    cadence = max(1, resort_every)
+    for pos in range(plen, plen + new - 1):   # decode-step positions
+        if pos - upto >= cadence:
+            upto, resorts = pos, resorts + 1
+    dev_upto = int(np.asarray(
+        jax.device_get(eng.cache["seg0"]["sorted_upto"]))[0, 0])
+    assert dev_upto == upto
+    assert eng.stats["resorts"] == resorts * eng._n_a3_segs
+    assert resorts > 0                        # the scenario is non-trivial
+
+
+def test_decode_block_one_step_equals_decode_step(params):
+    """decoder.decode_block with steps=1 is decode_step + in-graph
+    argmax: same ring token, same cache update."""
+    rng = np.random.default_rng(5)
+    p = rng.integers(0, TINY.vocab_size, size=(2, 9))
+    _, cache = dec.prefill(params, TINY, jnp.asarray(p, jnp.int32),
+                           max_len=32)
+    tok = jnp.asarray([5, 6], jnp.int32)
+    pos = jnp.asarray([9, 9], jnp.int32)
+    lg, cache_ref = dec.decode_step(params, TINY,
+                                    jax.tree.map(lambda x: x, cache),
+                                    tok, pos)
+    ring, cache_blk = dec.decode_block(params, TINY, cache, tok, pos,
+                                       jnp.asarray([1, 1], jnp.int32),
+                                       steps=1)
+    np.testing.assert_array_equal(np.asarray(ring[:, 0]),
+                                  np.asarray(jnp.argmax(lg, -1)))
+    flat_b, _ = jax.tree_util.tree_flatten_with_path(cache_blk)
+    flat_r, _ = jax.tree_util.tree_flatten_with_path(cache_ref)
+    for (ka, a), (kb, b) in zip(flat_b, flat_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6, err_msg=str(ka))
+
+
+def test_decode_block_exhausted_lane_rides_along(params):
+    """A lane whose steps_left hits 0 mid-block freezes: ring entries
+    read -1 and its cache rows stay bit-identical from that step on."""
+    rng = np.random.default_rng(6)
+    p = rng.integers(0, TINY.vocab_size, size=(2, 9))
+    _, cache = dec.prefill(params, TINY, jnp.asarray(p, jnp.int32),
+                           max_len=32)
+    tok = jnp.asarray([5, 6], jnp.int32)
+    pos = jnp.asarray([9, 9], jnp.int32)
+    ring, cache_blk = dec.decode_block(
+        params, TINY, jax.tree.map(lambda x: x, cache), tok, pos,
+        jnp.asarray([4, 2], jnp.int32), steps=4)
+    ring = np.asarray(ring)
+    assert (ring[0] >= 0).all()
+    assert (ring[1, :2] >= 0).all() and (ring[1, 2:] == -1).all()
+    # lane 1's cache must equal a 2-step blocked decode of lane 1 alone
+    cache1 = jax.tree.map(lambda x: x[:, 1:2], cache)
+    _, cache1_ref = dec.decode_block(params, TINY, cache1, tok[1:],
+                                     pos[1:], jnp.asarray([2], jnp.int32),
+                                     steps=2)
+    flat_b, _ = jax.tree_util.tree_flatten_with_path(cache_blk)
+    flat_r, _ = jax.tree_util.tree_flatten_with_path(cache1_ref)
+    for (ka, a), (kb, b) in zip(flat_b, flat_r):
+        np.testing.assert_allclose(np.asarray(a)[:, 1:2], np.asarray(b),
+                                   rtol=1e-6, atol=1e-6, err_msg=str(ka))
+
+
+def _run_sampling_engine(params, ps, *, block, seed=3):
+    eng = ServeEngine(params, TINY, slots=2, max_len=MAX_LEN,
+                      prefill_chunk=8, decode_block=block,
+                      temperature=0.8, sample_seed=seed)
+    uids = [eng.submit(p, max_new_tokens=MAX_NEW) for p in ps]
+    eng.run_to_completion()
+    return [eng.result(u) for u in uids]
+
+
+def test_temperature_sampling_blocking_invariant(params, prompts, refs):
+    """temperature > 0 draws in-graph from the tempered softmax, keyed
+    per (seed, request uid, position): draws are identical across
+    decode_block sizes (the key folds the absolute position, not the
+    step index), requests with identical prompts diverge (distinct uid
+    key streams — including the *first* token, which is drawn at the
+    prefill handoff, not argmax'd), and the sampled stream differs from
+    greedy. Also the only place the rng/sample_ids dispatch variant is
+    traced."""
+    outs = {b: _run_sampling_engine(params, prompts[:2], block=b)
+            for b in (1, 4)}
+    for b, out in outs.items():
+        for r in out:
+            assert r is not None and len(r) == MAX_NEW
+            assert max(r) < TINY.vocab_size, b
+    assert outs[1] == outs[4]
+    assert outs[1][0] != refs[0]        # sampling engaged, not argmax
+    # same prompt submitted twice -> different uids -> decorrelated
+    # draws from the very first token
+    twin = _run_sampling_engine(params, [prompts[0], prompts[0]], block=4)
+    assert twin[0] != twin[1]
+    assert twin[0][0] != twin[1][0]     # first token sampled per-request
+
+
+# ---------------------------------------------------------------------------
+# in-graph A^3 re-sort == host-side sort of the ring
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    pos=st.lists(st.integers(min_value=-1, max_value=30), min_size=3,
+                 max_size=3),
+    upto=st.lists(st.integers(min_value=0, max_value=20), min_size=3,
+                  max_size=3),
+    resort_every=st.integers(min_value=1, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_resort_sorted_keys_matches_host_sort(pos, upto, resort_every,
+                                              seed):
+    """Property: ``decoder.resort_sorted_keys`` leaves due lanes'
+    sk_vals/sk_rows identical to a host-side ``sort_key_columns`` of
+    the ring (and advances their watermark to ``pos``), while non-due
+    lanes keep all three leaves bit-identical."""
+    from repro.core.candidate_selection import sort_key_columns
+    rng = np.random.default_rng(seed)
+    L, B, H, W, D = 2, 3, 2, 8, 4
+    k = jnp.asarray(rng.normal(size=(L, B, H, W, D)), jnp.float32)
+    stale_v = jnp.asarray(rng.normal(size=(L, B, H, W, D)), jnp.float32)
+    stale_r = jnp.asarray(rng.integers(0, W, size=(L, B, H, W, D)),
+                          jnp.int32)
+    upto_a = jnp.asarray(np.broadcast_to(np.asarray(upto, np.int32),
+                                         (L, B)))
+    cache = {"seg0": {"k": k, "v": jnp.zeros_like(k), "sk_vals": stale_v,
+                      "sk_rows": stale_r, "sorted_upto": upto_a},
+             "seg1": {"k": k + 1, "v": jnp.zeros_like(k)}}  # no sk: untouched
+    pos_a = jnp.asarray(pos, jnp.int32)
+    out = dec.resort_sorted_keys(cache, pos_a, resort_every)
+    ref = jax.vmap(jax.vmap(jax.vmap(sort_key_columns)))(k)
+    for b in range(B):
+        due = pos[b] >= 0 and pos[b] - upto[b] >= resort_every
+        if due:
+            np.testing.assert_array_equal(
+                np.asarray(out["seg0"]["sk_vals"][:, b]),
+                np.asarray(ref.values[:, b]))
+            np.testing.assert_array_equal(
+                np.asarray(out["seg0"]["sk_rows"][:, b]),
+                np.asarray(ref.rows[:, b]))
+            assert (np.asarray(out["seg0"]["sorted_upto"][:, b])
+                    == pos[b]).all()
+        else:
+            np.testing.assert_array_equal(
+                np.asarray(out["seg0"]["sk_vals"][:, b]),
+                np.asarray(stale_v[:, b]))
+            np.testing.assert_array_equal(
+                np.asarray(out["seg0"]["sk_rows"][:, b]),
+                np.asarray(stale_r[:, b]))
+            assert (np.asarray(out["seg0"]["sorted_upto"][:, b])
+                    == upto[b]).all()
+    # segments without sorted-key state pass through untouched
+    np.testing.assert_array_equal(np.asarray(out["seg1"]["k"]),
+                                  np.asarray(cache["seg1"]["k"]))
+
+
+# ---------------------------------------------------------------------------
 # decoder-level: prefill_chunk == prefill (cache + logits)
 # ---------------------------------------------------------------------------
 
@@ -259,6 +540,27 @@ def test_prefill_chunk_ring_wrap_matches_whole_prompt(plen, chunk):
                                    rtol=1e-5, atol=1e-5, err_msg=str(ka))
 
 
+@pytest.mark.parametrize("block", [1, 4])
+def test_prompt_at_max_len_finishes_with_prefill_token(params, block):
+    """A prompt of length >= max_len leaves no room to decode
+    (``pos >= max_len - 1`` immediately): the slot must finish with
+    exactly its prefill token — no decode dispatch for it, no ring
+    wrap-around write, and no -1 sentinels leaking into the result."""
+    rng = np.random.default_rng(8)
+    eng = ServeEngine(params, TINY, slots=2, max_len=16, prefill_chunk=8,
+                      decode_block=block)
+    u_long = eng.submit(rng.integers(0, TINY.vocab_size, size=16),
+                        max_new_tokens=4)
+    u_ok = eng.submit(rng.integers(0, TINY.vocab_size, size=5),
+                      max_new_tokens=4)
+    eng.run_to_completion()
+    r = eng.result(u_long)
+    assert len(r) == 1 and r[0] >= 0
+    assert len(eng.result(u_ok)) == 4
+    assert all(tok >= 0 for tok in eng.result(u_ok))
+    _assert_invariants(eng)
+
+
 def test_engine_rejects_empty_prompt(params):
     eng = ServeEngine(params, TINY, slots=1, max_len=32, prefill_chunk=8)
     with pytest.raises(ValueError):
@@ -316,14 +618,16 @@ def test_decode_negative_pos_lane_drops_ring_write(params):
 def test_sharded_serve_lowering_ragged_shapes():
     """The sharded serve path lowers the same ragged dispatches the
     engine runs: decode with a per-slot pos *vector* + donated cache,
-    and the chunked admission-prefill dispatch."""
+    the chunked admission-prefill dispatch, and the multi-step scanned
+    decode-block dispatch (in-graph sampling + A^3 re-sort) — so the
+    blocked dispatch lowers under GSPMD on every PR."""
     out = check(run_with_devices("""
 import jax
 from repro.config import A3Config, ShapeConfig, ShapeKind, ShardingConfig, \\
     get_arch, smoke_variant
 from repro.launch.mesh import make_mesh
 from repro.launch.dryrun import input_specs, lower_decode, \\
-    lower_prefill_chunk
+    lower_decode_block, lower_prefill_chunk
 
 cfg = smoke_variant(get_arch("phi4-mini-3.8b"))
 dshape = ShapeConfig("decode_smoke", ShapeKind.DECODE, 256, 8)
@@ -339,6 +643,10 @@ with mesh:
     c2 = lower_prefill_chunk(cfg, pshape, mesh, scfg, chunk=64,
                              a3=A3Config.conservative()).compile()
     assert c2.memory_analysis().alias_size_in_bytes > 0
+    c3 = lower_decode_block(cfg, dshape, mesh, scfg, steps=8,
+                            a3=A3Config.conservative(),
+                            resort_every=64).compile()
+    assert c3.memory_analysis().alias_size_in_bytes > 0
 print("OK")
-""", devices=8, timeout=600))
+""", devices=8, timeout=900))
     assert "OK" in out
