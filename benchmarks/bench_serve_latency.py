@@ -18,6 +18,13 @@ admission window included — stays ~<=2x chunked) and
 a constant multiple set by the chunk size, independent of prompt
 length, where whole-prompt scales with the prompt).
 
+The *hybrid tail-latency* scenario runs the same bounded-tail claim
+through a recurrent/hybrid arch (RG-LRU pattern): chunked admission
+goes through the identical mixer-state dispatch, so the chunked
+worst-tick ratio must be set by the chunk size and independent of
+prompt length (measured at two prompt lengths;
+``chunked_ratio_growth`` ~ 1), while whole-prompt admission scales.
+
 The *decode-block sweep* measures the multi-step scanned decode claim:
 at ``decode_block`` in {1, 8, 32}, T decode steps run device-resident
 per dispatch (in-graph sampling + in-graph A^3 re-sort) and the host
@@ -39,13 +46,24 @@ import time
 import jax
 import numpy as np
 
-from repro.config import A3Config, ModelConfig
+from repro.config import A3Config, AttentionKind, BlockKind, ModelConfig
 from repro.models import decoder
 from repro.serve.engine import ServeEngine
 
 TINY = ModelConfig("bench-tiny", "dense", num_layers=4, d_model=128,
                    num_heads=8, num_kv_heads=4, d_ff=256, vocab_size=512,
                    head_dim=32, dtype="float32")
+# hybrid recurrent arch (recurrentgemma-like RG-LRU pattern): chunked
+# admission must bound tail ticks here too — the mixer-state interface
+# carries the conv tail + LRU hidden state across chunk boundaries
+TINY_HYBRID = ModelConfig("bench-tiny-hybrid", "hybrid", num_layers=3,
+                          d_model=128, num_heads=8, num_kv_heads=4,
+                          d_ff=256, vocab_size=512, head_dim=32,
+                          attention_kind=AttentionKind.SLIDING,
+                          window_size=64,
+                          block_pattern=(BlockKind.RGLRU, BlockKind.RGLRU,
+                                         BlockKind.ATTENTION),
+                          act="gelu", dtype="float32")
 
 
 def run_staggered(params, *, slots: int, requests: int, stagger: int,
@@ -155,35 +173,34 @@ def compare_dispatch_schemes(params, *, slots: int, max_len: int) -> dict:
 
 
 def run_tail_latency(params, *, slots: int = 4, prompt_len: int = 2048,
-                     chunk: int = 64, a3: A3Config = A3Config()) -> dict:
+                     chunk: int = 64, a3: A3Config = A3Config(),
+                     model: ModelConfig = TINY) -> dict:
     """Tail-tick latency: one ``prompt_len``-token prompt admitted
     mid-stream against ``slots - 1`` actively decoding slots.
 
-    Whole-prompt admission stalls every decoding slot for the entire
-    prompt forward on the admission tick; chunked admission bounds the
-    stall to one ``chunk``-token dispatch per tick. Reports worst-tick /
-    median-tick for both modes — the chunked ratio is the bounded-tail
-    claim (no tick should exceed ~2x the median)."""
-    vocab = TINY.vocab_size
+    Whole-prompt admission (an explicit max_len-sized chunk, so the
+    prompt admits in one dispatch; ``prefill_chunk=None`` defaults to a
+    capped chunk and would not reproduce the stall) blocks every
+    decoding slot for the entire prompt forward on the admission tick;
+    chunked admission bounds the stall to one ``chunk``-token dispatch
+    per tick. Reports worst-tick / median-tick for both modes — the
+    chunked ratio is the bounded-tail claim (no tick should exceed ~2x
+    the median). ``model`` selects the arch — the hybrid recurrent
+    scenario runs the same workload through RG-LRU + attention
+    segments."""
+    vocab = model.vocab_size
     max_len = prompt_len + 64
     results = {}
-    for label, ch in (("whole_prompt", None), ("chunked", chunk)):
-        eng = ServeEngine(params, TINY, slots=slots, max_len=max_len,
+    for label, ch in (("whole_prompt", max_len), ("chunked", chunk)):
+        eng = ServeEngine(params, model, slots=slots, max_len=max_len,
                           a3=a3, prefill_chunk=ch)
         rng = np.random.default_rng(1)
-        # warm both jitted dispatches (first prefill/decode tick compiles)
+        # warm both jitted dispatches (first prefill/decode tick
+        # compiles; dispatch shapes are prompt-length-independent in
+        # both modes — whole-prompt admission is a max_len-sized chunk)
         w = eng.submit(rng.integers(0, vocab, size=12), max_new_tokens=3)
         eng.run_to_completion()
         assert eng.result(w) is not None
-        if ch is None:
-            # whole-prompt admission traces per prompt *length*: warm the
-            # long shape too, so the timed stall measures the prompt
-            # forward, not one-time compilation. (Chunked dispatch shapes
-            # are length-independent — already warm.)
-            w2 = eng.submit(rng.integers(0, vocab, size=prompt_len),
-                            max_new_tokens=2)
-            eng.run_to_completion()
-            assert eng.result(w2) is not None
 
         # slots-1 short requests decode steadily with plenty of budget
         for _ in range(slots - 1):
@@ -233,8 +250,35 @@ def run_tail_latency(params, *, slots: int = 4, prompt_len: int = 2048,
             "ticks": eng.stats["ticks"],
         }
     results["config"] = {"slots": slots, "prompt_len": prompt_len,
-                         "chunk": chunk}
+                         "chunk": chunk, "arch": model.name}
     return results
+
+
+def run_tail_latency_hybrid(*, slots: int = 4, chunk: int = 64,
+                            prompt_lens=(256, 1024)) -> dict:
+    """The recurrent-arch bounded-tail claim: the hybrid RG-LRU arch
+    admits through the same chunked path (mixer-state interface), so
+    its worst-tick / decode-median ratio is set by the chunk size and
+    INDEPENDENT of prompt length, while whole-prompt admission scales
+    with the prompt. Runs the tail scenario at two prompt lengths and
+    reports the chunked ratio's growth between them (~1.0 = bounded)."""
+    params = decoder.init_params(jax.random.PRNGKey(1), TINY_HYBRID)
+    out = {}
+    for plen in prompt_lens:
+        out[str(plen)] = run_tail_latency(params, slots=slots,
+                                          prompt_len=plen, chunk=chunk,
+                                          model=TINY_HYBRID)
+    lo, hi = str(prompt_lens[0]), str(prompt_lens[-1])
+    out["chunked_ratio_growth"] = (
+        out[hi]["chunked"]["worst_over_decode_median"]
+        / out[lo]["chunked"]["worst_over_decode_median"])
+    out["whole_prompt_ratio_growth"] = (
+        out[hi]["whole_prompt"]["worst_over_decode_median"]
+        / out[lo]["whole_prompt"]["worst_over_decode_median"])
+    out["config"] = {"slots": slots, "chunk": chunk,
+                     "prompt_lens": list(prompt_lens),
+                     "arch": TINY_HYBRID.name}
+    return out
 
 
 def run_decode_block_sweep(params, *, slots: int = 4, requests: int = 4,
@@ -335,6 +379,8 @@ def main() -> None:
     tail = run_tail_latency(params, slots=args.slots,
                             prompt_len=args.tail_prompt_len,
                             chunk=args.prefill_chunk, a3=a3)
+    tail_hybrid = run_tail_latency_hybrid(slots=args.slots,
+                                          chunk=args.prefill_chunk)
     blocks = run_decode_block_sweep(params, slots=args.slots)
     payload = {
         "bench": "serve_latency_staggered",
@@ -345,6 +391,7 @@ def main() -> None:
         "result": res,
         "dispatch_compare": cmp,
         "tail_latency": tail,
+        "tail_latency_hybrid": tail_hybrid,
         "decode_block_sweep": blocks,
     }
     with open(args.out, "w") as f:

@@ -8,13 +8,17 @@ Every ``engine.step()`` is one *tick* of the admission state machine::
                                  (T x [in-graph resort -> step -> sample])
 
 * **admit**: queued requests claim free slots and enter the PREFILLING
-  phase (no forward pass; the first chunk dispatch zeroes the slot's
-  reused cache rows in-graph).
+  phase (no forward pass; the first chunk dispatch resets the slot's
+  reused mixer state — KV ring rows AND recurrent carries — in-graph).
 * **chunked prefill**: all PREFILLING slots advance by up to
   ``prefill_chunk`` prompt tokens in ONE padded ragged dispatch (per-
   slot cursors), so a long prompt never stalls decoding slots for more
-  than one chunk. A slot whose cursor reaches the end of its prompt
-  emits its first token and flips to DECODING.
+  than one chunk. Every arch admits this way — recurrent/hybrid stacks
+  carry mid-prompt state across chunks through the per-segment
+  mixer-state interface (``repro.models.mixer``). A slot whose cursor
+  reaches the end of its prompt samples its first token in-graph and
+  flips to DECODING; the same tick's decode block consumes that token
+  on device (the prefill tick itself never blocks).
 * **blocked decode**: every DECODING slot advances up to
   ``decode_block`` = T tokens in ONE jitted ``lax.scan`` dispatch
   (per-slot positions, donated in-place KV cache). Sampling runs

@@ -303,8 +303,11 @@ class ServeConfig:
     # many tokens, one ragged batched dispatch per engine tick, so a
     # long prompt never stalls decoding slots for more than one chunk
     # and multiple queued prompts share a single padded dispatch.
-    # None = whole-prompt prefill at admit (one dispatch per admit; the
-    # only mode for archs with recurrent blocks).
+    # Chunked admission covers EVERY arch (the per-segment mixer-state
+    # interface carries recurrent mid-prompt state across chunks).
+    # None = default admission chunk of min(max_len, 512) — same
+    # dispatch, no separate code path; prompts <= 512 tokens still
+    # admit in a single dispatch.
     prefill_chunk: Optional[int] = None
     # A^3: decode steps a slot may accumulate past its sorted_upto
     # watermark before its key columns are re-sorted (in-graph: the

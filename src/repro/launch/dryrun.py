@@ -262,12 +262,13 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         if shape.kind == ShapeKind.TRAIN:
             lowered = lower_train(cfg, shape, mesh, sharding_cfg)
         elif shape.kind == ShapeKind.PREFILL:
-            chunkable = bool(prefill_chunk) and not cfg.frontend and \
-                decoder.supports_chunked_prefill(cfg)
+            # chunked admission covers every token arch (the mixer-state
+            # interface carries recurrent mid-prompt state); frontend
+            # archs admit whole-prompt from precomputed embeddings
+            chunkable = bool(prefill_chunk) and not cfg.frontend
             if prefill_chunk and not chunkable and verbose:
-                print(f"  {arch}: chunked admission unsupported "
-                      f"(frontend/recurrent); lowering whole-prompt "
-                      f"prefill")
+                print(f"  {arch}: chunked admission takes token prompts; "
+                      f"lowering whole-prompt (embeds) prefill")
             if chunkable:
                 lowered = lower_prefill_chunk(cfg, shape, mesh,
                                               sharding_cfg,

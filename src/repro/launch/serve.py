@@ -27,8 +27,11 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=512)
     ap.add_argument("--prefill-chunk", type=int, default=0,
-                    help="admission-prefill chunk size in tokens; 0 = "
-                         "whole-prompt prefill at admit")
+                    help="admission-prefill chunk size in tokens (every "
+                         "arch, incl. recurrent/hybrid stacks — the "
+                         "mixer-state interface carries mid-prompt "
+                         "state); 0 = default chunk of "
+                         "min(max_len, 512)")
     ap.add_argument("--decode-block", type=int, default=1,
                     help="decode steps per jitted dispatch (lax.scan with "
                          "in-graph sampling + A^3 re-sort; the host syncs "

@@ -12,6 +12,18 @@ per layer). Examples:
   recurrentgemma   -> 17 segments (rglru pairs / attention, 1:2)
   xlstm            -> alternating mLSTM / sLSTM segments
 
+Every segment kind implements the per-segment **mixer-state interface**
+(:mod:`repro.models.mixer`): ``init_state / forward / prefill_full /
+prefill_chunk / decode_step``. The four execution paths here — train
+forward, whole-prompt prefill, chunked ragged admission prefill, and
+ragged decode — are each ONE kind-agnostic loop over segments; per-kind
+behavior (KV ring buffers + A^3 sorted columns, conv tail + LRU hidden
+state, mLSTM matrix memory, sLSTM cell state) lives entirely behind the
+mixer registry, with uniform ragged pad-lane masking. Chunked admission
+therefore covers every architecture, including recurrent/hybrid stacks
+(the mid-prompt recurrent carry is part of each mixer's
+``prefill_chunk``).
+
 KV caches are **ring buffers** sized ``min(max_len, window)`` per
 segment — sliding-window layers at 500k context keep an O(window) cache,
 which is what makes ``long_500k`` runnable for SWA/hybrid archs.
@@ -24,22 +36,17 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.config import A3Config, A3Mode, AttentionKind, BlockKind, ModelConfig
-from repro.kernels.decode_attention.ops import a3_decode_attention
+from repro.config import A3Config, A3Mode, BlockKind, ModelConfig
 from repro.models import xlstm as xl
 from repro.models.common import (
     Params,
     shard_act,
     attention_init,
-    attention_out,
-    attention_qkv,
-    attention_xla_flash,
     cross_entropy_loss,
     dense_init,
     embed_init,
@@ -49,70 +56,23 @@ from repro.models.common import (
     rmsnorm_init,
     softcap,
 )
-from repro.models.moe import moe_apply, moe_init
-from repro.models.rglru import (
-    CONV_WIDTH,
-    rglru_apply_scan,
-    rglru_decode_step,
-    rglru_init,
+# FULL_WINDOW and cache_len_for are re-exported: they are decoder's
+# long-standing public cache-geometry API (ring sizing), now owned by
+# the mixer module alongside the segment machinery.
+from repro.models.mixer import (  # noqa: F401
+    FULL_WINDOW,
+    MIXERS,
+    SegmentSpec,
+    build_segments,
+    cache_len_for,
 )
-
-FULL_WINDOW = 1 << 30
+from repro.models.moe import moe_apply, moe_init
+from repro.models.rglru import rglru_init
 
 
 def padded_vocab(v: int) -> int:
     """Pad vocab to a multiple of 128 (MXU lane + mesh divisibility)."""
     return ((v + 127) // 128) * 128
-
-
-# ---------------------------------------------------------------------------
-# segments
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class SegmentSpec:
-    kind: BlockKind
-    ffn: str                 # "dense" | "moe" | "none"
-    window: int              # FULL_WINDOW for global attention
-    layers: Tuple[int, ...]  # absolute layer indices
-
-    @property
-    def count(self) -> int:
-        return len(self.layers)
-
-
-def _layer_signature(cfg: ModelConfig, i: int) -> Tuple:
-    kind = cfg.block_kind(i)
-    if kind in (BlockKind.MLSTM, BlockKind.SLSTM):
-        ffn = "dense" if cfg.d_ff else "none"
-    elif cfg.moe is not None and i >= cfg.moe.num_dense_layers:
-        ffn = "moe"
-    else:
-        ffn = "dense"
-    window = FULL_WINDOW
-    if kind == BlockKind.ATTENTION:
-        if cfg.attention_kind == AttentionKind.SLIDING:
-            window = cfg.window_size
-        elif cfg.attention_kind == AttentionKind.LOCAL_GLOBAL:
-            window = FULL_WINDOW if cfg.layer_is_global(i) else cfg.window_size
-    return (kind, ffn, window)
-
-
-def build_segments(cfg: ModelConfig) -> List[SegmentSpec]:
-    segs: List[SegmentSpec] = []
-    cur: List[int] = []
-    cur_sig = None
-    for i in range(cfg.num_layers):
-        sig = _layer_signature(cfg, i)
-        if sig != cur_sig and cur:
-            segs.append(SegmentSpec(cur_sig[0], cur_sig[1], cur_sig[2],
-                                    tuple(cur)))
-            cur = []
-        cur_sig = sig
-        cur.append(i)
-    if cur:
-        segs.append(SegmentSpec(cur_sig[0], cur_sig[1], cur_sig[2], tuple(cur)))
-    return segs
 
 
 # ---------------------------------------------------------------------------
@@ -180,33 +140,10 @@ def _moe_cfg(cfg: ModelConfig):
     return m
 
 
-def _block_forward(lp: Params, h: jax.Array, positions: jax.Array,
-                   cfg: ModelConfig, seg: SegmentSpec,
-                   attn_chunk: int) -> Tuple[jax.Array, jax.Array]:
-    """One layer forward (full sequence). Returns (h, moe_aux_loss)."""
+def _ffn_block(lp: Params, h: jax.Array, cfg: ModelConfig,
+               seg: SegmentSpec) -> Tuple[jax.Array, jax.Array]:
+    """Kind-independent FFN half of a block. Returns (h, moe_aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
-    h = shard_act(h, "hidden")
-    hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
-    if seg.kind == BlockKind.ATTENTION:
-        q, k, v = attention_qkv(lp["attn"], hn, positions, cfg.num_heads,
-                                cfg.num_kv_heads, cfg.resolved_head_dim,
-                                cfg.rope_theta)
-        q = shard_act(q, "q")
-        k = shard_act(k, "kv")
-        v = shard_act(v, "kv")
-        window = None if seg.window >= FULL_WINDOW else jnp.int32(seg.window)
-        o = attention_xla_flash(q, k, v, causal=True, window=window,
-                                chunk=attn_chunk)
-        h = h + attention_out(lp["attn"], o)
-    elif seg.kind == BlockKind.RGLRU:
-        o, _, _ = rglru_apply_scan(lp["rnn"], hn)
-        h = h + o
-    elif seg.kind == BlockKind.MLSTM:
-        h = h + xl.mlstm_parallel(lp["mlstm"], hn, cfg.num_heads,
-                                  cfg.resolved_head_dim)
-    elif seg.kind == BlockKind.SLSTM:
-        o, _ = xl.slstm_apply_scan(lp["slstm"], hn, cfg.num_heads)
-        h = h + o
     if seg.ffn == "dense":
         hn = rmsnorm(lp["ln2"], h, cfg.norm_eps)
         h = h + ffn_apply(lp["ffn"], hn, act=cfg.act)
@@ -216,6 +153,18 @@ def _block_forward(lp: Params, h: jax.Array, positions: jax.Array,
         h = h + o
         aux = aux + moe_aux["moe_aux_loss"]
     return h, aux
+
+
+def _block_forward(lp: Params, h: jax.Array, positions: jax.Array,
+                   cfg: ModelConfig, seg: SegmentSpec,
+                   attn_chunk: int) -> Tuple[jax.Array, jax.Array]:
+    """One layer forward (full sequence). Returns (h, moe_aux_loss)."""
+    h = shard_act(h, "hidden")
+    hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+    h = h + MIXERS[seg.kind].forward(lp, hn, cfg=cfg, seg=seg,
+                                     positions=positions,
+                                     attn_chunk=attn_chunk)
+    return _ffn_block(lp, h, cfg, seg)
 
 
 def _run_segment(params_seg: Params, h: jax.Array, positions: jax.Array,
@@ -362,16 +311,11 @@ def lm_loss(params: Params, cfg: ModelConfig, tokens: jax.Array,
 # KV / recurrent caches
 # ---------------------------------------------------------------------------
 
-def cache_len_for(seg: SegmentSpec, max_len: int) -> int:
-    if seg.kind != BlockKind.ATTENTION:
-        return 0
-    return min(max_len, seg.window)
-
-
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                dtype=None, a3: bool = False) -> Dict[str, Any]:
-    """Per-segment decode state. Attention: ring-buffer K/V sized
-    min(max_len, window). Recurrent: carried states.
+    """Per-segment decode state via the mixer interface. Attention:
+    ring-buffer K/V sized min(max_len, window). Recurrent: carried
+    states.
 
     ``a3=True`` additionally allocates the *sorted key matrix* for
     global-attention segments (the paper's comprehension-time
@@ -379,167 +323,25 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     40KB sorted-key SRAM next to the 20KB key SRAM) plus the
     ``sorted_upto`` watermark for the exact fresh-tail policy."""
     dtype = dtype or jnp.dtype(cfg.dtype)
-    hd = cfg.resolved_head_dim
-    cache: Dict[str, Any] = {}
-    for si, seg in enumerate(build_segments(cfg)):
-        L = seg.count
-        if seg.kind == BlockKind.ATTENTION:
-            w = cache_len_for(seg, max_len)
-            cache[f"seg{si}"] = {
-                "k": jnp.zeros((L, batch, cfg.num_kv_heads, w, hd), dtype),
-                "v": jnp.zeros((L, batch, cfg.num_kv_heads, w, hd), dtype),
-            }
-            if a3 and seg.window >= FULL_WINDOW:
-                cache[f"seg{si}"]["sk_vals"] = jnp.zeros(
-                    (L, batch, cfg.num_kv_heads, w, hd), dtype)
-                cache[f"seg{si}"]["sk_rows"] = jnp.zeros(
-                    (L, batch, cfg.num_kv_heads, w, hd), jnp.int32)
-                cache[f"seg{si}"]["sorted_upto"] = jnp.zeros(
-                    (L, batch), jnp.int32)
-        elif seg.kind == BlockKind.RGLRU:
-            d_rnn = cfg.num_heads * hd
-            cache[f"seg{si}"] = {
-                "h": jnp.zeros((L, batch, d_rnn), jnp.float32),
-                "conv": jnp.zeros((L, batch, CONV_WIDTH - 1, d_rnn), dtype),
-            }
-        elif seg.kind == BlockKind.MLSTM:
-            cache[f"seg{si}"] = {
-                "C": jnp.zeros((L, batch, cfg.num_heads, hd, hd), jnp.float32),
-                "n": jnp.zeros((L, batch, cfg.num_heads, hd), jnp.float32),
-                "m": jnp.full((L, batch, cfg.num_heads), -1e30, jnp.float32),
-            }
-        elif seg.kind == BlockKind.SLSTM:
-            d = cfg.d_model
-            z = jnp.zeros((L, batch, d), jnp.float32)
-            cache[f"seg{si}"] = {
-                "c": z, "n": z, "m": jnp.full((L, batch, d), -1e30,
-                                              jnp.float32), "h": z,
-            }
-    return cache
+    return {f"seg{si}": MIXERS[seg.kind].init_state(cfg, seg, batch,
+                                                    max_len, dtype, a3)
+            for si, seg in enumerate(build_segments(cfg))}
 
 
 # ---------------------------------------------------------------------------
 # decode step
 # ---------------------------------------------------------------------------
 
-def _ring_slot_positions(w: int, pos: jax.Array) -> jax.Array:
-    """Position held by each ring slot after writing position ``pos``.
-
-    Slot s holds position p(s) = largest p' <= pos with p' % w == s.
-    ``pos`` may be a scalar (-> [w]) or a per-batch vector [B] (-> [B, w]).
-    """
-    slots = jnp.arange(w, dtype=jnp.int32)
-    pos = jnp.asarray(pos, jnp.int32)[..., None]
-    return pos - jnp.mod(pos - slots, w)
-
-
-def _ring_valid_mask(w: int, pos: jax.Array, window: int) -> jax.Array:
-    """Validity of ring slots after writing position ``pos`` at pos % w.
-
-    Valid iff p(s) >= 0 (written) and p(s) > pos - window. ``pos`` may be
-    scalar or per-batch [B] (ragged decode); the mask gains a matching
-    leading batch dim.
-    """
-    slot_pos = _ring_slot_positions(w, pos)
-    pos = jnp.asarray(pos, jnp.int32)[..., None]
-    return (slot_pos >= 0) & (slot_pos > pos - window)
-
-
-def _attn_decode_block(lp: Params, cache: Dict[str, jax.Array], h: jax.Array,
-                       pos: jax.Array, cfg: ModelConfig, seg: SegmentSpec,
-                       a3: A3Config, use_kernel: bool
-                       ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    b = h.shape[0]
-    hd = cfg.resolved_head_dim
-    hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
-    positions = pos[:, None]                                   # [B, 1]
-    q, k, v = attention_qkv(lp["attn"], hn, positions, cfg.num_heads,
-                            cfg.num_kv_heads, hd, cfg.rope_theta)
-    q = shard_act(q, "q")
-    w = cache["k"].shape[2]
-    # per-slot ring write: each sequence writes its own token at its own
-    # ring slot (ragged continuous batching — one dispatch serves slots
-    # at arbitrary position skew). Lanes with pos < 0 (idle/prefilling
-    # engine slots riding along in the batch) scatter out of bounds and
-    # are dropped, so mid-prefill cache rows are never clobbered.
-    slot = jnp.where(pos >= 0, jnp.mod(pos, w), w)             # [B]
-    bidx = jnp.arange(b, dtype=jnp.int32)
-    kc = cache["k"].at[bidx, :, slot].set(k[:, :, 0], mode="drop")
-    vc = cache["v"].at[bidx, :, slot].set(v[:, :, 0], mode="drop")
-    kc = shard_act(kc, "kv_cache")
-    vc = shard_act(vc, "kv_cache")
-    valid = _ring_valid_mask(w, pos, seg.window)               # [B, w]
-    # A^3 approximate decode only on global-attention layers: windowed
-    # layers already bound the search (DESIGN.md SS5).
-    use_a3 = a3.mode != A3Mode.OFF and seg.window >= FULL_WINDOW
-    # NOTE: read-only leaves (sk_*, sorted_upto) are NOT returned — the
-    # caller keeps them out of the scan ys (passing them through forced
-    # a full copy of the sorted-key cache per layer iteration).
-    new_slice = {"k": kc, "v": vc}
-    if use_a3 and "sk_vals" in cache:
-        # comprehension-time sorted keys cached at prefill (paper SSIV-C);
-        # rows written since the last re-sort get exact treatment.
-        from repro.core.candidate_selection import SortedKeys
-        from repro.kernels.decode_attention.ops import \
-            a3_decode_attention_compact
-        slot_pos = _ring_slot_positions(w, pos)                 # [B, w]
-        fresh = slot_pos >= cache["sorted_upto"][:, None]       # [B, w]
-        sk = SortedKeys(values=shard_act(cache["sk_vals"], "kv_cache"),
-                        rows=shard_act(cache["sk_rows"], "kv_cache"))
-        o = a3_decode_attention_compact(
-            q[:, :, 0], kc, vc, valid, a3, sk, fresh_mask=fresh)
-    elif use_a3:
-        from repro.core.candidate_selection import sort_key_columns
-        # no cached sort available: build inline (single-shot use)
-        sorted_keys = jax.vmap(jax.vmap(sort_key_columns))(kc)
-        o = a3_decode_attention(q[:, :, 0], kc, vc, valid, a3,
-                                sorted_keys=sorted_keys,
-                                use_kernel=use_kernel)
-    else:
-        o = a3_decode_attention(q[:, :, 0], kc, vc, valid, A3Config(),
-                                use_kernel=use_kernel)
-    h = h + attention_out(lp["attn"], o[:, :, None, :])
-    return h, new_slice
-
-
 def _decode_block(lp: Params, cache_slice: Dict[str, jax.Array],
                   h: jax.Array, pos: jax.Array, cfg: ModelConfig,
                   seg: SegmentSpec, a3: A3Config, use_kernel: bool):
-    aux = jnp.zeros((), jnp.float32)
     h = shard_act(h, "hidden")
-    if seg.kind == BlockKind.ATTENTION:
-        h, new_slice = _attn_decode_block(lp, cache_slice, h, pos, cfg, seg,
-                                          a3, use_kernel)
-    elif seg.kind == BlockKind.RGLRU:
-        hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
-        o, h_new, conv_new = rglru_decode_step(
-            lp["rnn"], hn, cache_slice["h"], cache_slice["conv"])
-        h = h + o
-        new_slice = {"h": h_new, "conv": conv_new}
-    elif seg.kind == BlockKind.MLSTM:
-        hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
-        st = (cache_slice["C"], cache_slice["n"], cache_slice["m"])
-        o, (C, n, m) = xl.mlstm_decode_step(lp["mlstm"], hn, st,
-                                            cfg.num_heads,
-                                            cfg.resolved_head_dim)
-        h = h + o
-        new_slice = {"C": C, "n": n, "m": m}
-    elif seg.kind == BlockKind.SLSTM:
-        hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
-        st = (cache_slice["c"], cache_slice["n"], cache_slice["m"],
-              cache_slice["h"])
-        o, (c, n, m, hh) = xl.slstm_decode_step(lp["slstm"], hn, st,
-                                                cfg.num_heads)
-        h = h + o
-        new_slice = {"c": c, "n": n, "m": m, "h": hh}
-    if seg.ffn == "dense":
-        hn = rmsnorm(lp["ln2"], h, cfg.norm_eps)
-        h = h + ffn_apply(lp["ffn"], hn, act=cfg.act)
-    elif seg.ffn == "moe":
-        hn = rmsnorm(lp["ln2"], h, cfg.norm_eps)
-        o, moe_aux = moe_apply(lp["moe"], hn, _moe_cfg(cfg))
-        h = h + o
-        aux = moe_aux["moe_aux_loss"]
+    hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+    o, new_slice = MIXERS[seg.kind].decode_step(
+        lp, cache_slice, hn, cfg=cfg, seg=seg, pos=pos, a3=a3,
+        use_kernel=use_kernel)
+    h = h + o
+    h, aux = _ffn_block(lp, h, cfg, seg)
     return h, new_slice, aux
 
 
@@ -696,16 +498,13 @@ def decode_block(
     Lanes are masked per step: a lane is *active* while ``pos >= 0`` and
     its ``steps_left`` budget is unspent. Inactive lanes ride along at
     ``pos = -1`` — their ring writes scatter out of bounds and are
-    dropped (the ragged-decode machinery), their ring entries read -1,
-    and their carried token/pos freeze — so lanes that exhaust budget or
-    hit ``max_len`` mid-block leave attention (ring) cache rows
-    untouched. Recurrent segments (RG-LRU / xLSTM) carry no per-step
-    masking, matching :func:`decode_step`'s existing ``pos = -1``
-    semantics: a masked lane's recurrent state keeps advancing on its
-    frozen token and must be rewritten at the next admission (the
-    engine's whole-prompt prefill does exactly that) before the lane is
-    trusted again. With ``steps=1`` this is exactly one
-    :func:`decode_step` plus in-graph sampling.
+    dropped (the ragged-decode machinery), recurrent segments reselect
+    their carried state bit-identically (the mixer interface's uniform
+    pad-lane masking), their ring entries read -1, and their carried
+    token/pos freeze — so lanes that exhaust budget or hit ``max_len``
+    mid-block leave ALL cache state untouched, for every segment kind.
+    With ``steps=1`` this is exactly one :func:`decode_step` plus
+    in-graph sampling.
     """
     b = token.shape[0]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
@@ -764,85 +563,22 @@ def prefill(
         h = embed_tokens(params, cfg, tokens)
     max_len = max_len or s
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
-    hd = cfg.resolved_head_dim
     cache: Dict[str, Any] = {}
 
     for si, seg in enumerate(build_segments(cfg)):
-        if seg.kind == BlockKind.ATTENTION:
-            w = cache_len_for(seg, max_len)
+        def body(carry, lp, seg=seg):
+            hh = shard_act(carry, "hidden")
+            hn = rmsnorm(lp["ln1"], hh, cfg.norm_eps)
+            o, ns = MIXERS[seg.kind].prefill_full(
+                lp, hn, cfg=cfg, seg=seg, positions=positions,
+                attn_chunk=attn_chunk, max_len=max_len, a3=a3,
+                select_shards=select_shards)
+            hh = hh + o
+            hh, _ = _ffn_block(lp, hh, cfg, seg)
+            return hh, ns
 
-            def body(carry, lp, seg=seg, w=w):
-                hh = shard_act(carry, "hidden")
-                hn = rmsnorm(lp["ln1"], hh, cfg.norm_eps)
-                q, k, v = attention_qkv(lp["attn"], hn, positions,
-                                        cfg.num_heads, cfg.num_kv_heads, hd,
-                                        cfg.rope_theta)
-                q = shard_act(q, "q")
-                k = shard_act(k, "kv")
-                v = shard_act(v, "kv")
-                window = (None if seg.window >= FULL_WINDOW
-                          else jnp.int32(seg.window))
-                o = attention_xla_flash(q, k, v, causal=True, window=window,
-                                        chunk=attn_chunk)
-                hh = hh + attention_out(lp["attn"], o)
-                # ring-write the last min(s, w) positions
-                kc = jnp.zeros((k.shape[0], k.shape[1], w, hd), k.dtype)
-                vc = jnp.zeros_like(kc)
-                take = min(s, w)
-                # slots of positions s-take .. s-1
-                pos_tail = jnp.arange(s - take, s, dtype=jnp.int32)
-                slots = jnp.mod(pos_tail, w)
-                kc = kc.at[:, :, slots].set(k[:, :, s - take:])
-                vc = vc.at[:, :, slots].set(v[:, :, s - take:])
-                extra = {}
-                if a3 and seg.window >= FULL_WINDOW:
-                    from repro.core.candidate_selection import \
-                        sort_key_columns
-                    ns = select_shards if w % max(select_shards, 1) == 0 \
-                        else 1
-                    kb = kc.reshape(kc.shape[0], kc.shape[1], ns, w // ns,
-                                    hd)
-                    sk = jax.vmap(jax.vmap(jax.vmap(sort_key_columns)))(kb)
-                    extra = {
-                        "sk_vals": sk.values.reshape(kc.shape),
-                        "sk_rows": sk.rows.reshape(kc.shape),  # block-local
-                        "sorted_upto": jnp.full((kc.shape[0],), s,
-                                                jnp.int32),
-                    }
-                if seg.ffn == "dense":
-                    hn = rmsnorm(lp["ln2"], hh, cfg.norm_eps)
-                    hh = hh + ffn_apply(lp["ffn"], hn, act=cfg.act)
-                elif seg.ffn == "moe":
-                    hn = rmsnorm(lp["ln2"], hh, cfg.norm_eps)
-                    oo, _ = moe_apply(lp["moe"], hn, _moe_cfg(cfg))
-                    hh = hh + oo
-                return hh, {"k": kc, "v": vc, **extra}
-
-            h, seg_cache = jax.lax.scan(body, h, params[f"seg{si}"])
-            cache[f"seg{si}"] = seg_cache
-        else:
-            def body(carry, lp, seg=seg):
-                hh = shard_act(carry, "hidden")
-                hn = rmsnorm(lp["ln1"], hh, cfg.norm_eps)
-                if seg.kind == BlockKind.RGLRU:
-                    o, h_last, conv = rglru_apply_scan(lp["rnn"], hn)
-                    ns = {"h": h_last, "conv": conv}
-                elif seg.kind == BlockKind.MLSTM:
-                    # need final state: rerun chunkwise scan capturing state
-                    o, st = _mlstm_with_state(lp["mlstm"], hn, cfg)
-                    ns = {"C": st[0], "n": st[1], "m": st[2]}
-                else:
-                    o, st = xl.slstm_apply_scan(lp["slstm"], hn,
-                                                cfg.num_heads)
-                    ns = {"c": st[0], "n": st[1], "m": st[2], "h": st[3]}
-                hh = hh + o
-                if seg.ffn == "dense":
-                    hn = rmsnorm(lp["ln2"], hh, cfg.norm_eps)
-                    hh = hh + ffn_apply(lp["ffn"], hn, act=cfg.act)
-                return hh, ns
-
-            h, seg_cache = jax.lax.scan(body, h, params[f"seg{si}"])
-            cache[f"seg{si}"] = seg_cache
+        h, seg_cache = jax.lax.scan(body, h, params[f"seg{si}"])
+        cache[f"seg{si}"] = seg_cache
 
     logits = unembed(params, cfg, h[:, -1:])[:, 0]
     return logits, cache
@@ -851,131 +587,6 @@ def prefill(
 # ---------------------------------------------------------------------------
 # chunked / ragged admission prefill: extend per-slot caches in place
 # ---------------------------------------------------------------------------
-
-def supports_chunked_prefill(cfg: ModelConfig) -> bool:
-    """Chunked prefill extends KV ring buffers from an arbitrary start
-    position; recurrent blocks would need carried mid-prompt state, which
-    the chunked path does not implement — those archs admit via the
-    whole-prompt :func:`prefill`."""
-    return all(seg.kind == BlockKind.ATTENTION for seg in build_segments(cfg))
-
-
-def _attn_prefill_chunk_block(
-    lp: Params,
-    cache: Dict[str, jax.Array],      # per-layer slices: k/v [B, Hkv, w, D]
-    h: jax.Array,                     # [B, C, D]
-    positions: jax.Array,             # [B, C] absolute positions
-    valid_tok: jax.Array,             # [B, C] chunk-slot validity
-    pos: jax.Array,                   # [B] chunk start position
-    length: jax.Array,                # [B] valid tokens (0 = untouched lane)
-    sort_lanes: jax.Array,            # [B] fold this chunk into the A3 sort
-    cfg: ModelConfig,
-    seg: SegmentSpec,
-    use_a3: bool,
-) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    b, c, _ = h.shape
-    hd = cfg.resolved_head_dim
-    hkv, group = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads
-    hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
-    q, k, v = attention_qkv(lp["attn"], hn, positions, cfg.num_heads,
-                            hkv, hd, cfg.rope_theta)           # [B, H, C, D]
-    q = shard_act(q, "q")
-    k = shard_act(k, "kv")
-    v = shard_act(v, "kv")
-    ck, cv = cache["k"], cache["v"]
-    # A lane starting a new prompt (pos 0) zeroes its ring rows inside
-    # the donated dispatch — the slot may hold a finished request's rows,
-    # and whole-prompt-parity (incl. the A3 sort over the full ring)
-    # needs unwritten rows to read as zeros. Fused here, this costs no
-    # extra HBM sweep, unlike a host-side reset copy per admission.
-    fresh = ((pos == 0) & (length > 0))[:, None, None, None]
-    zero = jnp.asarray(0, ck.dtype)
-    ck = jnp.where(fresh, zero, ck)
-    cv = jnp.where(fresh, zero, cv)
-    w = ck.shape[2]
-    window = seg.window
-
-    # Attention BEFORE the ring write: chunk queries see (a) the ring as
-    # it stood before this chunk and (b) in-chunk keys, so a wrapping
-    # write can never clobber a position an earlier query still needs.
-    scale = hd ** -0.5
-    qf = (q.astype(jnp.float32) * scale).reshape(b, hkv, group, c, hd)
-    offs = jnp.arange(c, dtype=jnp.int32)
-    slots = jnp.arange(w, dtype=jnp.int32)
-    last_prev = pos - 1                                        # [B]
-    slot_pos = last_prev[:, None] - jnp.mod(
-        last_prev[:, None] - slots[None, :], w)                # [B, w]
-    ring_mask = (slot_pos[:, None, :] >= 0) & \
-        (slot_pos[:, None, :] > positions[:, :, None] - window)  # [B, C, w]
-    chunk_mask = (offs[None, :, None] >= offs[None, None, :]) & \
-        (offs[None, :, None] - offs[None, None, :] < window) & \
-        valid_tok[:, None, :]                                  # [B, C, C]
-    mask = jnp.concatenate([ring_mask, chunk_mask], -1)        # [B, C, w+C]
-
-    s_ring = jnp.einsum("bhgqd,bhkd->bhgqk", qf,
-                        ck.astype(jnp.float32))                # [B,Hkv,G,C,w]
-    s_chunk = jnp.einsum("bhgqd,bhkd->bhgqk", qf,
-                         k.astype(jnp.float32))                # [B,Hkv,G,C,C]
-    s = jnp.concatenate([s_ring, s_chunk], -1)
-    mb = mask[:, None, None]
-    s = jnp.where(mb, s, -1e30)
-    m = jnp.max(s, -1, keepdims=True)
-    p = jnp.where(mb, jnp.exp(s - m), 0.0)
-    l = jnp.sum(p, -1, keepdims=True)
-    vcat = jnp.concatenate([cv, v], 2).astype(jnp.float32)     # [B,Hkv,w+C,D]
-    acc = jnp.einsum("bhgqk,bhkd->bhgqd", p, vcat)
-    o = jnp.where(l == 0.0, 0.0, acc / jnp.where(l == 0.0, 1.0, l))
-    o = o.reshape(b, cfg.num_heads, c, hd).astype(h.dtype)
-    h = h + attention_out(lp["attn"], o)
-
-    # Ragged ring write: pad slots and inactive lanes scatter to index w
-    # (out of bounds -> dropped), leaving other slots' rows untouched.
-    # When the chunk exceeds the ring (sliding windows) only the last w
-    # chunk positions land, as in whole-prompt prefill.
-    writable = valid_tok & (positions > (pos + length - 1)[:, None] - w)
-    tgt = jnp.where(writable, jnp.mod(positions, w), w)        # [B, C]
-    b2 = jnp.broadcast_to(jnp.arange(b, dtype=jnp.int32)[:, None], (b, c))
-    kc = ck.at[b2, :, tgt].set(jnp.swapaxes(k, 1, 2), mode="drop")
-    vc = cv.at[b2, :, tgt].set(jnp.swapaxes(v, 1, 2), mode="drop")
-    new_slice = {"k": kc, "v": vc}
-
-    if use_a3 and "sk_vals" in cache:
-        # incremental comprehension-time preprocessing: fold the chunk's
-        # keys into the per-column sort for lanes in ``sort_lanes``
-        # (whole-ring sort; other lanes keep their sorted state +
-        # watermark). The engine only sets sort_lanes on a prompt's
-        # final chunk — nothing reads a PREFILLING slot's sort — so the
-        # O(w log w) sort runs once per admitted prompt, as in
-        # whole-prompt prefill; lax.cond skips it entirely on ticks
-        # where no lane finishes.
-        from repro.core.candidate_selection import sort_key_columns
-
-        def _fold(_):
-            sk = jax.vmap(jax.vmap(sort_key_columns))(kc)
-            l4 = sort_lanes[:, None, None, None]
-            return (jnp.where(l4, sk.values, cache["sk_vals"]),
-                    jnp.where(l4, sk.rows, cache["sk_rows"]),
-                    jnp.where(sort_lanes, pos + length,
-                              cache["sorted_upto"]))
-
-        def _keep(_):
-            return (cache["sk_vals"], cache["sk_rows"],
-                    cache["sorted_upto"])
-
-        sk_vals, sk_rows, upto = jax.lax.cond(jnp.any(sort_lanes),
-                                              _fold, _keep, None)
-        new_slice["sk_vals"] = sk_vals
-        new_slice["sk_rows"] = sk_rows
-        new_slice["sorted_upto"] = upto
-    if seg.ffn == "dense":
-        hn = rmsnorm(lp["ln2"], h, cfg.norm_eps)
-        h = h + ffn_apply(lp["ffn"], hn, act=cfg.act)
-    elif seg.ffn == "moe":
-        hn = rmsnorm(lp["ln2"], h, cfg.norm_eps)
-        o2, _ = moe_apply(lp["moe"], hn, _moe_cfg(cfg))
-        h = h + o2
-    return h, new_slice
-
 
 def prefill_chunk(
     params: Params,
@@ -993,11 +604,17 @@ def prefill_chunk(
 
     Every lane processes ``length[b]`` tokens of its prompt starting at
     absolute position ``pos[b]`` — a single dispatch serves slots at
-    arbitrary prompt cursors (ragged admission prefill). Lanes with
-    ``length == 0`` are passed through untouched (their cache rows are
-    bit-identical on output), so decoding slots can share the dispatch
-    batch with prefilling ones. A lane at ``pos == 0`` first zeroes its
-    ring rows (a reused slot may hold a finished request's keys).
+    arbitrary prompt cursors (ragged admission prefill). Works for every
+    segment kind through the mixer-state interface: attention segments
+    extend their KV rings, recurrent segments (RG-LRU conv tail + LRU
+    hidden, mLSTM matrix memory, sLSTM cell state) carry their
+    mid-prompt state across chunk boundaries, with pad positions masked
+    out of the state update per lane. Lanes with ``length == 0`` are
+    passed through untouched (their cache rows are bit-identical on
+    output), so decoding slots can share the dispatch batch with
+    prefilling ones. A lane at ``pos == 0`` first resets its state
+    in-graph (a reused slot may hold a finished request's keys or
+    recurrent state).
 
     With ``a3=True``, lanes in ``sort_lanes`` fold the updated ring into
     the per-column sorted-key matrices and advance ``sorted_upto`` to
@@ -1020,10 +637,6 @@ def prefill_chunk(
 
     Returns (logits [B, Vp] at each lane's last valid position, cache).
     """
-    if not supports_chunked_prefill(cfg):
-        raise NotImplementedError(
-            f"chunked prefill requires attention-only segments; "
-            f"{cfg.name} has recurrent blocks — use prefill()")
     b, c = tokens.shape
     h = embed_tokens(params, cfg, tokens)
     pos = jnp.asarray(pos, jnp.int32)
@@ -1045,10 +658,15 @@ def prefill_chunk(
 
         def body(carry, xs, seg=seg):
             lp, cs = xs
-            out, ns = _attn_prefill_chunk_block(
-                lp, cs, carry, positions, valid_tok, pos, length,
-                sort_lanes, cfg, seg, a3)
-            return out, ns
+            hh = shard_act(carry, "hidden")
+            hn = rmsnorm(lp["ln1"], hh, cfg.norm_eps)
+            o, ns = MIXERS[seg.kind].prefill_chunk(
+                lp, cs, hn, cfg=cfg, seg=seg, positions=positions,
+                valid_tok=valid_tok, pos=pos, length=length,
+                sort_lanes=sort_lanes, a3=a3)
+            hh = hh + o
+            hh, _ = _ffn_block(lp, hh, cfg, seg)
+            return hh, ns
 
         h, new_seg = jax.lax.scan(body, h, (params[f"seg{si}"], mut))
         new_cache[f"seg{si}"] = {**new_seg, **ro}
@@ -1056,27 +674,3 @@ def prefill_chunk(
     last = jnp.clip(length - 1, 0, c - 1)
     logits = unembed(params, cfg, h[bidx, last][:, None])[:, 0]
     return logits, new_cache
-
-
-def _mlstm_with_state(p: Params, x: jax.Array, cfg: ModelConfig):
-    """mLSTM forward that also returns the end-of-sequence state by
-    replaying the per-step recurrence on top of the parallel output."""
-    out = xl.mlstm_parallel(p, x, cfg.num_heads, cfg.resolved_head_dim)
-    # state via chunked recurrence (cheap: states only, no outputs)
-    b, s, _ = x.shape
-    hd = cfg.resolved_head_dim
-    k = ((x @ p["wk"]).reshape(b, s, cfg.num_heads, hd)
-         .astype(jnp.float32)) / math.sqrt(hd)
-    v = (x @ p["wv"]).reshape(b, s, cfg.num_heads, hd).astype(jnp.float32)
-    log_i, log_f = xl._mlstm_gates(p, x)
-    F = jnp.cumsum(jnp.moveaxis(log_f, 2, 1), axis=-1)        # [B,H,S]
-    li = jnp.moveaxis(log_i, 2, 1)
-    Ftot = F[..., -1]
-    wr_log = Ftot[..., None] - F + li
-    m_new = jnp.maximum(jnp.max(wr_log, axis=-1), -1e30)
-    wr = jnp.exp(wr_log - m_new[..., None])                   # [B,H,S]
-    kh = jnp.moveaxis(k, 2, 1)
-    vh = jnp.moveaxis(v, 2, 1)
-    C = jnp.einsum("bhu,bhuk,bhuv->bhkv", wr, kh, vh)
-    n = jnp.einsum("bhu,bhuk->bhk", wr, kh)
-    return out, (C, n, m_new)

@@ -87,6 +87,30 @@ def _lru_scan(a: jax.Array, b: jax.Array,
     return h[:, 1:] if h0 is not None else h
 
 
+def _lru_scan_chunked(a: jax.Array, b: jax.Array, h0: jax.Array,
+                      chunk: int) -> jax.Array:
+    """Chunkwise associative scan: ``associative_scan`` within a chunk
+    (TPU-parallel), ``lax.scan`` across chunks carrying h — bounding the
+    scan's live intermediates to O(chunk) instead of O(S) (the
+    unchunked version peaked at 184 GiB/device on the 500k dry-run).
+    Falls back to a single scan when S doesn't divide."""
+    bsz, s, _ = a.shape
+    L = min(chunk, s)
+    if s % L != 0:
+        return _lru_scan(a, b, h0)
+    n = s // L
+    ac = jnp.moveaxis(a.reshape(bsz, n, L, -1), 1, 0)
+    bc = jnp.moveaxis(b.reshape(bsz, n, L, -1), 1, 0)
+
+    def step(carry, xs):
+        ai, bi = xs
+        hi = _lru_scan(ai, bi, carry)
+        return hi[:, -1], hi
+
+    _, hs = jax.lax.scan(step, h0, (ac, bc))
+    return jnp.moveaxis(hs, 0, 1).reshape(bsz, s, -1)
+
+
 def rglru_apply_scan(
     params: Params, x: jax.Array,
     h0: Optional[jax.Array] = None,
@@ -96,10 +120,8 @@ def rglru_apply_scan(
     """Full-sequence RG-LRU block. x: [B, S, D].
     Returns (out [B, S, D], h_last [B, C], conv_buf_last [B, 3, C]).
 
-    The recurrence runs chunkwise: ``associative_scan`` within a chunk
-    (TPU-parallel), ``lax.scan`` across chunks carrying h — bounding the
-    scan's live intermediates to O(chunk) instead of O(S) (the
-    unchunked version peaked at 184 GiB/device on the 500k dry-run).
+    The recurrence runs chunkwise (:func:`_lru_scan_chunked`), bounding
+    live intermediates to O(chunk) instead of O(S).
     """
     bsz, s, _ = x.shape
     gate = jax.nn.gelu((x @ params["w_in_gate"]).astype(jnp.float32))
@@ -108,28 +130,48 @@ def rglru_apply_scan(
     a, b = _lru_gates(params, xc)
     if h0 is None:
         h0 = jnp.zeros((bsz, a.shape[-1]), jnp.float32)
-
-    L = min(chunk, s)
-    if s % L != 0:
-        h = _lru_scan(a, b, h0)
-    else:
-        n = s // L
-        ac = jnp.moveaxis(a.reshape(bsz, n, L, -1), 1, 0)
-        bc = jnp.moveaxis(b.reshape(bsz, n, L, -1), 1, 0)
-
-        def step(carry, xs):
-            ai, bi = xs
-            hi = _lru_scan(ai, bi, carry)
-            return hi[:, -1], hi
-
-        _, hs = jax.lax.scan(step, h0, (ac, bc))
-        h = jnp.moveaxis(hs, 0, 1).reshape(bsz, s, -1)
-
+    h = _lru_scan_chunked(a, b, h0, chunk)
     out = (gate * h).astype(x.dtype) @ params["w_out"]
     prev = conv_buf if conv_buf is not None else jnp.zeros(
         (x.shape[0], CONV_WIDTH - 1, xr.shape[-1]), xr.dtype)
     new_buf = jnp.concatenate([prev, xr], axis=1)[:, -(CONV_WIDTH - 1):]
     return out, h[:, -1].astype(jnp.float32), new_buf
+
+
+def rglru_chunk_step(
+    params: Params, x: jax.Array,
+    h0: jax.Array, conv_buf: jax.Array,
+    valid: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Ragged mid-prompt chunk with carried state (chunked admission).
+
+    x: [B, C, D]; h0: [B, C_rnn] f32; conv_buf: [B, CONV_WIDTH-1, C_rnn];
+    valid: [B, C] bool — pad slots past a lane's chunk length. Pad
+    positions carry the recurrence through unchanged (a=1, b=0), so
+    ``h_last`` is the state after each lane's last *valid* token, and
+    the conv buffer advances to each lane's last CONV_WIDTH-1 valid
+    ``xr`` rows (a lane with no valid tokens keeps its buffer rows —
+    the caller additionally reselects its state bit-identically).
+
+    Returns (out [B, C, D], h_last [B, C_rnn] f32, new_buf).
+    """
+    gate = jax.nn.gelu((x @ params["w_in_gate"]).astype(jnp.float32))
+    xr = x @ params["w_in_rnn"]                          # [B, C, C_rnn]
+    xc = _causal_conv(xr, params["conv_w"], params["conv_b"], conv_buf)
+    a, b = _lru_gates(params, xc)
+    v = valid[..., None]
+    a = jnp.where(v, a, 1.0)
+    b = jnp.where(v, b, 0.0)
+    h = _lru_scan_chunked(a, b, h0.astype(jnp.float32), chunk=512)
+    out = (gate * h).astype(x.dtype) @ params["w_out"]
+    # per-lane conv-tail gather: extended[b, j] = buf[j] for j < W-1 else
+    # xr[j - (W-1)]; rows [length, length+W-2] are the last W-1 valid ones
+    length = jnp.sum(valid.astype(jnp.int32), axis=1)    # [B]
+    ext = jnp.concatenate([conv_buf.astype(xr.dtype), xr], axis=1)
+    idx = (length[:, None]
+           + jnp.arange(CONV_WIDTH - 1, dtype=jnp.int32)[None, :])
+    new_buf = jnp.take_along_axis(ext, idx[..., None], axis=1)
+    return out, h[:, -1], new_buf
 
 
 def rglru_decode_step(

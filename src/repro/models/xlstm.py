@@ -69,15 +69,24 @@ def _headwise_ln(h: jax.Array, scale: jax.Array, eps: float = 1e-6):
     return (h - mu) * jax.lax.rsqrt(var + eps) * scale
 
 
-def mlstm_parallel(params: Params, x: jax.Array, num_heads: int,
-                   head_dim: int, chunk: int = 256,
-                   state=None) -> jax.Array:
-    """Chunkwise-parallel mLSTM forward. x: [B, S, D].
+def mlstm_chunkwise(params: Params, x: jax.Array, num_heads: int,
+                    head_dim: int, *, chunk: int = 256, state=None,
+                    valid: Optional[jax.Array] = None):
+    """Chunkwise-parallel mLSTM forward -> (out [B, S, D], final state).
 
     Intra-chunk: quadratic gate-decay attention over a [chunk, chunk] tile.
     Inter-chunk: the (C, n, m) matrix-memory state is carried by a scan —
     the TPU-friendly linear-cost formulation (memory O(S * chunk), not
     O(S^2)), which is also what makes the 500k-token shape runnable.
+
+    ``state`` resumes from a carried (C, n, m) — the chunked-admission
+    mid-prompt case. ``valid`` [B, S] masks ragged pad positions with
+    the same gate trick used for tile padding (i-gate = -inf: no state
+    write; f-gate = 0: carry state through), so the returned state is
+    the state after each lane's last *valid* token. A lane with no valid
+    tokens is the caller's job to reselect bit-identically (an all-pad
+    lane whose carried ``m`` is already the -1e30 init would otherwise
+    hit the exp(-1e30 + 1e30) = 1 degeneracy and absorb pad keys).
     """
     b, s, _ = x.shape
     dh = num_heads * head_dim
@@ -89,6 +98,9 @@ def mlstm_parallel(params: Params, x: jax.Array, num_heads: int,
     k = (x @ params["wk"]).reshape(b, s, num_heads, head_dim)
     v = (x @ params["wv"]).reshape(b, s, num_heads, head_dim)
     log_i, log_f = _mlstm_gates(params, x)                    # [B, S, H]
+    if valid is not None:
+        log_i = jnp.where(valid[..., None], log_i, -1e30)
+        log_f = jnp.where(valid[..., None], log_f, 0.0)
     if pad:
         q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
@@ -161,7 +173,15 @@ def mlstm_parallel(params: Params, x: jax.Array, num_heads: int,
     h = _headwise_ln(hs, params["ln_scale"][None, :, None, :])
     o = jax.nn.sigmoid((x @ params["w_o"]).astype(jnp.float32))
     h = jnp.moveaxis(h, 1, 2).reshape(b, s, dh) * o
-    return h.astype(x.dtype) @ params["w_out"]
+    return h.astype(x.dtype) @ params["w_out"], state
+
+
+def mlstm_parallel(params: Params, x: jax.Array, num_heads: int,
+                   head_dim: int, chunk: int = 256,
+                   state=None) -> jax.Array:
+    """Output-only view of :func:`mlstm_chunkwise` (train / forward)."""
+    return mlstm_chunkwise(params, x, num_heads, head_dim, chunk=chunk,
+                           state=state)[0]
 
 
 def mlstm_init_state(batch: int, num_heads: int, head_dim: int):
@@ -248,18 +268,36 @@ def _slstm_cell(params: Params, xg: jax.Array, state, num_heads: int):
 
 
 def slstm_apply_scan(params: Params, x: jax.Array, num_heads: int,
-                     state=None) -> Tuple[jax.Array, tuple]:
-    """x: [B, S, D] -> ([B, S, D], final_state). Sequential lax.scan."""
+                     state=None,
+                     valid: Optional[jax.Array] = None
+                     ) -> Tuple[jax.Array, tuple]:
+    """x: [B, S, D] -> ([B, S, D], final_state). Sequential lax.scan.
+
+    ``valid`` [B, S] masks ragged pad positions (chunked admission):
+    a pad step reselects the carried state bit-identically, so the
+    final state is the state after each lane's last valid token."""
     b, s, d = x.shape
     xg = (x.astype(jnp.float32) @ params["wx"])               # [B, S, 4D]
     if state is None:
         state = slstm_init_state(b, d)
 
-    def step(carry, xt):
-        new = _slstm_cell(params, xt, carry, num_heads)
-        return new, new[3]
+    if valid is None:
+        def step(carry, xt):
+            new = _slstm_cell(params, xt, carry, num_heads)
+            return new, new[3]
 
-    state, hs = jax.lax.scan(step, state, jnp.moveaxis(xg, 1, 0))
+        xs = jnp.moveaxis(xg, 1, 0)
+    else:
+        def step(carry, xs_t):
+            xt, vt = xs_t
+            new = _slstm_cell(params, xt, carry, num_heads)
+            new = tuple(jnp.where(vt[:, None], n, o)
+                        for n, o in zip(new, carry))
+            return new, new[3]
+
+        xs = (jnp.moveaxis(xg, 1, 0), jnp.moveaxis(valid, 1, 0))
+
+    state, hs = jax.lax.scan(step, state, xs)
     hs = jnp.moveaxis(hs, 0, 1)                               # [B, S, D]
     mu = jnp.mean(hs, -1, keepdims=True)
     var = jnp.var(hs, -1, keepdims=True)

@@ -1,43 +1,57 @@
-"""Serving engine: chunked + ragged admission prefill and multi-step
-*scanned* decode with slot-based continuous batching, plus the A^3
-approximate decode path.
+"""Serving engine: chunked + ragged admission prefill for EVERY
+architecture and multi-step *scanned* decode with slot-based continuous
+batching, plus the A^3 approximate decode path.
 
 The engine holds a fixed number of request *slots*. Every engine tick
 runs the admission state machine::
 
     admit -> chunked prefill -> blocked decode
-                                 (T x [in-graph resort -> step -> sample])
+             (+ in-graph handoff)  (T x [in-graph resort -> step -> sample])
 
 * **Admit.** Queued requests claim free slots and enter the PREFILLING
   phase with a per-slot prompt cursor. No forward pass and no cache
-  work runs at admit time — the slot's first chunk dispatch zeroes its
-  ring rows in-graph, so chunked prefill reproduces the whole-prompt
-  prefill cache state without a host-side reset copy.
-* **Chunked ragged prefill — one dispatch per tick.** All PREFILLING
-  slots advance by at most ``prefill_chunk`` prompt tokens in a *single*
-  jitted ``prefill_chunk`` dispatch: a padded ``[slots, chunk]`` token
-  block with per-slot start positions and lengths (lanes not prefilling
-  ride along with length 0 and their cache rows pass through
-  untouched). Long prompts therefore never stall decoding slots for
-  more than one chunk, and multiple queued prompts prefill together
-  instead of one ``decoder.prefill`` call per admit.
-  ``stats["prefill_dispatches"]`` counts these dispatches; it is at most
-  ``stats["ticks"]`` by construction. With ``prefill_chunk=None`` (or
-  for archs with recurrent blocks, where chunked prefill is
-  unsupported) admission falls back to one whole-prompt
-  ``decoder.prefill`` per admit.
+  work runs at admit time — the slot's first chunk dispatch resets its
+  per-segment mixer state in-graph (KV ring rows, recurrent carries),
+  so chunked prefill reproduces the whole-prompt prefill cache state
+  without a host-side reset copy.
+* **Chunked ragged prefill — one dispatch per tick, every arch.** All
+  PREFILLING slots advance by at most ``prefill_chunk`` prompt tokens
+  in a *single* jitted ``prefill_chunk`` dispatch: a padded
+  ``[slots, chunk]`` token block with per-slot start positions and
+  lengths (lanes not prefilling ride along with length 0 and their
+  cache rows pass through untouched). The per-segment mixer-state
+  interface (``repro.models.mixer``) carries mid-prompt state for
+  recurrent segments across chunk boundaries, so hybrid RG-LRU / xLSTM
+  stacks admit through the same bounded-tick path as attention-only
+  ones — there is no whole-prompt fallback. Long prompts therefore
+  never stall decoding slots for more than one chunk, and multiple
+  queued prompts prefill together. ``stats["prefill_dispatches"]``
+  counts these dispatches; it is at most ``stats["ticks"]`` by
+  construction. ``prefill_chunk=None`` uses a default chunk of
+  ``min(max_len, 512)`` — same dispatch, bounded working set; short
+  prompts still admit in a single dispatch.
+* **Device-resident prefill -> decode handoff.** The prefill dispatch
+  samples each finishing lane's first token in-graph and returns it as
+  a device array; the same tick's decode block consumes it directly
+  (``jnp.where`` over the token lane vector) and the host learns it
+  from the *decode* harvest — prefill ticks do not block. Only when a
+  prompt finishes with no decode dispatch to ride (budget exhausted by
+  its first token, or the prompt already at ``max_len``) does the
+  engine read the first-token array directly; ``stats["handoff_syncs"]``
+  counts those rare reads.
 * **Blocked decode — T steps per dispatch, fully device-resident.**
   ``decoder.decode_block`` runs ``decode_block`` = T decode steps under
   one jitted ``lax.scan``: each step samples its successor token from
   its own on-device logits (greedy argmax; temperature hook behind
   ``ServeConfig``), re-sorts due lanes' A^3 key columns in-graph, and
   appends to an on-device ``[slots, T]`` token ring. The host syncs
-  *once per block* to harvest the ring and run the finish/admit state
-  machine — per-token host round-trips drop from ~3 (watermark read +
-  two blocking argmax reads) to ~1/T. Lanes that exhaust their budget
-  or hit ``max_len`` mid-block ride along at ``pos = -1`` with dropped
-  ring writes. ``stats["decode_steps"]`` counts executed scan
-  iterations (``decode_block x decode_dispatches``);
+  *once per block* to harvest the ring (prepended with the block's
+  input tokens, which carries any prefill-handoff first tokens along
+  for free) and run the finish/admit state machine. Lanes that exhaust
+  their budget or hit ``max_len`` mid-block ride along at ``pos = -1``
+  with dropped ring writes and bit-identical (masked) recurrent state.
+  ``stats["decode_steps"]`` counts executed scan iterations
+  (``decode_block x decode_dispatches``);
   ``stats["decode_steps_advanced"]`` counts the subset that advanced
   at least one lane — the gap is partial-block padding, and dispatch
   efficiency obeys the falsifiable bound ``decode_dispatches <=
@@ -45,12 +59,11 @@ runs the admission state machine::
   block means every active lane finished, which can only follow a
   prefill dispatch that flipped its cohort). ``stats["host_syncs"]``
   counts blocking device reads — one ring harvest per decode dispatch
-  plus a first-token read only on prefill ticks where a lane finishes
-  its prompt, so ``host_syncs <= ceil(decode_steps / T) +
-  prefill_dispatches``.
+  plus the rare direct handoff reads, so ``host_syncs <=
+  decode_dispatches + handoff_syncs``.
 * **Cache donation.** Both the prefill-chunk and decode-block jits
-  donate the KV cache argument, so the ring buffers update in place
-  instead of being copied each tick.
+  donate the cache argument, so ring buffers and recurrent states
+  update in place instead of being copied each tick.
 * **In-graph A^3 re-sort — zero host watermark reads.** The
   ``sorted_upto`` watermark check lives inside the decode dispatch
   (``decoder.resort_sorted_keys``): per segment, a ``lax.cond`` folds a
@@ -142,19 +155,40 @@ def make_decode_block_step(
 
 
 def make_prefill_chunk_step(cfg: ModelConfig, *, a3: bool = False,
-                            update_sort: bool = True) -> Callable:
+                            update_sort: bool = True,
+                            temperature: float = 0.0) -> Callable:
     """Returns step(params, cache, tokens [B, C], pos [B], length [B],
-    sort_lanes [B]) -> (logits [B, Vp], new_cache) — the ragged
-    chunked-prefill dispatch. ``sort_lanes`` marks lanes on their final
-    chunk (A^3: fold the completed prompt into the column sort);
-    ``update_sort=False`` builds the cheaper specialization that treats
-    the sorted-key leaves as read-only (dispatched on ticks where no
-    lane finishes its prompt)."""
+    sort_lanes [B], sample_pos [B], sample_ids [B][, rng]) ->
+    (first_tok [B], new_cache) — the ragged chunked-prefill dispatch
+    with the device-resident prefill->decode handoff: each lane's
+    next-token draw from its last valid position's logits happens
+    in-graph, so finishing lanes hand their first generated token
+    straight to the same tick's decode block without a blocking read
+    (non-finishing lanes' entries are meaningless and ignored).
+    ``sort_lanes`` marks lanes on their final chunk (A^3: fold the
+    completed prompt into the column sort); ``update_sort=False`` builds
+    the cheaper specialization that treats the sorted-key leaves as
+    read-only (dispatched on ticks where no lane finishes its prompt).
+    The ``rng`` argument exists only when ``temperature > 0`` (greedy
+    dispatches keep the production signature)."""
 
-    def step(params, cache, tokens, pos, length, sort_lanes):
-        return decoder.prefill_chunk(params, cfg, cache, tokens, pos,
-                                     length, a3=a3, sort_lanes=sort_lanes,
-                                     update_sort=update_sort)
+    if temperature > 0.0:
+        def step(params, cache, tokens, pos, length, sort_lanes,
+                 sample_pos, sample_ids, rng):
+            logits, cache = decoder.prefill_chunk(
+                params, cfg, cache, tokens, pos, length, a3=a3,
+                sort_lanes=sort_lanes, update_sort=update_sort)
+            tok = decoder.sample_logits(logits, temperature=temperature,
+                                        rng=rng, pos=sample_pos,
+                                        ids=sample_ids)
+            return tok, cache
+    else:
+        def step(params, cache, tokens, pos, length, sort_lanes,
+                 sample_pos, sample_ids):
+            logits, cache = decoder.prefill_chunk(
+                params, cfg, cache, tokens, pos, length, a3=a3,
+                sort_lanes=sort_lanes, update_sort=update_sort)
+            return decoder.sample_logits(logits), cache
 
     return step
 
@@ -169,6 +203,11 @@ class Request(NamedTuple):
 IDLE = "idle"
 PREFILLING = "prefilling"
 DECODING = "decoding"
+
+# admission chunk when ServeConfig.prefill_chunk is None: bounds the
+# chunk dispatch's per-layer score/scan working set independent of
+# max_len (prompts <= 512 still admit in a single dispatch)
+_DEFAULT_ADMIT_CHUNK = 512
 
 
 @dataclasses.dataclass
@@ -205,6 +244,14 @@ class ServeEngine:
                  prefill_chunk: Optional[int] = None,
                  decode_block: int = 1, use_kernel: bool = False,
                  temperature: float = 0.0, sample_seed: int = 0):
+        if cfg.frontend:
+            # the engine admits token prompts; frontend archs (audio /
+            # vision) need precomputed embeddings the submit() API cannot
+            # carry — raise instead of silently serving garbage tokens
+            raise ValueError(
+                f"{cfg.name}: frontend archs serve from precomputed "
+                f"embeddings; the token-prompt ServeEngine does not "
+                f"support them")
         self.params, self.cfg, self.a3 = params, cfg, a3
         self.max_len = max_len
         self._use_a3 = a3.mode != A3Mode.OFF
@@ -213,10 +260,20 @@ class ServeEngine:
         # of 0 was "resort whenever any fresh tail exists" — which is
         # what 1 expresses (0 would only add no-op sorts at pos == upto)
         self.resort_every = max(1, int(resort_every))
-        if prefill_chunk is not None and \
-                not decoder.supports_chunked_prefill(cfg):
-            prefill_chunk = None      # recurrent blocks: whole-prompt admit
+        # every arch admits through the chunked path (the mixer-state
+        # interface carries recurrent mid-prompt state across chunks);
+        # None = a default admission chunk of min(max_len, 512) — the
+        # chunk dispatch materializes O(C x (ring + C)) attention
+        # scores and O(C) recurrent-scan intermediates per layer, so an
+        # uncapped max_len-sized chunk would blow peak memory at large
+        # max_len for no latency benefit
+        if prefill_chunk is not None and int(prefill_chunk) <= 0:
+            raise ValueError(f"prefill_chunk must be positive, got "
+                             f"{prefill_chunk} (use None for the "
+                             f"default)")
         self.prefill_chunk = prefill_chunk
+        self._chunk = (int(prefill_chunk) if prefill_chunk is not None
+                       else min(int(max_len), _DEFAULT_ADMIT_CHUNK))
         self.decode_block = max(1, int(decode_block))
         self.use_kernel = use_kernel
         # temperature > 0 is THE sampling switch: 0 pins greedy argmax
@@ -239,19 +296,24 @@ class ServeEngine:
                 resort_every=self.resort_every if self._use_a3 else 0,
                 temperature=self.temperature),
             donate_argnums=(1,))
-        self._prefill = None
+        self._prefill = jax.jit(
+            make_prefill_chunk_step(cfg, a3=self._use_a3,
+                                    temperature=self.temperature),
+            donate_argnums=(1,))
         self._prefill_nosort = None
-        if prefill_chunk is not None:
-            self._prefill = jax.jit(
-                make_prefill_chunk_step(cfg, a3=self._use_a3),
+        if self._use_a3:
+            # ticks where no lane finishes its prompt skip the sort
+            # AND the per-layer sorted-key passthrough copy
+            self._prefill_nosort = jax.jit(
+                make_prefill_chunk_step(cfg, a3=True, update_sort=False,
+                                        temperature=self.temperature),
                 donate_argnums=(1,))
-            if self._use_a3:
-                # ticks where no lane finishes its prompt skip the sort
-                # AND the per-layer sorted-key passthrough copy
-                self._prefill_nosort = jax.jit(
-                    make_prefill_chunk_step(cfg, a3=True,
-                                            update_sort=False),
-                    donate_argnums=(1,))
+        # device-resident prefill->decode handoff: slots that finished
+        # their prompt this tick, whose first sampled token lives only
+        # in ``_first_tok`` (the prefill dispatch output) until the next
+        # decode harvest (or a direct read if no decode block runs)
+        self._handoff: set = set()
+        self._first_tok = None
         self._queue: Deque[Request] = collections.deque()
         self._done: Dict[int, List[int]] = {}
         self._uid = 0
@@ -259,7 +321,7 @@ class ServeEngine:
                       "decode_steps_advanced": 0,
                       "decode_dispatches": 0, "decode_blocks": 0,
                       "prefill_dispatches": 0, "host_syncs": 0,
-                      "ticks": 0, "resorts": 0}
+                      "handoff_syncs": 0, "ticks": 0, "resorts": 0}
 
     @classmethod
     def from_config(cls, params: Any, cfg: ModelConfig, serve: ServeConfig,
@@ -309,57 +371,29 @@ class ServeEngine:
             if slot.active or not self._queue:
                 continue
             req = self._queue.popleft()
-            if self.prefill_chunk is None:
-                self._admit_whole_prompt(si, req)
-                continue
             # no host-side cache work at admit: the slot's first chunk
-            # dispatch zeroes its ring rows in-graph (pos == 0), so
+            # dispatch resets its mixer state in-graph (pos == 0), so
             # chunked prefill reproduces the whole-prompt cache state.
             self.slots[si] = SlotState(uid=req.uid, pos=0, generated=[],
                                        budget=req.max_new_tokens,
                                        phase=PREFILLING,
                                        prompt=req.prompt, cursor=0)
 
-    def _admit_whole_prompt(self, si: int, req: Request):
-        """Legacy per-admit path: one whole-prompt prefill dispatch."""
-        s = len(req.prompt)
-        toks = jnp.asarray(req.prompt)[None]
-        logits, pcache = decoder.prefill(self.params, self.cfg, toks,
-                                         max_len=self.max_len,
-                                         a3=self._use_a3)
-        self._write_slot_cache(si, pcache)
-        # blocking first-token read; the draw goes through sample_logits
-        # so temperature sampling covers position s too (keyed at the
-        # producing step's position s-1, disjoint from the decode steps'
-        # s, s+1, ... keys)
-        nxt = int(decoder.sample_logits(
-            logits, temperature=self.temperature, rng=self._sample_rng,
-            pos=jnp.asarray([s - 1], jnp.int32),
-            ids=jnp.asarray([req.uid], jnp.int32))[0])
-        self.stats["host_syncs"] += 1
-        self.slots[si] = SlotState(uid=req.uid, pos=s,
-                                   generated=[nxt],
-                                   budget=req.max_new_tokens - 1,
-                                   phase=DECODING, sorted_upto=s)
-        self.stats["prefill_tokens"] += s
-        self.stats["prefill_dispatches"] += 1
-        if self.slots[si].budget <= 0:
-            self._finish(si)
-
     def _prefill_tick(self):
         """Advance every PREFILLING slot by one prompt chunk in a single
-        ragged padded dispatch."""
-        if self._prefill is None:
-            return
+        ragged padded dispatch; finishing lanes' first tokens are
+        sampled in-graph and stay on device for the decode handoff."""
         pre = [si for si, s in enumerate(self.slots)
                if s.phase == PREFILLING]
         if not pre:
             return
-        n, c = len(self.slots), self.prefill_chunk
+        n, c = len(self.slots), self._chunk
         tokens = np.zeros((n, c), np.int32)
         pos = np.zeros((n,), np.int32)
         length = np.zeros((n,), np.int32)
         sort_lanes = np.zeros((n,), bool)
+        sample_pos = np.zeros((n,), np.int32)
+        sample_ids = np.zeros((n,), np.int32)
         takes = {}
         for si in pre:
             s = self.slots[si]
@@ -371,77 +405,90 @@ class ServeEngine:
             # A^3 sort amortization: fold into the column sort only on
             # the prompt's final chunk (one sort per admitted prompt).
             sort_lanes[si] = s.cursor + take >= len(s.prompt)
+            # sampling key for the in-graph first-token draw, keyed at
+            # the producing position len(prompt)-1 (== cursor+take-1 on
+            # the final chunk; meaningless and unused for other lanes)
+            sample_pos[si] = s.cursor + take - 1
+            sample_ids[si] = s.uid
         fn = self._prefill
         if self._prefill_nosort is not None and not sort_lanes.any():
             fn = self._prefill_nosort
-        logits, self.cache = fn(
-            self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(pos), jnp.asarray(length),
-            jnp.asarray(sort_lanes))
+        args = (self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(pos), jnp.asarray(length),
+                jnp.asarray(sort_lanes), jnp.asarray(sample_pos),
+                jnp.asarray(sample_ids))
+        if self._sample_rng is not None:
+            first_tok, self.cache = fn(*args, self._sample_rng)
+        else:
+            first_tok, self.cache = fn(*args)
         self.stats["prefill_dispatches"] += 1
-        nxt = None
-        if sort_lanes.any():
-            # blocking first-token read — only on ticks where some lane
-            # finishes its prompt (mid-prompt chunk logits are unused).
-            # The draw goes through sample_logits so temperature
-            # sampling covers each request's first token too, keyed at
-            # the producing position len(prompt)-1.
-            pos_v = np.zeros((n,), np.int32)
-            ids_v = np.zeros((n,), np.int32)
-            for si in pre:
-                pos_v[si] = len(self.slots[si].prompt) - 1
-                ids_v[si] = self.slots[si].uid
-            nxt = np.asarray(decoder.sample_logits(
-                logits, temperature=self.temperature,
-                rng=self._sample_rng, pos=jnp.asarray(pos_v),
-                ids=jnp.asarray(ids_v)))
-            self.stats["host_syncs"] += 1
         for si in pre:
             s = self.slots[si]
             s.cursor += takes[si]
             s.pos = s.cursor
             self.stats["prefill_tokens"] += takes[si]
             if s.cursor >= len(s.prompt):
+                # device-resident handoff: the first token exists only
+                # in ``first_tok`` until the decode harvest resolves it
                 s.phase = DECODING
-                s.generated = [int(nxt[si])]
+                s.generated = []
                 s.budget -= 1
                 s.sorted_upto = len(s.prompt)  # final chunk folded the sort
-                if s.budget <= 0:
-                    self._finish(si)
-
-    def _write_slot_cache(self, si: int, pcache: Dict[str, Any]):
-        def write(dst, src):
-            return dst.at[:, si:si + 1].set(src)
-        self.cache = jax.tree.map(write, self.cache, pcache)
+                self._handoff.add(si)
+        if self._handoff:
+            self._first_tok = first_tok
 
     def _advance(self):
-        # lanes already at the max_len clamp cannot take a single step
-        # (a prompt of length >= max_len finishes with just its prefill
-        # token): finish them host-side so every dispatched lane has
-        # steps_left >= 1 and the ring harvest never slices negatively.
-        for si, s in enumerate(self.slots):
-            if s.decoding and self.max_len - 1 - s.pos <= 0:
-                self._finish(si)
-        active = [si for si, s in enumerate(self.slots) if s.decoding]
+        handoff = self._handoff
+        self._handoff = set()
+        # lanes that can advance at least one step: unexhausted budget
+        # and below the max_len clamp (a prompt of length >= max_len
+        # finishes with just its prefill token — it rides along at
+        # pos = -1 so its first token still arrives via the harvest)
+        active = [si for si, s in enumerate(self.slots)
+                  if s.decoding and s.budget > 0
+                  and s.pos < self.max_len - 1]
         if not active:
+            if handoff:
+                # no decode block to ride: read the first tokens directly
+                # (rare — every handoff lane finished with its prefill
+                # token, from budget == 1 or a max_len-length prompt)
+                first = np.asarray(self._first_tok)
+                self.stats["host_syncs"] += 1
+                self.stats["handoff_syncs"] += 1
+                for si in sorted(handoff):
+                    self.slots[si].generated.append(int(first[si]))
+            self._finish_done_slots()
             return
-        # blocked ragged decode: every DECODING slot advances up to
+        # blocked ragged decode: every advanceable slot moves up to
         # ``decode_block`` tokens in ONE jitted dispatch — sampling,
         # token feedback, and the A^3 re-sort all happen in-graph, and
         # the host syncs once per block to harvest the emitted-token
         # ring. Idle/prefilling slots ride along at pos=-1 (dropped ring
-        # writes); lanes that exhaust their budget or hit max_len
-        # mid-block are masked off in-graph via ``steps_left``.
+        # writes, masked recurrent state); lanes that exhaust their
+        # budget or hit max_len mid-block are masked off in-graph via
+        # ``steps_left``.
         n, t = len(self.slots), self.decode_block
         tokens = np.zeros((n,), np.int32)
         pos = np.full((n,), -1, np.int32)
         steps_left = np.zeros((n,), np.int32)
         for si in active:
             s = self.slots[si]
-            tokens[si] = s.generated[-1]
+            if s.generated:
+                tokens[si] = s.generated[-1]
             pos[si] = s.pos
             steps_left[si] = min(s.budget, self.max_len - 1 - s.pos)
-        args = (self.params, self.cache, jnp.asarray(tokens),
+        token_dev = jnp.asarray(tokens)
+        if handoff:
+            # handoff lanes' input token lives on device: select it into
+            # the lane vector without a blocking read (covers ALL
+            # handoff lanes — ride-along ones included, so their first
+            # token reaches the host via the harvest's input column)
+            hmask = np.zeros((n,), bool)
+            hmask[sorted(handoff)] = True
+            token_dev = jnp.where(jnp.asarray(hmask), self._first_tok,
+                                  token_dev)
+        args = (self.params, self.cache, token_dev,
                 jnp.asarray(pos), jnp.asarray(steps_left))
         if self._sample_rng is not None:
             ids = np.zeros((n,), np.int32)
@@ -459,12 +506,18 @@ class ServeEngine:
         self.stats["decode_steps_advanced"] += int(min(t, steps_left.max()))
         self.stats["decode_dispatches"] += 1
         self.stats["decode_blocks"] += 1
-        ring_host = np.asarray(ring)           # THE host sync of the block
+        # THE host sync of the block: the ring prepended with the
+        # block's input tokens, which carries the handoff lanes' first
+        # tokens to the host for free
+        full = jnp.concatenate([token_dev[:, None], ring], axis=1)
+        ring_host = np.asarray(full)
         self.stats["host_syncs"] += 1
+        for si in sorted(handoff):
+            self.slots[si].generated.append(int(ring_host[si, 0]))
         for si in active:
             s = self.slots[si]
             nb = int(min(t, steps_left[si]))
-            s.generated.extend(int(tok) for tok in ring_host[si, :nb])
+            s.generated.extend(int(tok) for tok in ring_host[si, 1:1 + nb])
             if self._use_a3:
                 # mirror the in-graph watermark (checked before each
                 # step's ring write, exactly as resort_sorted_keys does)
@@ -474,7 +527,12 @@ class ServeEngine:
                         self.stats["resorts"] += self._n_a3_segs
             s.pos += nb
             s.budget -= nb
-            if s.budget <= 0 or s.pos >= self.max_len - 1:
+        self._finish_done_slots()
+
+    def _finish_done_slots(self):
+        for si, s in enumerate(self.slots):
+            if s.decoding and (s.budget <= 0
+                               or s.pos >= self.max_len - 1):
                 self._finish(si)
 
     def _finish(self, si: int):

@@ -19,12 +19,22 @@ invariants:
   partial block (every active lane finishes in it) can only follow a
   prefill dispatch that flipped its cohort to DECODING
 * ``prefill_dispatches <= ticks``        (one ragged prefill per tick)
-* ``host_syncs <= decode_dispatches + prefill_dispatches`` — one ring
-  harvest per decode dispatch, and a first-token read only on prefill
-  ticks where a lane finishes its prompt
+* ``host_syncs <= decode_dispatches + handoff_syncs`` — the
+  device-resident prefill->decode handoff: one ring harvest per decode
+  dispatch, prefill ticks never block (a finishing lane's in-graph
+  first-token draw rides the same tick's decode block), and
+  ``handoff_syncs`` counts the rare direct reads when a prompt finishes
+  with no decode block to ride (budget 1 / max_len-length prompt)
 * both ``host_syncs`` and ``decode_dispatches`` are bounded by
   ``ceil(decode_steps / T) + prefill_dispatches`` (the sync-elimination
   acceptance bound): syncs per generated token fall as ~1/T.
+
+Chunked admission covers EVERY architecture through the per-segment
+mixer-state interface: the recurrent sections below pin chunked ==
+whole-prompt generations token-for-token for downscaled RG-LRU and
+xLSTM configs across chunk sizes {8, 64, whole}, admission orders, and
+mid-prompt chunk boundaries, with pad-lane state required bit-identical
+to untouched.
 """
 from __future__ import annotations
 
@@ -37,13 +47,29 @@ import pytest
 
 from helpers import check, given, run_with_devices, settings, st
 
-from repro.config import A3Config, ModelConfig
+from repro.config import A3Config, AttentionKind, BlockKind, ModelConfig
 from repro.models import decoder as dec
 from repro.serve.engine import ServeEngine
 
 TINY = ModelConfig("tiny", "dense", num_layers=2, d_model=64, num_heads=4,
                    num_kv_heads=2, d_ff=128, vocab_size=256, head_dim=16,
                    dtype="float32")
+# downscaled recurrent/hybrid archs: the mixer-state interface must
+# carry mid-prompt recurrent state across chunk boundaries for these
+# (recurrentgemma-like RG-LRU pattern; xlstm-like mLSTM/sLSTM pattern)
+TINY_RG = ModelConfig("tiny-rg", "hybrid", num_layers=3, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=256, head_dim=16,
+                      attention_kind=AttentionKind.SLIDING, window_size=24,
+                      block_pattern=(BlockKind.RGLRU, BlockKind.RGLRU,
+                                     BlockKind.ATTENTION),
+                      act="gelu", dtype="float32")
+TINY_XL = ModelConfig("tiny-xl", "ssm", num_layers=3, d_model=64,
+                      num_heads=4, num_kv_heads=4, d_ff=0, vocab_size=256,
+                      head_dim=16,
+                      block_pattern=(BlockKind.MLSTM, BlockKind.MLSTM,
+                                     BlockKind.SLSTM),
+                      dtype="float32")
 MAX_LEN = 96
 MAX_NEW = 6
 PROMPT_LENS = (5, 12, 23, 31, 9)
@@ -60,16 +86,16 @@ def prompts():
     return [rng.integers(0, TINY.vocab_size, size=n) for n in PROMPT_LENS]
 
 
-def _reference_generate(params, prompt, max_new, a3=A3Config()):
+def _reference_generate(params, prompt, max_new, a3=A3Config(), cfg=TINY):
     """Sequential single-request oracle: whole-prompt prefill + scalar
     greedy decode (no batching, no chunking, no engine)."""
     use_a3 = a3.mode.value != "off"
-    lg, cache = dec.prefill(params, TINY, jnp.asarray(prompt, jnp.int32)[None],
+    lg, cache = dec.prefill(params, cfg, jnp.asarray(prompt, jnp.int32)[None],
                             max_len=MAX_LEN, a3=use_a3)
     cur, pos, out = int(jnp.argmax(lg[0])), len(prompt), []
     out.append(cur)
     for _ in range(max_new - 1):
-        lg, cache = dec.decode_step(params, TINY, cache,
+        lg, cache = dec.decode_step(params, cfg, cache,
                                     jnp.asarray([cur], jnp.int32),
                                     jnp.int32(pos), a3=a3)
         cur = int(jnp.argmax(lg[0]))
@@ -97,15 +123,16 @@ def _assert_invariants(eng):
     # slots (inflating dispatches without advancing lanes) fails here
     assert s["decode_dispatches"] <= (math.ceil(adv / t)
                                       + s["prefill_dispatches"])
-    if eng.prefill_chunk is not None:
-        # chunked admission: at most one ragged prefill dispatch per tick
-        # (whole-prompt mode instead dispatches once per admit, and
-        # blocked decode compresses the tick count below the admit count)
-        assert s["prefill_dispatches"] <= s["ticks"]
-    # one ring harvest per decode dispatch; prefill ticks sync only when
-    # a lane finishes its prompt
-    assert s["host_syncs"] <= (s["decode_dispatches"]
-                               + s["prefill_dispatches"])
+    # chunked admission covers every mode (prefill_chunk=None uses
+    # the default min(max_len, 512) chunk): at most one ragged
+    # prefill dispatch per tick
+    assert s["prefill_dispatches"] <= s["ticks"]
+    # the device-resident prefill->decode handoff bound: one ring
+    # harvest per decode dispatch — prefill ticks never block — plus
+    # the rare direct first-token read when a prompt finishes with no
+    # decode block to ride (budget 1 or a max_len-length prompt)
+    assert s["host_syncs"] <= s["decode_dispatches"] + s["handoff_syncs"]
+    assert s["handoff_syncs"] <= s["prefill_dispatches"]
     # the sync-elimination acceptance bound: with decode_block=T both
     # the dispatch count and the host-sync count are at most
     # ceil(decode_steps / T) + prefill_dispatches
@@ -115,8 +142,8 @@ def _assert_invariants(eng):
 
 
 def _run_engine(params, prompts, *, slots, chunk, order="upfront",
-                a3=A3Config(), resort_every=64, decode_block=1):
-    eng = ServeEngine(params, TINY, slots=slots, max_len=MAX_LEN, a3=a3,
+                a3=A3Config(), resort_every=64, decode_block=1, cfg=TINY):
+    eng = ServeEngine(params, cfg, slots=slots, max_len=MAX_LEN, a3=a3,
                       prefill_chunk=chunk, resort_every=resort_every,
                       decode_block=decode_block)
     uids = {}
@@ -145,7 +172,7 @@ def _run_engine(params, prompts, *, slots, chunk, order="upfront",
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("slots", [1, 4])
-@pytest.mark.parametrize("chunk", [8, 64, None])  # None = whole-prompt
+@pytest.mark.parametrize("chunk", [8, 64, None])  # None = default chunk
 def test_engine_matches_sequential_reference(params, prompts, refs, slots,
                                              chunk):
     """Engine generations are identical to per-request sequential decode
@@ -223,6 +250,163 @@ def test_a3_chunked_matches_sequential_reference(params, prompts, chunk):
     for i, ref in enumerate(refs_a3):
         assert out[i] == ref, (i, chunk)
     _assert_invariants(eng)
+
+
+# ---------------------------------------------------------------------------
+# recurrent-arch chunked admission: the mixer-state interface carries
+# mid-prompt RG-LRU / mLSTM / sLSTM state across chunk boundaries
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def rg_params():
+    return dec.init_params(jax.random.PRNGKey(1), TINY_RG)
+
+
+@pytest.fixture(scope="module")
+def xl_params():
+    return dec.init_params(jax.random.PRNGKey(2), TINY_XL)
+
+
+def _recurrent_setup(cfg, rg_params, xl_params):
+    return rg_params if cfg is TINY_RG else xl_params
+
+
+@pytest.mark.parametrize("cfg", [TINY_RG, TINY_XL], ids=["rglru", "xlstm"])
+@pytest.mark.parametrize("chunk", [8, 64, None])  # None = default chunk
+def test_recurrent_engine_matches_whole_prompt_reference(
+        rg_params, xl_params, prompts, cfg, chunk):
+    """Chunked admission for recurrent/hybrid archs is token-for-token
+    identical to the whole-prompt sequential reference across chunk
+    sizes — chunk=8 puts boundaries mid-prompt (23- and 31-token
+    prompts), exercising the carried conv tail / LRU hidden / matrix
+    and cell states; chunk=64 covers every prompt in one chunk; None
+    admits through the default min(max_len, 512) chunk — a single
+    dispatch at these sizes."""
+    params = _recurrent_setup(cfg, rg_params, xl_params)
+    refs = [_reference_generate(params, p, MAX_NEW, cfg=cfg)
+            for p in prompts[:3]]
+    out, eng = _run_engine(params, prompts[:3], slots=2, chunk=chunk,
+                           cfg=cfg)
+    for i, ref in enumerate(refs):
+        assert out[i] == ref, (cfg.name, i, chunk)
+    _assert_invariants(eng)
+
+
+@pytest.mark.parametrize("cfg", [TINY_RG, TINY_XL], ids=["rglru", "xlstm"])
+@pytest.mark.parametrize("order", ["reversed", "staggered"])
+def test_recurrent_admission_order_does_not_change_outputs(
+        rg_params, xl_params, prompts, cfg, order):
+    """Recurrent-arch generations are independent of admission order and
+    of which slots decode while others prefill (mixed ticks: decoding
+    lanes ride the prefill dispatch at length 0, prefilling lanes ride
+    the decode block at pos=-1 — both must leave recurrent state
+    untouched)."""
+    params = _recurrent_setup(cfg, rg_params, xl_params)
+    refs = [_reference_generate(params, p, MAX_NEW, cfg=cfg)
+            for p in prompts[:3]]
+    out, eng = _run_engine(params, prompts[:3], slots=2, chunk=8,
+                           order=order, decode_block=4, cfg=cfg)
+    for i, ref in enumerate(refs):
+        assert out[i] == ref, (cfg.name, i, order)
+    _assert_invariants(eng)
+
+
+@pytest.mark.parametrize("cfg", [TINY_RG, TINY_XL], ids=["rglru", "xlstm"])
+@pytest.mark.parametrize("plen,chunk", [(23, 8), (7, 3), (16, 16), (30, 7)])
+def test_recurrent_prefill_chunk_extends_cache_like_whole_prompt(
+        rg_params, xl_params, cfg, plen, chunk):
+    """Decoder-level: running a prompt through prefill_chunk in any
+    chunk split yields the same recurrent states (conv tail, LRU h,
+    mLSTM (C, n, m), sLSTM (c, n, m, h)) and final logits as one
+    whole-prompt prefill — including splits with mid-prompt boundaries
+    and chunks that don't divide the prompt."""
+    params = _recurrent_setup(cfg, rg_params, xl_params)
+    rng = np.random.default_rng(plen * 100 + chunk)
+    p = rng.integers(0, cfg.vocab_size, size=plen)
+    lg_ref, cache_ref = dec.prefill(params, cfg,
+                                    jnp.asarray(p, jnp.int32)[None],
+                                    max_len=32)
+    cache = dec.init_cache(cfg, 1, 32)
+    cur, lg = 0, None
+    while cur < plen:
+        take = min(chunk, plen - cur)
+        toks = np.zeros((1, chunk), np.int32)
+        toks[0, :take] = p[cur:cur + take]
+        lg, cache = dec.prefill_chunk(params, cfg, cache,
+                                      jnp.asarray(toks),
+                                      jnp.asarray([cur], jnp.int32),
+                                      jnp.asarray([take], jnp.int32))
+        cur += take
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_ref),
+                               rtol=3e-5, atol=3e-5)
+    flat_c, _ = jax.tree_util.tree_flatten_with_path(cache)
+    flat_r, _ = jax.tree_util.tree_flatten_with_path(cache_ref)
+    for (ka, a), (kb, b) in zip(flat_c, flat_r):
+        assert str(ka) == str(kb)
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=3e-5, atol=3e-5, err_msg=str(ka))
+
+
+@pytest.mark.parametrize("cfg", [TINY_RG, TINY_XL], ids=["rglru", "xlstm"])
+def test_recurrent_pad_lane_state_is_bit_identical(rg_params, xl_params,
+                                                   cfg):
+    """Uniform ragged pad-lane masking: a lane riding a chunk dispatch
+    with length 0 and a lane riding a decode step at pos=-1 keep every
+    recurrent state leaf BIT-identical (np.testing.assert_array_equal,
+    not allclose) — the engine interleaves such ride-alongs on every
+    mixed prefill/decode tick."""
+    params = _recurrent_setup(cfg, rg_params, xl_params)
+    rng = np.random.default_rng(3)
+    p = rng.integers(0, cfg.vocab_size, size=(2, 9))
+    _, cache = dec.prefill(params, cfg, jnp.asarray(p, jnp.int32),
+                           max_len=32)
+    # chunk dispatch: lane 1 rides at length 0
+    toks = np.zeros((2, 4), np.int32)
+    toks[0] = rng.integers(0, cfg.vocab_size, size=4)
+    _, new_cache = dec.prefill_chunk(params, cfg, cache,
+                                     jnp.asarray(toks),
+                                     jnp.asarray([9, 0], jnp.int32),
+                                     jnp.asarray([4, 0], jnp.int32))
+    flat_n, _ = jax.tree_util.tree_flatten_with_path(new_cache)
+    flat_o, _ = jax.tree_util.tree_flatten_with_path(cache)
+    for (ka, a), (kb, b) in zip(flat_n, flat_o):
+        np.testing.assert_array_equal(np.asarray(a)[:, 1],
+                                      np.asarray(b)[:, 1], err_msg=str(ka))
+    # decode dispatch: lane 1 rides at pos=-1
+    tok = jnp.asarray([5, 6], jnp.int32)
+    pos = jnp.asarray([9, -1], jnp.int32)
+    _, dec_cache = dec.decode_step(params, cfg, cache, tok, pos)
+    flat_d, _ = jax.tree_util.tree_flatten_with_path(dec_cache)
+    for (ka, a), (kb, b) in zip(flat_d, flat_o):
+        np.testing.assert_array_equal(np.asarray(a)[:, 1],
+                                      np.asarray(b)[:, 1], err_msg=str(ka))
+
+
+@pytest.mark.parametrize("cfg", [TINY_RG, TINY_XL], ids=["rglru", "xlstm"])
+def test_recurrent_fresh_lane_resets_stale_slot_state(rg_params, xl_params,
+                                                      cfg):
+    """A lane admitted at pos=0 into a slot holding a finished request's
+    recurrent state must reset it in-graph: the chunked cache equals a
+    from-scratch chunked prefill of the new prompt."""
+    params = _recurrent_setup(cfg, rg_params, xl_params)
+    rng = np.random.default_rng(4)
+    stale = rng.integers(0, cfg.vocab_size, size=(1, 13))
+    _, cache = dec.prefill(params, cfg, jnp.asarray(stale, jnp.int32),
+                           max_len=32)          # slot holds stale state
+    p = rng.integers(0, cfg.vocab_size, size=(1, 6))
+    toks = jnp.asarray(p, jnp.int32)
+    _, reused = dec.prefill_chunk(params, cfg, cache, toks,
+                                  jnp.asarray([0], jnp.int32),
+                                  jnp.asarray([6], jnp.int32))
+    _, scratch = dec.prefill_chunk(params, cfg, dec.init_cache(cfg, 1, 32),
+                                   toks, jnp.asarray([0], jnp.int32),
+                                   jnp.asarray([6], jnp.int32))
+    flat_a, _ = jax.tree_util.tree_flatten_with_path(reused)
+    flat_b, _ = jax.tree_util.tree_flatten_with_path(scratch)
+    for (ka, a), (kb, b) in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=str(ka))
 
 
 # ---------------------------------------------------------------------------
@@ -567,6 +751,46 @@ def test_engine_rejects_empty_prompt(params):
         eng.submit(np.asarray([], np.int32))
 
 
+def test_engine_rejects_frontend_arch(params):
+    """Frontend archs serve from precomputed embeddings the token-prompt
+    engine cannot carry — construction must raise, not degrade."""
+    import dataclasses
+    front = dataclasses.replace(TINY, frontend="audio_frames")
+    with pytest.raises(ValueError):
+        ServeEngine(params, front, slots=1, max_len=32)
+
+
+def test_handoff_syncs_only_without_decode_block(params):
+    """The device-resident handoff's sync accounting: a prompt whose
+    budget is 1 finishes with only its prefill token and no decode
+    block to ride — exactly one direct first-token read
+    (handoff_syncs == 1). With budget >= 2 the first token rides the
+    same tick's decode harvest and prefill ticks never block
+    (handoff_syncs == 0, host_syncs == decode_dispatches)."""
+    rng = np.random.default_rng(7)
+    p = rng.integers(0, TINY.vocab_size, size=9)
+    ref_lg, _ = dec.prefill(params, TINY, jnp.asarray(p, jnp.int32)[None],
+                            max_len=32)
+    first = int(jnp.argmax(ref_lg[0]))
+
+    eng = ServeEngine(params, TINY, slots=1, max_len=32, prefill_chunk=8)
+    u = eng.submit(p, max_new_tokens=1)
+    eng.run_to_completion()
+    assert eng.result(u) == [first]
+    assert eng.stats["handoff_syncs"] == 1
+    assert eng.stats["host_syncs"] == 1          # the direct read only
+    _assert_invariants(eng)
+
+    eng2 = ServeEngine(params, TINY, slots=1, max_len=32, prefill_chunk=8)
+    u2 = eng2.submit(p, max_new_tokens=3)
+    eng2.run_to_completion()
+    assert eng2.result(u2)[0] == first
+    assert len(eng2.result(u2)) == 3
+    assert eng2.stats["handoff_syncs"] == 0
+    assert eng2.stats["host_syncs"] == eng2.stats["decode_dispatches"]
+    _assert_invariants(eng2)
+
+
 def test_prefill_chunk_zero_length_lane_is_identity(params):
     """Lanes with length 0 (idle/decoding slots sharing the dispatch
     batch) pass their cache rows through bit-identically."""
@@ -647,6 +871,31 @@ with mesh:
                             a3=A3Config.conservative(),
                             resort_every=64).compile()
     assert c3.memory_analysis().alias_size_in_bytes > 0
+print("OK")
+""", devices=8, timeout=900))
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_recurrent_prefill_chunk_lowering():
+    """Recurrent-arch chunked admission lowers under GSPMD: the ragged
+    prefill-chunk dispatch for a hybrid RG-LRU config (and the xLSTM
+    mixer states) compiles on the 8-device CI mesh with the cache
+    donated — the mixer-state interface's carried recurrent state is
+    sharded by the same cache specs as the KV rings."""
+    out = check(run_with_devices("""
+from repro.config import ShapeConfig, ShapeKind, ShardingConfig, \\
+    get_arch, smoke_variant
+from repro.launch.mesh import make_mesh
+from repro.launch.dryrun import lower_prefill_chunk
+pshape = ShapeConfig("prefill_smoke", ShapeKind.PREFILL, 256, 8)
+mesh = make_mesh((2, 4), ("data", "model"))
+scfg = ShardingConfig(remat="none")
+with mesh:
+    for arch in ("recurrentgemma-2b", "xlstm-350m"):
+        cfg = smoke_variant(get_arch(arch))
+        c = lower_prefill_chunk(cfg, pshape, mesh, scfg, chunk=64).compile()
+        assert c.memory_analysis().alias_size_in_bytes > 0, arch
 print("OK")
 """, devices=8, timeout=900))
     assert "OK" in out
