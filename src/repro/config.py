@@ -309,6 +309,18 @@ class ServeConfig:
     # dispatch, no separate code path; prompts <= 512 tokens still
     # admit in a single dispatch.
     prefill_chunk: Optional[int] = None
+    # Adaptive admission chunking: when set, ticks where >= 1 slot is
+    # actively decoding shrink the effective chunk to this floor (bounds
+    # the admission stall those decoders see), while a cold queue (no
+    # decoders to stall) drains at the full prefill_chunk. None
+    # disables the policy (fixed chunk).
+    prefill_chunk_min: Optional[int] = None
+    # Paged prefix cache (serve.prefix_cache): token positions per page
+    # (trie edge length — admitted prompts are recorded and matched at
+    # page granularity) and the total page budget of the device pool
+    # (LRU eviction above it). cache_pages=0 disables prefix reuse.
+    page_size: int = 64
+    cache_pages: int = 0
     # A^3: decode steps a slot may accumulate past its sorted_upto
     # watermark before its key columns are re-sorted (in-graph: the
     # watermark check and the fold both live inside the decode dispatch).
@@ -328,6 +340,43 @@ class ServeConfig:
     # decorrelated across requests.
     temperature: float = 0.0
     sample_seed: int = 0
+
+    def __post_init__(self):
+        # fail at construction, not three layers deep in the engine: a
+        # nonsensical knob silently admitted here used to surface as a
+        # shape error (or worse, a zero-length lane) at dispatch time
+        if self.slots < 1:
+            raise ValueError(f"slots must be >= 1, got {self.slots}")
+        if self.max_len < 1:
+            raise ValueError(f"max_len must be >= 1, got {self.max_len}")
+        if self.prefill_chunk is not None and self.prefill_chunk <= 0:
+            raise ValueError(
+                f"prefill_chunk must be positive, got "
+                f"{self.prefill_chunk} (use None for the default chunk)")
+        if self.prefill_chunk_min is not None:
+            if self.prefill_chunk_min <= 0:
+                raise ValueError(
+                    f"prefill_chunk_min must be positive, got "
+                    f"{self.prefill_chunk_min} (use None to disable the "
+                    f"adaptive policy)")
+            if self.prefill_chunk is not None \
+                    and self.prefill_chunk_min > self.prefill_chunk:
+                raise ValueError(
+                    f"prefill_chunk_min ({self.prefill_chunk_min}) must "
+                    f"not exceed prefill_chunk ({self.prefill_chunk})")
+        if self.decode_block < 1:
+            raise ValueError(
+                f"decode_block must be >= 1, got {self.decode_block}")
+        if self.page_size < 1:
+            raise ValueError(
+                f"page_size must be >= 1, got {self.page_size}")
+        if self.cache_pages < 0:
+            raise ValueError(
+                f"cache_pages must be >= 0, got {self.cache_pages} "
+                f"(0 disables the prefix cache)")
+        if self.temperature < 0.0:
+            raise ValueError(
+                f"temperature must be >= 0, got {self.temperature}")
 
 
 @dataclass(frozen=True)

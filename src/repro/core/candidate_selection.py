@@ -57,6 +57,30 @@ def sort_key_columns(key: jax.Array) -> SortedKeys:
     return SortedKeys(values=values, rows=order.astype(jnp.int32))
 
 
+def slice_sorted_keys(sk: SortedKeys, keep_rows: jax.Array) -> SortedKeys:
+    """Restrict a per-column sort to a subset of ring rows (the paged
+    prefix-cache's page-boundary restore).
+
+    ``keep_rows`` [n] bool marks ring rows that remain valid after
+    truncating the cache at a page boundary. Dropped rows are re-valued
+    to 0 — exactly what an *unwritten* ring row reads as — and each
+    column is re-sorted, so the result equals
+    ``sort_key_columns(where(keep_rows[:, None], key, 0))`` without
+    needing the key matrix itself: the comprehension-time sort of a
+    shorter prefix is *recovered from the longer prompt's sorted
+    snapshot*, not recomputed from keys. (Entries tied at exactly 0 may
+    order differently than a from-keys sort; zero products never enter
+    the greedy walk — ``select_candidates`` masks ``> 0`` / ``< 0`` —
+    so candidate selection is unaffected.)
+    """
+    keep = keep_rows[sk.rows]                           # [n, d] bool
+    vals = jnp.where(keep, sk.values, jnp.zeros((), sk.values.dtype))
+    order = jnp.argsort(vals, axis=0)                   # stable ascending
+    return SortedKeys(
+        values=jnp.take_along_axis(vals, order, axis=0),
+        rows=jnp.take_along_axis(sk.rows, order, axis=0))
+
+
 # ---------------------------------------------------------------------------
 # Oracle: faithful priority-queue transcription of Figure 7
 # ---------------------------------------------------------------------------

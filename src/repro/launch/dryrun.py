@@ -237,6 +237,67 @@ def lower_prefill_chunk(cfg: ModelConfig, shape: ShapeConfig, mesh,
     return jf.lower(params_shape, cache_shape, tok, vec, vec)
 
 
+def lower_gather_pages(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                       sharding_cfg: ShardingConfig, *,
+                       page_size: int = 64, pages: int = 4096,
+                       a3: A3Config = A3Config()):
+    """Lower the prefix-cache warm-admission *gather* dispatch — the
+    ONE jitted copy a warm admission pays instead of re-prefilling the
+    matched prefix — on the production mesh with the slot cache donated
+    and the pool sharded like the rings. The graph is the engine's own
+    ``serve.prefix_cache.gather_fn`` (shared, so the lowered cell can
+    never drift from what serving dispatches); it is lowered on the
+    no-donor path (``sk_snaps = {}``: A^3 sorted columns re-derived by
+    the in-graph comprehension sort of the gathered ring)."""
+    import functools
+    from repro.config import BlockKind
+    from repro.models.mixer import build_segments, cache_len_for
+    from repro.serve.prefix_cache import gather_fn
+    if cfg.frontend:
+        raise ValueError(f"{cfg.name}: the prefix cache reuses token "
+                         "prompts; frontend archs admit whole-prompt")
+    use_a3 = a3.mode != A3Mode.OFF
+    b, s = shape.global_batch, shape.seq_len
+    segs = build_segments(cfg)
+    cache_shape = jax.eval_shape(
+        lambda: decoder.init_cache(cfg, b, s, a3=use_a3))
+    pool_shape = jax.eval_shape(
+        lambda: decoder.init_page_pool(cfg, pages, page_size, a3=use_a3))
+    cspecs = shardings_for(cache_specs(cache_shape, shape, mesh,
+                                       sharding_cfg), mesh)
+    # pool leaves are [L, pages, Hkv, page_size, hd] — the same 5-dim
+    # layout as the rings with the page axis in the batch position, so
+    # the cache rules shard them (pages over dp, page rows over model)
+    pspecs = shardings_for(cache_specs(pool_shape, shape, mesh,
+                                       sharding_cfg), mesh)
+    rep = NamedSharding(mesh, P())
+
+    idx_shape = {}
+    snaps_shape = {}
+    for i, seg in enumerate(segs):
+        name = f"seg{i}"
+        if seg.kind == BlockKind.ATTENTION:
+            w = cache_len_for(seg, s)
+            idx_shape[name] = {
+                "page": jax.ShapeDtypeStruct((w,), jnp.int32),
+                "off": jax.ShapeDtypeStruct((w,), jnp.int32),
+                "valid": jax.ShapeDtypeStruct((w,), jnp.bool_),
+            }
+        else:
+            snaps_shape[name] = jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct(
+                    (l.shape[0], 1) + l.shape[2:], l.dtype),
+                cache_shape[name])
+
+    fn = functools.partial(gather_fn, segs, use_a3)
+    jf = jax.jit(fn,
+                 in_shardings=(cspecs, pspecs, rep, rep, rep, rep, rep),
+                 out_shardings=cspecs, donate_argnums=(0,))
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    return jf.lower(cache_shape, pool_shape, scalar, scalar, idx_shape,
+                    snaps_shape, {})
+
+
 # ---------------------------------------------------------------------------
 # cell runner
 # ---------------------------------------------------------------------------
@@ -246,6 +307,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              a3: A3Config = A3Config(),
              prefill_chunk: Optional[int] = None,
              decode_block: Optional[int] = None,
+             gather_pages: Optional[int] = None,
+             page_size: int = 64,
              verbose: bool = True,
              save_hlo_dir: Optional[str] = None) -> Dict[str, Any]:
     cfg = get_arch(arch)
@@ -269,7 +332,13 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             if prefill_chunk and not chunkable and verbose:
                 print(f"  {arch}: chunked admission takes token prompts; "
                       f"lowering whole-prompt (embeds) prefill")
-            if chunkable:
+            if gather_pages and not cfg.frontend:
+                # the prefix-cache warm-admission copy dispatch
+                lowered = lower_gather_pages(cfg, shape, mesh,
+                                             sharding_cfg,
+                                             page_size=page_size,
+                                             pages=gather_pages, a3=a3)
+            elif chunkable:
                 lowered = lower_prefill_chunk(cfg, shape, mesh,
                                               sharding_cfg,
                                               chunk=prefill_chunk, a3=a3)
@@ -354,6 +423,12 @@ def main() -> None:
                          "decode dispatch with this many steps per block "
                          "(in-graph sampling + A^3 re-sort; 0/1 = "
                          "single-step decode)")
+    ap.add_argument("--gather-pages", type=int, default=0,
+                    help="lower prefill cells as the prefix-cache "
+                         "warm-admission gather dispatch against a pool "
+                         "of this many pages (0 = normal prefill cell)")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="prefix-cache page size for --gather-pages")
     ap.add_argument("--out", default=None)
     ap.add_argument("--save-hlo", default=None,
                     help="directory for gzipped per-cell compiled HLO")
@@ -390,6 +465,8 @@ def main() -> None:
                         arch, shape_name, multi_pod=mp, a3=a3,
                         prefill_chunk=args.prefill_chunk or None,
                         decode_block=args.decode_block or None,
+                        gather_pages=args.gather_pages or None,
+                        page_size=args.page_size,
                         save_hlo_dir=args.save_hlo))
                 except Exception as e:   # noqa: BLE001
                     print(f"FAIL {arch} x {shape_name} "

@@ -32,6 +32,19 @@ def main() -> None:
                          "mixer-state interface carries mid-prompt "
                          "state); 0 = default chunk of "
                          "min(max_len, 512)")
+    ap.add_argument("--prefill-chunk-min", type=int, default=0,
+                    help="adaptive admission chunking floor: ticks with "
+                         ">= 1 decoding slot shrink the effective chunk "
+                         "to this many tokens (cold queues drain at the "
+                         "full chunk); 0 = fixed chunk")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="prefix-cache page granularity in tokens (trie "
+                         "edge length)")
+    ap.add_argument("--cache-pages", type=int, default=0,
+                    help="paged prefix-cache budget (pages of "
+                         "--page-size tokens; shared prompt prefixes "
+                         "admit via one gather dispatch instead of "
+                         "re-prefilling); 0 = disabled")
     ap.add_argument("--decode-block", type=int, default=1,
                     help="decode steps per jitted dispatch (lax.scan with "
                          "in-graph sampling + A^3 re-sort; the host syncs "
@@ -53,10 +66,13 @@ def main() -> None:
           "aggressive": A3Config.aggressive()}[args.a3]
     serve = ServeConfig(slots=args.slots, max_len=args.max_len,
                         prefill_chunk=args.prefill_chunk or None,
+                        prefill_chunk_min=args.prefill_chunk_min or None,
                         decode_block=args.decode_block,
                         use_kernel=args.use_kernel,
                         temperature=args.temperature,
-                        sample_seed=args.seed)
+                        sample_seed=args.seed,
+                        page_size=args.page_size,
+                        cache_pages=args.cache_pages)
 
     params = decoder.init_params(jax.random.PRNGKey(args.seed), cfg)
     engine = ServeEngine.from_config(params, cfg, serve, a3=a3)

@@ -328,6 +328,31 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
             for si, seg in enumerate(build_segments(cfg))}
 
 
+def init_page_pool(cfg: ModelConfig, pages: int, page_size: int,
+                   dtype=None, a3: bool = False) -> Dict[str, Any]:
+    """Paged prefix-cache pool: the page-axis view of the decode cache.
+
+    Where :func:`init_cache` allocates per-*slot* state (a [L, B, ...]
+    leaf per segment), this allocates the per-*page* store the serving
+    prefix cache (:mod:`repro.serve.prefix_cache`) copies admitted
+    prompts into: a logical page spans ``page_size`` token positions
+    across every segment at once, so one page id indexes each attention
+    segment's [L, pages, Hkv, page_size, hd] K/V arrays. Segments whose
+    per-token state is a fixed-size carry (recurrent kinds) contribute
+    no pool arrays — their state is snapshotted at page boundaries by
+    the trie, not paged. ``a3`` is accepted for signature symmetry with
+    ``init_cache``; sorted-key state is a whole-ring property restored
+    at gather time, never paged."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    pool: Dict[str, Any] = {}
+    for si, seg in enumerate(build_segments(cfg)):
+        seg_pages = MIXERS[seg.kind].init_pages(cfg, seg, pages,
+                                                page_size, dtype, a3)
+        if seg_pages is not None:
+            pool[f"seg{si}"] = seg_pages
+    return pool
+
+
 # ---------------------------------------------------------------------------
 # decode step
 # ---------------------------------------------------------------------------

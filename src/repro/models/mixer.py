@@ -34,11 +34,22 @@ dispatch — the slot may hold a finished request's state.
 Each mixer consumes the post-``ln1`` normalized hidden ``hn`` and
 returns the residual *delta* (the caller owns norm, residual add, and
 the FFN half of the block, which is kind-independent).
+
+The interface also carries the **paged prefix-cache hooks**
+(:mod:`repro.serve.prefix_cache`): ``init_pages`` allocates a segment's
+share of the page pool (attention: per-page K/V rows; recurrent kinds:
+no per-token pages — their decode state is a fixed-size carry),
+``write_page`` / ``gather_pages`` copy ring rows pool-ward /
+slot-ward, and ``snapshot_state`` / ``restore_state`` capture / replay
+the per-lane mixer state at a page boundary (the chunked-prefill carry
+*is* the snapshot: for recurrent kinds it is the whole state; for
+attention everything per-token lives in pages, so the snapshot is
+empty and restore is the page gather).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -384,6 +395,98 @@ def _attn_decode_step(lp: Params, state: Dict[str, jax.Array],
     return attention_out(lp["attn"], o[:, :, None, :]), new_state
 
 
+def _attn_init_pages(cfg: ModelConfig, seg: SegmentSpec, pages: int,
+                     page_size: int, dtype, a3: bool
+                     ) -> Dict[str, jax.Array]:
+    """Attention's share of the paged prefix-cache pool: per-page K/V
+    rows. A *logical* page spans ``page_size`` token positions across
+    every segment at once; sorted-key state is not paged (it is a
+    whole-ring property, restored at gather time)."""
+    L, hd = seg.count, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((L, pages, cfg.num_kv_heads, page_size, hd), dtype),
+        "v": jnp.zeros((L, pages, cfg.num_kv_heads, page_size, hd), dtype),
+    }
+
+
+def _attn_write_page(pool_seg: Dict[str, jax.Array],
+                     state: Dict[str, jax.Array], si: jax.Array,
+                     page_id: jax.Array, rows: jax.Array,
+                     valid: jax.Array) -> Dict[str, jax.Array]:
+    """Copy one page of slot ``si``'s ring into the pool at ``page_id``.
+
+    ``rows`` [ps] maps page offsets to ring rows (``pos % w``); offsets
+    whose position fell out of the ring (``valid`` False — a page wider
+    than a sliding window) store zeros, matching what an unwritten ring
+    row reads as at restore time."""
+    v4 = valid[None, None, :, None]
+
+    def put(pages, leaf):
+        src = leaf[:, si][:, :, rows]                  # [L, H, ps, hd]
+        src = jnp.where(v4, src, jnp.zeros((), leaf.dtype))
+        return pages.at[:, page_id].set(src)
+
+    return {"k": put(pool_seg["k"], state["k"]),
+            "v": put(pool_seg["v"], state["v"])}
+
+
+def _attn_gather_pages(state: Dict[str, jax.Array],
+                       pool_seg: Dict[str, jax.Array], si: jax.Array,
+                       t: jax.Array, page_idx: jax.Array,
+                       row_off: jax.Array, valid: jax.Array, *,
+                       a3: bool, sk_snap=None) -> Dict[str, jax.Array]:
+    """Restore slot ``si``'s ring for a matched prefix of length ``t``
+    from pool pages — the warm-admission copy.
+
+    ``page_idx`` / ``row_off`` [w] give each ring row's source
+    (pool page, in-page offset); rows with ``valid`` False (unwritten at
+    position ``t``) are zeroed, so the slot's ring is bit-identical to a
+    cold chunked prefill of the same prefix. With ``a3`` the sorted key
+    columns are restored too: sliced out of a donor prompt's leaf
+    snapshot via :func:`~repro.core.candidate_selection.slice_sorted_keys`
+    when one exists (``sk_snap``), else re-derived by a comprehension
+    sort of the gathered ring — either way ``sorted_upto`` comes back as
+    ``t``, so admission triggers no A^3 re-sort."""
+    v4 = valid[None, None, :, None]
+
+    def take(pages):
+        g = pages[:, page_idx, :, row_off]             # [w, L, H, hd]
+        g = jnp.moveaxis(g, 0, 2)                      # [L, H, w, hd]
+        return jnp.where(v4, g, jnp.zeros((), pages.dtype))
+
+    k_slot = take(pool_seg["k"])
+    new = {"k": state["k"].at[:, si].set(k_slot),
+           "v": state["v"].at[:, si].set(take(pool_seg["v"]))}
+    if a3 and "sk_vals" in state:
+        from repro.core.candidate_selection import SortedKeys, \
+            slice_sorted_keys, sort_key_columns
+        if sk_snap is not None:
+            sliced = jax.vmap(jax.vmap(
+                lambda v_, r_: slice_sorted_keys(SortedKeys(v_, r_),
+                                                 valid)))(
+                sk_snap["vals"], sk_snap["rows"])
+        else:
+            sliced = jax.vmap(jax.vmap(sort_key_columns))(k_slot)
+        new["sk_vals"] = state["sk_vals"].at[:, si].set(sliced.values)
+        new["sk_rows"] = state["sk_rows"].at[:, si].set(sliced.rows)
+        new["sorted_upto"] = state["sorted_upto"].at[:, si].set(
+            jnp.asarray(t, jnp.int32))
+    return {**state, **new}
+
+
+def _attn_snapshot(state: Dict[str, jax.Array], si: jax.Array
+                   ) -> Dict[str, jax.Array]:
+    """Attention's per-token decode state lives entirely in pages; the
+    boundary snapshot is empty (sorted-key leaf snapshots are captured
+    separately by the prefix cache, once per recorded prompt)."""
+    return {}
+
+
+def _attn_restore(state: Dict[str, jax.Array], snap: Dict[str, jax.Array],
+                  si: jax.Array) -> Dict[str, jax.Array]:
+    return state                                    # pages carry it all
+
+
 # ---------------------------------------------------------------------------
 # RG-LRU mixer
 # ---------------------------------------------------------------------------
@@ -556,6 +659,28 @@ def _slstm_decode_step(lp: Params, state: Dict[str, jax.Array],
 # registry
 # ---------------------------------------------------------------------------
 
+def _no_pages(cfg: ModelConfig, seg: SegmentSpec, pages: int,
+              page_size: int, dtype, a3: bool) -> None:
+    """Recurrent kinds keep no per-token pages: their decode state is a
+    fixed-size carry, snapshotted per page boundary instead."""
+    return None
+
+
+def _carry_snapshot(state: Dict[str, jax.Array], si: jax.Array
+                    ) -> Dict[str, jax.Array]:
+    """Per-lane boundary snapshot: the chunked-prefill carry itself.
+    Every recurrent state leaf is [L, B, ...]; slice lane ``si``."""
+    return {k: jax.lax.dynamic_slice_in_dim(v, si, 1, axis=1)
+            for k, v in state.items()}
+
+
+def _carry_restore(state: Dict[str, jax.Array],
+                   snap: Dict[str, jax.Array], si: jax.Array
+                   ) -> Dict[str, jax.Array]:
+    """Replay a boundary snapshot into lane ``si`` (warm admission)."""
+    return {k: v.at[:, si].set(snap[k][:, 0]) for k, v in state.items()}
+
+
 @dataclasses.dataclass(frozen=True)
 class SegmentMixer:
     """The per-kind mixer-state interface (see module docstring)."""
@@ -564,12 +689,21 @@ class SegmentMixer:
     prefill_full: Callable[..., Tuple[jax.Array, Dict[str, jax.Array]]]
     prefill_chunk: Callable[..., Tuple[jax.Array, Dict[str, jax.Array]]]
     decode_step: Callable[..., Tuple[jax.Array, Dict[str, jax.Array]]]
+    # paged prefix-cache hooks (repro.serve.prefix_cache)
+    init_pages: Callable[..., Optional[Dict[str, jax.Array]]] = _no_pages
+    write_page: Optional[Callable[..., Dict[str, jax.Array]]] = None
+    gather_pages: Optional[Callable[..., Dict[str, jax.Array]]] = None
+    snapshot_state: Callable[..., Dict[str, jax.Array]] = _carry_snapshot
+    restore_state: Callable[..., Dict[str, jax.Array]] = _carry_restore
 
 
 MIXERS: Dict[BlockKind, SegmentMixer] = {
     BlockKind.ATTENTION: SegmentMixer(
         _attn_init_state, _attn_forward, _attn_prefill_full,
-        _attn_prefill_chunk, _attn_decode_step),
+        _attn_prefill_chunk, _attn_decode_step,
+        init_pages=_attn_init_pages, write_page=_attn_write_page,
+        gather_pages=_attn_gather_pages, snapshot_state=_attn_snapshot,
+        restore_state=_attn_restore),
     BlockKind.RGLRU: SegmentMixer(
         _rglru_init_state, _rglru_forward, _rglru_prefill_full,
         _rglru_prefill_chunk, _rglru_decode_step),

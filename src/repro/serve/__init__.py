@@ -1,4 +1,6 @@
 from repro.serve.engine import ServeEngine, make_decode_block_step, \
     make_serve_step
+from repro.serve.prefix_cache import PrefixCache
 
-__all__ = ["ServeEngine", "make_decode_block_step", "make_serve_step"]
+__all__ = ["PrefixCache", "ServeEngine", "make_decode_block_step",
+           "make_serve_step"]

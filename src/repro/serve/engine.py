@@ -1,19 +1,39 @@
-"""Serving engine: chunked + ragged admission prefill for EVERY
-architecture and multi-step *scanned* decode with slot-based continuous
-batching, plus the A^3 approximate decode path.
+"""Serving engine: paged admission with shared-prefix reuse, chunked +
+ragged admission prefill for EVERY architecture, and multi-step
+*scanned* decode with slot-based continuous batching, plus the A^3
+approximate decode path.
 
 The engine holds a fixed number of request *slots*. Every engine tick
 runs the admission state machine::
 
-    admit -> chunked prefill -> blocked decode
-             (+ in-graph handoff)  (T x [in-graph resort -> step -> sample])
+    admit -----------> chunked prefill ------> blocked decode
+    (trie walk +       (suffix only;           (T x [in-graph resort
+     paged gather)      + in-graph handoff)        -> step -> sample])
 
-* **Admit.** Queued requests claim free slots and enter the PREFILLING
-  phase with a per-slot prompt cursor. No forward pass and no cache
-  work runs at admit time — the slot's first chunk dispatch resets its
-  per-segment mixer state in-graph (KV ring rows, recurrent carries),
-  so chunked prefill reproduces the whole-prompt prefill cache state
-  without a host-side reset copy.
+* **Admit — trie walk + paged gather.** Queued requests claim free
+  slots. With the paged prefix cache enabled (``cache_pages > 0``), a
+  submit first walks the radix trie over the prompt's ``page_size``-
+  token pages (:mod:`repro.serve.prefix_cache`); every matched page is
+  gathered into the slot's per-segment cache with ONE jitted copy
+  dispatch — attention ring rows from pool pages, recurrent carries
+  from the matched node's boundary snapshot (the chunked-prefill carry
+  *is* the snapshot), and the A^3 sorted columns + ``sorted_upto``
+  watermark restored at the boundary, so reuse triggers no re-sort.
+  The slot's prompt cursor starts at the matched length and only the
+  unmatched *suffix* chunk-prefills (always >= 1 token: a full hit is
+  capped one page short, so the final chunk still produces the
+  next-token logits and re-folds the A^3 sort exactly like a cold
+  admission). ``stats["prefix_hits"]`` / ``stats["prefix_tokens_reused"]``
+  count the reuse; ``prefill_tokens`` counts only suffix tokens, so a
+  cold run's ``prefill_tokens`` equals a warm run's ``prefill_tokens +
+  prefix_tokens_reused`` on the same workload. On a miss (or with the
+  cache disabled) admission is unchanged: no cache work at admit time —
+  the slot's first chunk dispatch resets its mixer state in-graph.
+  Admitted prompts are *recorded* as they prefill: chunks clamp to page
+  boundaries, each boundary copies one page pool-ward and snapshots the
+  recurrent carry into a new trie node (refcounted; LRU-evicted under
+  the ``cache_pages`` budget), and divergent requests copy-on-write by
+  recording sibling pages — pool pages are never mutated.
 * **Chunked ragged prefill — one dispatch per tick, every arch.** All
   PREFILLING slots advance by at most ``prefill_chunk`` prompt tokens
   in a *single* jitted ``prefill_chunk`` dispatch: a padded
@@ -29,7 +49,12 @@ runs the admission state machine::
   counts these dispatches; it is at most ``stats["ticks"]`` by
   construction. ``prefill_chunk=None`` uses a default chunk of
   ``min(max_len, 512)`` — same dispatch, bounded working set; short
-  prompts still admit in a single dispatch.
+  prompts still admit in a single dispatch. With
+  ``prefill_chunk_min`` set, the effective chunk *adapts*: ticks where
+  >= 1 slot is actively decoding shrink it to the floor (bounding the
+  stall those decoders see), while a cold queue drains at the full
+  chunk (``stats["adaptive_shrink_ticks"]`` counts shrunk prefill
+  ticks). Chunking — fixed or adaptive — never changes outputs.
 * **Device-resident prefill -> decode handoff.** The prefill dispatch
   samples each finishing lane's first token in-graph and returns it as
   a device array; the same tick's decode block consumes it directly
@@ -101,6 +126,7 @@ import numpy as np
 
 from repro.config import A3Config, A3Mode, ModelConfig, ServeConfig
 from repro.models import decoder
+from repro.serve.prefix_cache import PrefixCache
 
 
 def make_serve_step(
@@ -222,6 +248,10 @@ class SlotState:
     # host-side mirror of the in-graph A^3 ``sorted_upto`` watermark
     # (deterministic in pos; keeps stats["resorts"] without device reads)
     sorted_upto: int = 0
+    # prefix-cache recording anchor: the trie node whose boundary the
+    # cursor last crossed (ref-pinned against eviction while the slot
+    # prefills); None = not recording (cache disabled / budget exhausted)
+    rec_node: Any = None
 
     @property
     def active(self) -> bool:
@@ -242,8 +272,10 @@ class ServeEngine:
                  max_len: int = 2048, a3: A3Config = A3Config(),
                  resort_every: int = 64,
                  prefill_chunk: Optional[int] = None,
+                 prefill_chunk_min: Optional[int] = None,
                  decode_block: int = 1, use_kernel: bool = False,
-                 temperature: float = 0.0, sample_seed: int = 0):
+                 temperature: float = 0.0, sample_seed: int = 0,
+                 page_size: int = 64, cache_pages: int = 0):
         if cfg.frontend:
             # the engine admits token prompts; frontend archs (audio /
             # vision) need precomputed embeddings the submit() API cannot
@@ -274,6 +306,29 @@ class ServeEngine:
         self.prefill_chunk = prefill_chunk
         self._chunk = (int(prefill_chunk) if prefill_chunk is not None
                        else min(int(max_len), _DEFAULT_ADMIT_CHUNK))
+        # adaptive admission chunking: shrink to the floor on ticks
+        # where >= 1 slot is decoding (bound the stall decoders see),
+        # drain a cold queue at the full chunk
+        if prefill_chunk_min is not None:
+            if int(prefill_chunk_min) <= 0:
+                raise ValueError(f"prefill_chunk_min must be positive, "
+                                 f"got {prefill_chunk_min} (use None to "
+                                 f"disable the adaptive policy)")
+            if int(prefill_chunk_min) > self._chunk:
+                raise ValueError(f"prefill_chunk_min "
+                                 f"({prefill_chunk_min}) must not exceed "
+                                 f"the effective prefill chunk "
+                                 f"({self._chunk})")
+        self._chunk_min = (int(prefill_chunk_min)
+                           if prefill_chunk_min is not None else None)
+        if int(page_size) < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if int(cache_pages) < 0:
+            raise ValueError(f"cache_pages must be >= 0, got "
+                             f"{cache_pages} (0 disables the prefix "
+                             f"cache)")
+        self.page_size = int(page_size)
+        self.cache_pages = int(cache_pages)
         self.decode_block = max(1, int(decode_block))
         self.use_kernel = use_kernel
         # temperature > 0 is THE sampling switch: 0 pins greedy argmax
@@ -321,7 +376,19 @@ class ServeEngine:
                       "decode_steps_advanced": 0,
                       "decode_dispatches": 0, "decode_blocks": 0,
                       "prefill_dispatches": 0, "host_syncs": 0,
-                      "handoff_syncs": 0, "ticks": 0, "resorts": 0}
+                      "handoff_syncs": 0, "ticks": 0, "resorts": 0,
+                      "prefix_hits": 0, "prefix_tokens_reused": 0,
+                      "gather_dispatches": 0, "pages_recorded": 0,
+                      "pages_evicted": 0, "adaptive_shrink_ticks": 0}
+        # paged prefix cache: shared-prefix reuse across all mixer kinds
+        # (cache_pages == 0 disables it — admission is byte-identical to
+        # the cache-less engine, and no pool memory is allocated)
+        self._pc: Optional[PrefixCache] = None
+        if self.cache_pages > 0:
+            self._pc = PrefixCache(cfg, max_len=max_len,
+                                   page_size=self.page_size,
+                                   cache_pages=self.cache_pages,
+                                   a3=self._use_a3, stats=self.stats)
 
     @classmethod
     def from_config(cls, params: Any, cfg: ModelConfig, serve: ServeConfig,
@@ -329,10 +396,13 @@ class ServeEngine:
         return cls(params, cfg, slots=serve.slots, max_len=serve.max_len,
                    a3=a3, resort_every=serve.resort_every,
                    prefill_chunk=serve.prefill_chunk,
+                   prefill_chunk_min=serve.prefill_chunk_min,
                    decode_block=serve.decode_block,
                    use_kernel=serve.use_kernel,
                    temperature=serve.temperature,
-                   sample_seed=serve.sample_seed)
+                   sample_seed=serve.sample_seed,
+                   page_size=serve.page_size,
+                   cache_pages=serve.cache_pages)
 
     # -- public API ---------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
@@ -371,13 +441,25 @@ class ServeEngine:
             if slot.active or not self._queue:
                 continue
             req = self._queue.popleft()
-            # no host-side cache work at admit: the slot's first chunk
+            # warm path: walk the prefix trie and gather every matched
+            # page into the slot's cache with one jitted copy dispatch
+            # (ring rows from pool pages, recurrent carries from the
+            # boundary snapshot, A^3 sorted state + watermark restored)
+            # — the cursor starts past the matched prefix and only the
+            # suffix chunk-prefills. Cold path (miss / cache disabled):
+            # no host-side cache work at admit; the slot's first chunk
             # dispatch resets its mixer state in-graph (pos == 0), so
             # chunked prefill reproduces the whole-prompt cache state.
-            self.slots[si] = SlotState(uid=req.uid, pos=0, generated=[],
+            t, node = 0, None
+            if self._pc is not None:
+                self.cache, t, node = self._pc.admit(self.cache, si,
+                                                     req.prompt)
+                self._pc.ref(node)       # recording anchor pin
+            self.slots[si] = SlotState(uid=req.uid, pos=t, generated=[],
                                        budget=req.max_new_tokens,
                                        phase=PREFILLING,
-                                       prompt=req.prompt, cursor=0)
+                                       prompt=req.prompt, cursor=t,
+                                       sorted_upto=t, rec_node=node)
 
     def _prefill_tick(self):
         """Advance every PREFILLING slot by one prompt chunk in a single
@@ -388,6 +470,13 @@ class ServeEngine:
         if not pre:
             return
         n, c = len(self.slots), self._chunk
+        # adaptive chunking: decoders active -> shrink the admission
+        # stall to the floor; cold queue -> drain at the full chunk
+        if self._chunk_min is not None \
+                and any(s.decoding for s in self.slots):
+            c = self._chunk_min
+            self.stats["adaptive_shrink_ticks"] += 1
+        ps = self.page_size
         tokens = np.zeros((n, c), np.int32)
         pos = np.zeros((n,), np.int32)
         length = np.zeros((n,), np.int32)
@@ -398,6 +487,31 @@ class ServeEngine:
         for si in pre:
             s = self.slots[si]
             take = min(c, len(s.prompt) - s.cursor)
+            if s.rec_node is not None:
+                # Recorded prompts bound EVERY chunk by record_span and
+                # land EVERY boundary-crossing chunk exactly on its last
+                # page boundary (an unaligned tail < page_size follows
+                # in the next dispatch, crossing nothing). Page capture
+                # reads the rings once at chunk end, so together these
+                # guarantee each recorded page's unmasked positions are
+                # still ring-resident at capture — a wider or unaligned
+                # chunk would record rows the chunk itself had already
+                # overwritten in a sliding ring, stale pages a later
+                # dedupe could upgrade into a match terminal. The
+                # post-chunk mixer carry at the END boundary IS the trie
+                # node's snapshot, so no replay dispatch is ever needed.
+                take = min(take, self._pc.record_span)
+                if s.cursor % ps:
+                    # unaligned start (adaptive floor / sub-page
+                    # chunks): realign at the FIRST boundary — crossing
+                    # several boundaries from an unaligned start can
+                    # outrun a sliding ring's capture residency even
+                    # within record_span
+                    take = min(take, ps - s.cursor % ps)
+                else:
+                    aligned = ((s.cursor + take) // ps) * ps
+                    if aligned > s.cursor:
+                        take = aligned - s.cursor
             tokens[si, :take] = s.prompt[s.cursor:s.cursor + take]
             pos[si] = s.cursor
             length[si] = take
@@ -427,6 +541,24 @@ class ServeEngine:
             s.cursor += takes[si]
             s.pos = s.cursor
             self.stats["prefill_tokens"] += takes[si]
+            if s.rec_node is not None and s.cursor > s.rec_node.end:
+                # record every page boundary the chunk crossed: each
+                # copies one page pool-ward (deduped against concurrent
+                # recorders); only the chunk-END boundary carries the
+                # recurrent snapshot (the slot's carry is at end-state
+                # only there). A None return means the page budget is
+                # exhausted with nothing evictable — stop recording,
+                # keep the prefix recorded so far
+                prev = s.cursor - takes[si]
+                for b in range((prev // ps + 1) * ps, s.cursor + 1, ps):
+                    child = self._pc.record_boundary(
+                        self.cache, si, s.prompt, b, s.rec_node,
+                        carry=(b == s.cursor))
+                    self._pc.unref(s.rec_node)
+                    self._pc.ref(child)
+                    s.rec_node = child
+                    if child is None:
+                        break
             if s.cursor >= len(s.prompt):
                 # device-resident handoff: the first token exists only
                 # in ``first_tok`` until the decode harvest resolves it
@@ -435,6 +567,14 @@ class ServeEngine:
                 s.budget -= 1
                 s.sorted_upto = len(s.prompt)  # final chunk folded the sort
                 self._handoff.add(si)
+                if s.rec_node is not None:
+                    # leaf capture of the A^3 sorted columns (the final
+                    # chunk just folded the full-ring sort), then drop
+                    # the recording pin
+                    self._pc.record_final(self.cache, si, s.rec_node,
+                                          len(s.prompt))
+                    self._pc.unref(s.rec_node)
+                    s.rec_node = None
         if self._handoff:
             self._first_tok = first_tok
 

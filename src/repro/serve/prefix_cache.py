@@ -1,0 +1,465 @@
+"""Paged prefix cache: shared-prefix reuse across every mixer kind.
+
+Serving wastes the same work twice: A^3's premise is that attention
+recomputes scores for keys that never matter, and an engine without
+prefix reuse re-*prefills* identical prompt prefixes — shared system
+prompts, few-shot headers, multi-turn histories — for every request.
+This module makes admitted prompts reusable by carving each slot's
+per-segment decode cache into fixed-size **pages** with a host-side
+block table, and indexing admitted token prefixes with a **radix trie**
+whose nodes own immutable page runs plus per-``BlockKind`` mixer-state
+snapshots taken at page boundaries:
+
+::
+
+    root ──[tok 0..ps)──> node(page 0, snap@ps)
+                            ├─[tok ps..2ps)──> node(page 1, snap@2ps)
+                            │                    └─ ...
+                            └─[tok' ps..2ps)─> node(page 7, snap@2ps)
+                                                 (divergent sibling: COW)
+
+* **Pages** live in a device-resident pool (``decoder.init_page_pool``):
+  a *logical* page spans ``page_size`` token positions across every
+  segment at once — attention segments store those positions' K/V ring
+  rows per page; recurrent segments (RG-LRU, mLSTM, sLSTM) store
+  nothing per token, because their decode state is a fixed-size carry.
+* **Snapshots** are the PR-4 chunked-prefill carry itself: the engine
+  clamps a recorded prompt's chunks to end on page boundaries, so after
+  the chunk dispatch the slot's mixer state *is* the boundary state —
+  one ``snapshot_state`` slice per new trie node captures it
+  (recurrent carries; attention's per-token state is already paged).
+  A^3 sorted-key state is a whole-ring property: it is snapshotted once
+  per recorded prompt at the trie leaf and *sliced* to any interior
+  page boundary at restore time
+  (:func:`repro.core.candidate_selection.slice_sorted_keys`).
+* **Warm admission** walks the trie over the prompt's pages, then
+  gathers every matched page into the slot's cache with ONE jitted copy
+  dispatch (``gather``): ring rows come back from pages, recurrent
+  carries from the matched node's snapshot, and the A^3 sorted columns
+  + ``sorted_upto`` watermark are restored at the boundary — so no
+  re-sort is triggered and only the unmatched suffix is chunk-prefilled.
+  A full-prefix hit is capped one page short of the prompt end: at least
+  one suffix token always prefills, which is what produces the
+  next-token logits (and, on the final chunk, re-folds the full-ring
+  A^3 sort exactly as a cold admission would).
+* **Copy-on-write** is structural: pool pages are immutable and
+  refcounted via the trie; a request that diverges mid-page matches
+  only up to the last shared boundary, prefills its divergent suffix
+  into its own slot cache, and records *new* pages for it — the first
+  divergent page becomes a sibling edge, never a mutation.
+* **Eviction** is LRU over childless, unreferenced trie nodes under the
+  ``ServeConfig.cache_pages`` budget (each node = one logical page; a
+  leaf's sorted-key snapshot rides along and is freed with it). Nodes
+  pinned by an in-flight admission or an actively recording slot are
+  never evicted.
+"""
+from __future__ import annotations
+
+import collections
+import functools
+import heapq
+import itertools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import BlockKind, ModelConfig
+from repro.models import decoder
+from repro.models.mixer import FULL_WINDOW, MIXERS, build_segments, \
+    cache_len_for
+
+_STAT_KEYS = ("prefix_hits", "prefix_tokens_reused", "gather_dispatches",
+              "pages_recorded", "pages_evicted")
+
+
+def gather_fn(segs, a3, cache, pool, si, t, idx, snaps, sk_snaps):
+    """THE warm-admission copy graph: matched pages -> slot ring,
+    boundary snapshot -> recurrent carries, sorted-key slice (or
+    comprehension sort of the gathered ring) + watermark ``t`` -> A^3
+    state. Module-level so ``launch.dryrun.lower_gather_pages`` lowers
+    the *same* graph the engine dispatches (partial-bind ``segs``/``a3``
+    and jit with the cache donated)."""
+    new_cache = {}
+    for i, seg in enumerate(segs):
+        name = f"seg{i}"
+        mixer = MIXERS[seg.kind]
+        if seg.kind == BlockKind.ATTENTION:
+            ids = idx[name]
+            new_cache[name] = mixer.gather_pages(
+                cache[name], pool[name], si, t, ids["page"], ids["off"],
+                ids["valid"], a3=a3, sk_snap=sk_snaps.get(name))
+        else:
+            new_cache[name] = mixer.restore_state(cache[name],
+                                                  snaps[name], si)
+    return new_cache
+
+
+class _TrieNode:
+    """One page run: ``tokens`` (the edge label, exactly ``page_size``
+    token ids), the owned logical ``page_id``, and the mixer-state
+    snapshot at ``end`` (the boundary this node's pages reach)."""
+
+    __slots__ = ("parent", "tokens", "end", "children", "page_id",
+                 "snap", "snap_valid", "sk_snap", "sk_pages", "refs",
+                 "last_used")
+
+    def __init__(self, parent: Optional["_TrieNode"],
+                 tokens: Tuple[int, ...], end: int):
+        self.parent = parent
+        self.tokens = tokens
+        self.end = end
+        self.children: Dict[Tuple[int, ...], "_TrieNode"] = {}
+        self.page_id = -1
+        self.snap: Any = {}
+        # whether this node can terminate a match: chunks may span
+        # several pages, and interior pages of a multi-page chunk are
+        # recorded (their K/V rows are real and restorable) without a
+        # boundary state — no recurrent carry (it exists only at the
+        # chunk END), and sliding rings captured post-chunk may already
+        # have dropped rows an interior-boundary restore would need.
+        # Global-attention-only stacks match at any page; everything
+        # else stops at chunk-end (snap_valid) nodes.
+        self.snap_valid = False
+        self.sk_snap: Optional[Dict[str, Any]] = None
+        self.sk_pages: List[int] = []   # budget pages charged for sk_snap
+        self.refs = 0
+        self.last_used = 0
+
+
+class PrefixCache:
+    """Host-side block table + device page pool + radix trie.
+
+    Built by ``ServeEngine`` when ``cache_pages > 0``; usable standalone
+    against any ``decoder.init_cache`` pytree (the unit tests drive it
+    without an engine). ``stats`` may be an externally owned dict (the
+    engine passes its own) — the cache increments ``prefix_hits``,
+    ``prefix_tokens_reused``, ``gather_dispatches``, ``pages_recorded``
+    and ``pages_evicted`` in place.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, max_len: int, page_size: int,
+                 cache_pages: int, a3: bool = False, dtype=None,
+                 stats: Optional[Dict[str, int]] = None):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if cache_pages < 1:
+            raise ValueError(
+                f"cache_pages must be >= 1 for a PrefixCache, got "
+                f"{cache_pages} (use ServeConfig.cache_pages=0 to disable)")
+        self.cfg = cfg
+        self.max_len = int(max_len)
+        self.page_size = int(page_size)
+        self.capacity = int(cache_pages)
+        self.a3 = bool(a3)
+        self.segs = build_segments(cfg)
+        # per-attention-segment ring widths (the pool mirrors only these)
+        self._widths = {
+            f"seg{i}": cache_len_for(seg, max_len)
+            for i, seg in enumerate(self.segs)
+            if seg.kind == BlockKind.ATTENTION
+        }
+        self._sk_widths = {
+            name: w for name, w in self._widths.items()
+            if self.a3 and self.segs[int(name[3:])].window >= FULL_WINDOW
+        }
+        # a leaf sorted-key snapshot holds 2 whole-ring arrays per sk
+        # segment (vals + rows ~ a page's k + v per row), so it is
+        # charged sum(w)/page_size budget pages — the cache_pages budget
+        # bounds TOTAL device memory held by the trie, not just pages
+        self._sk_cost = (-(-sum(self._sk_widths.values())
+                           // self.page_size) if self._sk_widths else 0)
+        self._has_rec = any(s.kind != BlockKind.ATTENTION for s in self.segs)
+        # Page-granularity match terminals are safe only when every
+        # attention ring spans max_len (global windows): a sliding ring
+        # is captured post-chunk, so an interior page's rows in
+        # (t - w, chunk_end - w) would have been overwritten already —
+        # matches on such stacks (and on recurrent stacks, which need
+        # the carry) must stop at chunk-END boundaries (snap_valid).
+        self._page_terminals = (not self._has_rec and all(
+            w >= self.max_len for w in self._widths.values()))
+        self.pool = decoder.init_page_pool(cfg, cache_pages, page_size,
+                                           dtype=dtype, a3=a3)
+        self.root = _TrieNode(None, (), 0)
+        self._free: List[int] = list(range(cache_pages))
+        self._nodes: set = set()
+        self._clock = 0
+        # lazy-deletion LRU heap over (last_used, seq, node): pushed on
+        # every touch and on every becomes-evictable transition (refs
+        # hit 0, last child removed); stale / non-evictable entries are
+        # discarded at pop, so victim selection is O(log n) instead of
+        # a full node scan per allocation
+        self._heap: List[Tuple[int, int, _TrieNode]] = []
+        self._seq = itertools.count()
+        self.stats = stats if stats is not None else {}
+        for k in _STAT_KEYS:
+            self.stats.setdefault(k, 0)
+        self._jit_record = jax.jit(self._record_fn, donate_argnums=(0,))
+        self._jit_gather = jax.jit(
+            functools.partial(gather_fn, self.segs, self.a3),
+            donate_argnums=(0,))
+        self._jit_snapshot = jax.jit(self._snapshot_fn)
+        self._jit_sk_snapshot = jax.jit(self._sk_snapshot_fn)
+
+    # -- jitted copy dispatches ---------------------------------------------
+    def _record_fn(self, pool, cache, si, page_id, rows, valid):
+        """Copy one page of slot ``si``'s ring rows into the pool."""
+        new_pool = {}
+        for i, seg in enumerate(self.segs):
+            name = f"seg{i}"
+            if name not in pool:
+                continue
+            new_pool[name] = MIXERS[seg.kind].write_page(
+                pool[name], cache[name], si, page_id, rows[name],
+                valid[name])
+        return new_pool
+
+    def _snapshot_fn(self, cache, si):
+        """Boundary snapshot = the chunked-prefill carry of lane ``si``
+        for every non-paged (recurrent) segment."""
+        return {f"seg{i}": MIXERS[seg.kind].snapshot_state(
+                    cache[f"seg{i}"], si)
+                for i, seg in enumerate(self.segs)
+                if seg.kind != BlockKind.ATTENTION}
+
+    def _sk_snapshot_fn(self, cache, si):
+        """Leaf snapshot of the A^3 sorted columns (whole-ring state:
+        captured once per recorded prompt, sliced at restore)."""
+        return {name: {"vals": cache[name]["sk_vals"][:, si],
+                       "rows": cache[name]["sk_rows"][:, si]}
+                for name in self._sk_widths}
+
+    # -- trie ----------------------------------------------------------------
+    def _push(self, node: _TrieNode) -> None:
+        if node is self.root:
+            return
+        heapq.heappush(self._heap,
+                       (node.last_used, next(self._seq), node))
+        # Bound the lazy heap: under-budget steady traffic never drains
+        # it via _alloc_page (the free list stays nonempty), so stale
+        # touch entries would otherwise accumulate forever. Compact to
+        # one fresh entry per live node once it outgrows a small
+        # multiple of the node population.
+        if len(self._heap) > 4 * (len(self._nodes) + 16):
+            fresh = {id(n): (lu, seq, n) for lu, seq, n in self._heap
+                     if n.page_id >= 0 and lu == n.last_used}
+            self._heap = sorted(fresh.values())
+
+    def _touch(self, node: _TrieNode) -> None:
+        self._clock += 1
+        node.last_used = self._clock
+        self._push(node)
+
+    def lookup(self, prompt: np.ndarray) -> Tuple[int, _TrieNode]:
+        """Longest *restorable* page-aligned cached prefix of
+        ``prompt``: the deepest matched node that can terminate a match
+        — any page on global-attention-only stacks, else the deepest
+        chunk-end (``snap_valid``) node, which holds the recurrent
+        carry and bounds sliding-ring capture staleness.
+
+        Capped one token short of the prompt end: the admission path
+        must always chunk-prefill >= 1 suffix token (it produces the
+        next-token logits and re-folds the final A^3 sort)."""
+        prompt = np.asarray(prompt)
+        node, t, ps = self.root, 0, self.page_size
+        best_t, best_node = 0, self.root
+        while t + ps < len(prompt):
+            child = node.children.get(
+                tuple(int(x) for x in prompt[t:t + ps]))
+            if child is None:
+                break
+            node = child
+            t += ps
+            self._touch(node)
+            if node.snap_valid or self._page_terminals:
+                best_t, best_node = t, node
+        return best_t, best_node
+
+    def ref(self, node: Optional[_TrieNode]) -> None:
+        if node is not None and node is not self.root:
+            node.refs += 1
+
+    def unref(self, node: Optional[_TrieNode]) -> None:
+        if node is not None and node is not self.root:
+            node.refs -= 1
+            if node.refs == 0:
+                self._push(node)    # may have become evictable
+
+    def _find_sk_donor(self, node: _TrieNode) -> Optional[_TrieNode]:
+        """Any leaf snapshot at-or-below ``node`` covers every boundary
+        <= node.end with identical ring layout (captured only for
+        unwrapped prompts), so a BFS finds a valid donor."""
+        queue = collections.deque([node])
+        while queue:
+            n = queue.popleft()
+            if n.sk_snap is not None:
+                return n
+            queue.extend(n.children.values())
+        return None
+
+    # -- eviction ------------------------------------------------------------
+    def _alloc_page(self) -> Optional[int]:
+        if self._free:
+            return self._free.pop()
+        while self._heap:
+            lu, _, node = heapq.heappop(self._heap)
+            if node.page_id < 0 or node.children or node.refs > 0 \
+                    or lu != node.last_used:
+                continue        # evicted / not a leaf / pinned / stale
+            self._evict(node)
+            return self._free.pop()
+        return None
+
+    def _evict(self, node: _TrieNode) -> None:
+        node.parent.children.pop(node.tokens, None)
+        self._nodes.discard(node)
+        self._free.append(node.page_id)
+        self._free.extend(node.sk_pages)    # sk-snapshot budget charge
+        node.sk_pages = []
+        node.page_id = -1       # marks heap entries for this node stale
+        node.snap = {}
+        node.sk_snap = None
+        if not node.parent.children:
+            self._push(node.parent)     # parent may now be evictable
+        self.stats["pages_evicted"] += 1
+
+    # -- admission -----------------------------------------------------------
+    def admit(self, cache: Dict[str, Any], si: int, prompt: np.ndarray
+              ) -> Tuple[Dict[str, Any], int, _TrieNode]:
+        """Walk the trie, gather every matched page into slot ``si``
+        with one jitted copy dispatch, and return (cache, matched_len,
+        matched_node). The caller should ``ref`` the node as the slot's
+        recording anchor and ``unref`` it at prefill end."""
+        t, node = self.lookup(prompt)
+        if t == 0:
+            return cache, 0, node
+        ps = self.page_size
+        # host-side block table walk: pool page id per page index
+        chain: List[int] = []
+        n = node
+        while n is not self.root:
+            chain.append(n.page_id)
+            n = n.parent
+        pid_of = np.asarray(chain[::-1], np.int32)
+        idx = {}
+        for name, w in self._widths.items():
+            r = np.arange(w)
+            q = (t - 1) - ((t - 1 - r) % w)    # position held by ring row r
+            valid = q >= 0
+            qc = np.where(valid, q, 0)
+            idx[name] = {"page": jnp.asarray(pid_of[qc // ps], jnp.int32),
+                         "off": jnp.asarray(qc % ps, jnp.int32),
+                         "valid": jnp.asarray(valid)}
+        snaps = node.snap if self._has_rec else {}
+        sk_snaps: Dict[str, Any] = {}
+        if self._sk_widths:
+            donor = self._find_sk_donor(node)
+            if donor is not None:
+                sk_snaps = donor.sk_snap
+        cache = self._jit_gather(cache, self.pool,
+                                 jnp.asarray(si, jnp.int32),
+                                 jnp.asarray(t, jnp.int32), idx, snaps,
+                                 sk_snaps)
+        self.stats["prefix_hits"] += 1
+        self.stats["prefix_tokens_reused"] += t
+        self.stats["gather_dispatches"] += 1
+        return cache, t, node
+
+    # -- recording -----------------------------------------------------------
+    def record_boundary(self, cache: Dict[str, Any], si: int,
+                        prompt: np.ndarray, boundary: int,
+                        parent: _TrieNode, carry: bool = True
+                        ) -> Optional[_TrieNode]:
+        """Called by the engine for every page boundary a prefill chunk
+        crossed: dedupe against an existing child, else allocate a page
+        (evicting LRU if the budget is full) and copy the ring rows
+        pool-ward. ``carry`` marks the chunk-END boundary, where the
+        slot's mixer state *is* the boundary state — only there is the
+        recurrent carry snapshotted (interior pages of a multi-page
+        chunk are recorded carry-less; an existing carry-less node is
+        upgraded when a later chunk ends on it). Returns the child node,
+        or None when no page could be allocated (the lane stops
+        recording; its prefix so far stays reusable)."""
+        ps = self.page_size
+        key = tuple(int(x) for x in np.asarray(prompt)[boundary - ps:
+                                                       boundary])
+        child = parent.children.get(key)
+        if child is not None:
+            self._touch(child)
+            if carry and not child.snap_valid:
+                if self._has_rec:
+                    child.snap = self._jit_snapshot(
+                        cache, jnp.asarray(si, jnp.int32))
+                child.snap_valid = True
+            return child
+        page_id = self._alloc_page()
+        if page_id is None:
+            return None
+        if self.pool:
+            rows, valid = {}, {}
+            for name, w in self._widths.items():
+                p = np.arange(boundary - ps, boundary)
+                rows[name] = jnp.asarray(p % w, jnp.int32)
+                valid[name] = jnp.asarray(p >= boundary - w)
+            self.pool = self._jit_record(self.pool, cache,
+                                         jnp.asarray(si, jnp.int32),
+                                         jnp.asarray(page_id, jnp.int32),
+                                         rows, valid)
+        child = _TrieNode(parent, key, boundary)
+        child.page_id = page_id
+        child.snap_valid = carry
+        if carry and self._has_rec:
+            child.snap = self._jit_snapshot(cache,
+                                            jnp.asarray(si, jnp.int32))
+        parent.children[key] = child
+        self._nodes.add(child)
+        self._touch(child)
+        self.stats["pages_recorded"] += 1
+        return child
+
+    def record_final(self, cache: Dict[str, Any], si: int,
+                     node: _TrieNode, prompt_len: int) -> None:
+        """Leaf capture of the A^3 sorted columns after a recorded
+        prompt's final chunk folded the full-ring sort. Skipped when the
+        prompt wrapped any sorted ring (row != position would break the
+        page-boundary slice), a snapshot already exists, or the
+        ``sum(w)/page_size`` budget pages it costs cannot be allocated —
+        the cache_pages budget bounds the trie's total device memory,
+        and a warm admission without a donor snapshot just re-derives
+        the sort in the gather dispatch."""
+        if node is self.root or node.sk_snap is not None \
+                or not self._sk_widths:
+            return
+        if any(prompt_len > w for w in self._sk_widths.values()):
+            return
+        charged: List[int] = []
+        for _ in range(self._sk_cost):
+            pid = self._alloc_page()
+            if pid is None:
+                self._free.extend(charged)
+                return
+            charged.append(pid)
+        node.sk_pages = charged
+        node.sk_snap = self._jit_sk_snapshot(cache,
+                                             jnp.asarray(si, jnp.int32))
+
+    # -- introspection --------------------------------------------------------
+    @property
+    def record_span(self) -> int:
+        """Max tokens a recording chunk may advance per dispatch: page
+        capture reads the slot's rings once at chunk end, so every
+        crossed page's positions must still be ring-resident then —
+        bounded by the narrowest attention ring (sliding windows).
+        Global-attention / recurrent-only stacks are unbounded (their
+        rings span max_len / keep no pages)."""
+        if not self._widths:
+            return 1 << 30
+        return max(self.page_size, min(self._widths.values()))
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.capacity - len(self._free)
+
+    def __len__(self) -> int:
+        return len(self._nodes)

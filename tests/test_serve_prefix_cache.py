@@ -1,0 +1,671 @@
+"""Paged prefix-cache conformance: shared-prefix reuse is a *copy*, not
+a recompute — it must never change what the model emits.
+
+Every test here pins warm-cache engine generations token-for-token
+against the cold path (and both against the sequential single-request
+reference) across the arch kinds the mixer-state interface serves:
+attention (TINY), hybrid RG-LRU + sliding attention (TINY_RG), and pure
+xLSTM (TINY_XL). Coverage:
+
+* full-prefix hits (identical prompt resubmitted; reuse capped one page
+  short of the prompt so >= 1 suffix token always prefills),
+* partial hits with mid-page divergence (match floors to the last
+  shared page boundary; the divergent request records sibling pages —
+  copy-on-write, pool pages are immutable),
+* LRU eviction under a tiny ``cache_pages`` budget,
+* the A^3 path (sorted columns + ``sorted_upto`` watermark restored at
+  the boundary; generations cross re-sort cadences),
+* the stats identity ``prefill_tokens_cold == prefill_tokens_warm +
+  prefix_tokens_reused`` on the same workload,
+* decoder-level: a warm-admitted slot's cache equals a cold chunked
+  prefill of the matched prefix, leaf for leaf,
+* ``slice_sorted_keys`` == a from-keys sort of the truncated ring,
+* adaptive prefill chunking (``prefill_chunk_min``): the effective
+  chunk shrinks while slots decode, outputs stay identical, and the
+  engine's dispatch invariants hold,
+* ``ServeConfig`` construction-time validation.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import check, run_with_devices
+
+from repro.config import A3Config, AttentionKind, BlockKind, ModelConfig, \
+    ServeConfig
+from repro.core.candidate_selection import SortedKeys, select_candidates, \
+    slice_sorted_keys, sort_key_columns
+from repro.models import decoder as dec
+from repro.serve.engine import ServeEngine
+from repro.serve.prefix_cache import PrefixCache
+
+TINY = ModelConfig("tiny", "dense", num_layers=2, d_model=64, num_heads=4,
+                   num_kv_heads=2, d_ff=128, vocab_size=256, head_dim=16,
+                   dtype="float32")
+TINY_RG = ModelConfig("tiny-rg", "hybrid", num_layers=3, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=256, head_dim=16,
+                      attention_kind=AttentionKind.SLIDING, window_size=24,
+                      block_pattern=(BlockKind.RGLRU, BlockKind.RGLRU,
+                                     BlockKind.ATTENTION),
+                      act="gelu", dtype="float32")
+TINY_XL = ModelConfig("tiny-xl", "ssm", num_layers=3, d_model=64,
+                      num_heads=4, num_kv_heads=4, d_ff=0, vocab_size=256,
+                      head_dim=16,
+                      block_pattern=(BlockKind.MLSTM, BlockKind.MLSTM,
+                                     BlockKind.SLSTM),
+                      dtype="float32")
+MAX_LEN = 96
+MAX_NEW = 6
+PAGE = 8
+
+
+@pytest.fixture(scope="module")
+def all_params():
+    return {
+        "tiny": dec.init_params(jax.random.PRNGKey(0), TINY),
+        "tiny-rg": dec.init_params(jax.random.PRNGKey(1), TINY_RG),
+        "tiny-xl": dec.init_params(jax.random.PRNGKey(2), TINY_XL),
+    }
+
+
+def _reference_generate(params, cfg, prompt, max_new=MAX_NEW,
+                        a3=A3Config()):
+    use_a3 = a3.mode.value != "off"
+    lg, cache = dec.prefill(params, cfg, jnp.asarray(prompt, jnp.int32)[None],
+                            max_len=MAX_LEN, a3=use_a3)
+    cur, pos, out = int(jnp.argmax(lg[0])), len(prompt), []
+    out.append(cur)
+    for _ in range(max_new - 1):
+        lg, cache = dec.decode_step(params, cfg, cache,
+                                    jnp.asarray([cur], jnp.int32),
+                                    jnp.int32(pos), a3=a3)
+        cur = int(jnp.argmax(lg[0]))
+        out.append(cur)
+        pos += 1
+    return out
+
+
+def _shared_prefix_prompts(vocab, *, shared_len=24, n=3, seed=7):
+    """n prompts sharing a ``shared_len``-token prefix with distinct
+    suffixes (the multi-turn / system-prompt serving shape)."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, vocab, size=shared_len)
+    return [np.concatenate([shared,
+                            rng.integers(0, vocab, size=4 + 3 * i)])
+            for i in range(n)]
+
+
+def _engine_invariants(eng):
+    t, s = eng.decode_block, eng.stats
+    assert s["decode_steps"] == t * s["decode_dispatches"]
+    assert s["prefill_dispatches"] <= s["ticks"]
+    assert s["host_syncs"] <= s["decode_dispatches"] + s["handoff_syncs"]
+    bound = math.ceil(s["decode_steps"] / t) + s["prefill_dispatches"]
+    assert s["decode_dispatches"] <= bound
+    assert s["host_syncs"] <= bound
+
+
+# ---------------------------------------------------------------------------
+# warm == cold, token for token, across mixer kinds
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg", [TINY, TINY_RG, TINY_XL],
+                         ids=["attention", "rglru", "xlstm"])
+def test_prefix_warm_matches_cold_across_kinds(all_params, cfg):
+    """Requests sharing a prompt prefix: the first admission is cold and
+    records pages; every later admission walks the trie, gathers the
+    matched pages, and prefills only its suffix — with generations
+    token-for-token identical to the sequential reference for every
+    mixer kind (KV ring pages for attention, carry snapshots for
+    RG-LRU / mLSTM / sLSTM)."""
+    params = all_params[cfg.name]
+    prompts = _shared_prefix_prompts(cfg.vocab_size)
+    refs = [_reference_generate(params, cfg, p) for p in prompts]
+    eng = ServeEngine(params, cfg, slots=2, max_len=MAX_LEN,
+                      prefill_chunk=PAGE, page_size=PAGE, cache_pages=32)
+    u0 = eng.submit(prompts[0], max_new_tokens=MAX_NEW)
+    eng.run_to_completion()
+    assert eng.result(u0) == refs[0]
+    assert eng.stats["prefix_hits"] == 0          # cold: nothing to match
+    assert eng.stats["pages_recorded"] > 0
+    uids = [eng.submit(p, max_new_tokens=MAX_NEW) for p in prompts[1:]]
+    eng.run_to_completion()
+    for u, ref in zip(uids, refs[1:]):
+        assert eng.result(u) == ref, cfg.name
+    assert eng.stats["prefix_hits"] == len(prompts) - 1
+    # every warm request matched the full 24-token shared prefix
+    assert eng.stats["prefix_tokens_reused"] == 24 * (len(prompts) - 1)
+    _engine_invariants(eng)
+
+
+def test_prefix_full_hit_reuses_all_but_last_page(all_params):
+    """An identical prompt resubmitted is the maximal hit — matched up
+    to the last page boundary strictly before the prompt end (>= 1
+    suffix token must prefill to produce next-token logits), i.e.
+    >= 0.9x the prompt at these sizes, and the generation is still
+    token-for-token the reference."""
+    params = all_params["tiny"]
+    rng = np.random.default_rng(3)
+    p = rng.integers(0, TINY.vocab_size, size=40)
+    ref = _reference_generate(params, TINY, p)
+    eng = ServeEngine(params, TINY, slots=1, max_len=MAX_LEN,
+                      prefill_chunk=PAGE, page_size=4, cache_pages=32)
+    u0 = eng.submit(p, max_new_tokens=MAX_NEW)
+    eng.run_to_completion()
+    cold_tokens = eng.stats["prefill_tokens"]
+    u1 = eng.submit(p, max_new_tokens=MAX_NEW)
+    eng.run_to_completion()
+    assert eng.result(u0) == ref
+    assert eng.result(u1) == ref
+    assert eng.stats["prefix_tokens_reused"] == 36      # floor((40-1)/4)*4
+    assert eng.stats["prefix_tokens_reused"] >= 0.9 * len(p)
+    assert eng.stats["prefill_tokens"] == cold_tokens + 4
+    _engine_invariants(eng)
+
+
+@pytest.mark.parametrize("cfg", [TINY, TINY_RG, TINY_XL],
+                         ids=["attention", "rglru", "xlstm"])
+def test_prefix_partial_hit_mid_page_divergence_cow(all_params, cfg):
+    """A request diverging mid-page matches only up to the last fully
+    shared page boundary and records its own sibling pages from there —
+    copy-on-write: the donor's pages are never mutated, and BOTH
+    requests keep generating reference tokens afterwards."""
+    params = all_params[cfg.name]
+    rng = np.random.default_rng(9)
+    shared = rng.integers(0, cfg.vocab_size, size=24)
+    p_a = np.concatenate([shared, rng.integers(0, cfg.vocab_size, size=6)])
+    # diverges 4 tokens into page 3 (pages of 8): match floors to 16
+    p_b = np.concatenate([shared[:20],
+                          rng.integers(0, cfg.vocab_size, size=9)])
+    eng = ServeEngine(params, cfg, slots=2, max_len=MAX_LEN,
+                      prefill_chunk=PAGE, page_size=PAGE, cache_pages=32)
+    ua = eng.submit(p_a, max_new_tokens=MAX_NEW)
+    eng.run_to_completion()
+    ub = eng.submit(p_b, max_new_tokens=MAX_NEW)
+    ua2 = eng.submit(p_a, max_new_tokens=MAX_NEW)   # donor pages intact
+    eng.run_to_completion()
+    assert eng.result(ua) == _reference_generate(params, cfg, p_a)
+    assert eng.result(ub) == _reference_generate(params, cfg, p_b)
+    assert eng.result(ua2) == eng.result(ua)
+    # b matched 2 full pages (16 tokens), a2 matched 24 (3 pages)
+    assert eng.stats["prefix_tokens_reused"] == 16 + 24
+    _engine_invariants(eng)
+
+
+@pytest.mark.parametrize("cfg,expect_reuse", [
+    (TINY, 32 + 24),        # page-granularity terminals (global attention)
+    (TINY_RG, 32 + 16),     # chunk-end terminals (carry + sliding ring)
+    (TINY_XL, 32 + 16),     # chunk-end terminals (carry)
+], ids=["attention", "rglru", "xlstm"])
+def test_prefix_multipage_chunk_recording(all_params, cfg, expect_reuse):
+    """prefill_chunk > page_size: a recording chunk spans several pages
+    per dispatch (floor-aligned; bounded by the narrowest sliding ring)
+    and records every crossed page, so cold admission speed is not
+    page-limited. Warm matches terminate at page granularity on
+    global-attention stacks and at chunk-END boundaries where a
+    recurrent carry / sliding-ring capture requires it — outputs stay
+    token-for-token the reference either way."""
+    params = all_params[cfg.name]
+    rng = np.random.default_rng(29)
+    shared = rng.integers(0, cfg.vocab_size, size=32)
+    p1 = np.concatenate([shared, rng.integers(0, cfg.vocab_size, size=5)])
+    p2 = np.concatenate([shared, rng.integers(0, cfg.vocab_size, size=8)])
+    # diverges mid 4th page (token 28): page floor 24, chunk floor 16
+    p3 = np.concatenate([shared[:28],
+                         rng.integers(0, cfg.vocab_size, size=9)])
+    eng = ServeEngine(params, cfg, slots=2, max_len=MAX_LEN,
+                      prefill_chunk=16, page_size=PAGE, cache_pages=32)
+    u1 = eng.submit(p1, max_new_tokens=MAX_NEW)
+    eng.run_to_completion()
+    assert eng.stats["pages_recorded"] == 4      # every crossed page
+    u2 = eng.submit(p2, max_new_tokens=MAX_NEW)
+    u3 = eng.submit(p3, max_new_tokens=MAX_NEW)
+    eng.run_to_completion()
+    for u, p in ((u1, p1), (u2, p2), (u3, p3)):
+        assert eng.result(u) == _reference_generate(params, cfg, p), \
+            cfg.name
+    assert eng.stats["prefix_tokens_reused"] == expect_reuse, cfg.name
+    _engine_invariants(eng)
+
+
+def test_prefix_wide_final_chunk_never_records_stale_ring_rows(
+        all_params):
+    """Regression: prefill_chunk wider than a sliding window (chunk=64
+    vs window=24) must still record valid pages. An unclamped final
+    chunk used to capture pages whose early positions the chunk itself
+    had already overwritten in the ring; a second prompt ending a chunk
+    exactly on such a boundary then upgraded the stale node to a match
+    terminal, and a third request warm-admitted corrupted K/V. Every
+    recording chunk — final included — is now bounded by record_span,
+    so all three generations must equal the reference and the warm hit
+    must be real."""
+    params = all_params["tiny-rg"]
+    rng = np.random.default_rng(31)
+    shared = rng.integers(0, TINY_RG.vocab_size, size=60)
+    p_a = shared                                       # one "chunk" cold
+    p_b = np.concatenate([shared[:32],
+                          rng.integers(0, TINY_RG.vocab_size, size=9)])
+    p_c = np.concatenate([shared[:32],
+                          rng.integers(0, TINY_RG.vocab_size, size=6)])
+    eng = ServeEngine(params, TINY_RG, slots=1, max_len=MAX_LEN,
+                      prefill_chunk=64, page_size=PAGE, cache_pages=32)
+    uids = []
+    for p in (p_a, p_b, p_c):
+        uids.append(eng.submit(p, max_new_tokens=MAX_NEW))
+        eng.run_to_completion()
+    for u, p in zip(uids, (p_a, p_b, p_c)):
+        assert eng.result(u) == _reference_generate(params, TINY_RG, p)
+    assert eng.stats["prefix_hits"] >= 2               # b and c both hit
+    assert eng.stats["prefix_tokens_reused"] > 0
+    _engine_invariants(eng)
+
+
+def test_prefix_page_wider_than_window_unaligned_chunks(all_params):
+    """Regression (page_size > sliding window, chunk unaligned to both):
+    recording chunks must land exactly on crossed page boundaries, or
+    the post-chunk capture reads ring rows the chunk already overwrote
+    (window 24 < page 32: an unaligned 72-token final chunk used to
+    record positions 40-47 of the [32, 64) page from stale rows, and a
+    later prompt ending a chunk at 64 upgraded that node to a match
+    terminal). Warm admissions must equal the cold reference."""
+    params = all_params["tiny-rg"]
+    rng = np.random.default_rng(37)
+    shared = rng.integers(0, TINY_RG.vocab_size, size=72)
+    p_a = shared
+    p_b = np.concatenate([shared[:64],
+                          rng.integers(0, TINY_RG.vocab_size, size=9)])
+    eng = ServeEngine(params, TINY_RG, slots=1, max_len=MAX_LEN,
+                      prefill_chunk=20, page_size=32, cache_pages=32)
+    uids = []
+    for p in (p_a, p_b):
+        uids.append(eng.submit(p, max_new_tokens=MAX_NEW))
+        eng.run_to_completion()
+    for u, p in zip(uids, (p_a, p_b)):
+        assert eng.result(u) == _reference_generate(params, TINY_RG, p)
+    # the sharp check: warm-admit the 64-token prefix into a fresh cache
+    # and diff EVERY leaf against a cold chunked prefill of the same
+    # prefix — stale ring rows (positions 40-47 under the old unaligned
+    # capture) differ by O(1), far outside chunk-split float noise
+    pc = eng._pc
+    probe = np.concatenate([shared[:64],
+                            rng.integers(0, TINY_RG.vocab_size, size=6)])
+    restored, t, _ = pc.admit(dec.init_cache(TINY_RG, 1, MAX_LEN), 0,
+                              probe)
+    assert t == 64
+    ref_cache = dec.init_cache(TINY_RG, 1, MAX_LEN)
+    cur = 0
+    while cur < t:
+        take = min(16, t - cur)
+        toks = np.zeros((1, 16), np.int32)
+        toks[0, :take] = shared[cur:cur + take]
+        _, ref_cache = dec.prefill_chunk(params, TINY_RG, ref_cache,
+                                         jnp.asarray(toks),
+                                         jnp.asarray([cur], jnp.int32),
+                                         jnp.asarray([take], jnp.int32))
+        cur += take
+    flat_g, _ = jax.tree_util.tree_flatten_with_path(restored)
+    flat_r, _ = jax.tree_util.tree_flatten_with_path(ref_cache)
+    for (ka, a), (kb, b) in zip(flat_g, flat_r):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-4, atol=1e-4, err_msg=str(ka))
+    _engine_invariants(eng)
+
+
+def test_prefix_unaligned_cursor_from_adaptive_floor_records_valid_pages(
+        all_params):
+    """Regression (adaptive floor < page_size + window < 2*page_size):
+    a sub-page adaptive chunk leaves the recording cursor unaligned,
+    and a following full chunk crossing TWO boundaries used to record
+    the first page from ring rows the chunk had already overwritten
+    (window 12, page 8: page [0,8) captured at cursor 16 held positions
+    12-15 in rows 0-3). A later prompt ending a chunk at 8 upgraded the
+    stale node to a match terminal. Unaligned starts now realign at the
+    FIRST boundary; the warm-restored cache must equal a cold prefill."""
+    import dataclasses
+    cfg = dataclasses.replace(TINY_RG, name="tiny-rg-w12", window_size=12)
+    params = all_params["tiny-rg"]        # params are window-independent
+    rng = np.random.default_rng(43)
+    shared = rng.integers(0, cfg.vocab_size, size=30)
+    short = rng.integers(0, cfg.vocab_size, size=5)
+    eng = ServeEngine(params, cfg, slots=2, max_len=MAX_LEN,
+                      prefill_chunk=16, prefill_chunk_min=6,
+                      page_size=PAGE, cache_pages=32)
+    # budget 3: the decoder lives exactly long enough to shrink A's
+    # FIRST chunk to the 6-token floor (cursor lands unaligned at 6),
+    # then dies — A's next chunk runs at the full 16 with no decoder,
+    # crossing boundaries 8 and 16 from the unaligned start
+    u0 = eng.submit(short, max_new_tokens=3)
+    eng.step()                            # slot 0 decoding (budget 1)
+    assert eng.slots[0].decoding
+    ua = eng.submit(shared, max_new_tokens=MAX_NEW)   # admits at floor 6
+    eng.run_to_completion()
+    assert eng.stats["adaptive_shrink_ticks"] > 0     # floor engaged
+    # B ends a chunk exactly on boundary 8 -> dedupe upgrade path
+    p_b = np.concatenate([shared[:8],
+                          rng.integers(0, cfg.vocab_size, size=5)])
+    ub = eng.submit(p_b, max_new_tokens=MAX_NEW)
+    eng.run_to_completion()
+    assert eng.result(u0) == _reference_generate(params, cfg, short, 3)
+    assert eng.result(ua) == _reference_generate(params, cfg, shared)
+    assert eng.result(ub) == _reference_generate(params, cfg, p_b)
+    # the sharp check: warm-restore the 8-token prefix and diff every
+    # leaf against a cold chunked prefill of the same prefix
+    pc = eng._pc
+    probe = np.concatenate([shared[:8],
+                            rng.integers(0, cfg.vocab_size, size=4)])
+    restored, t, _ = pc.admit(dec.init_cache(cfg, 2, MAX_LEN), 1, probe)
+    assert t == 8
+    ref_cache = dec.init_cache(cfg, 2, MAX_LEN)
+    toks = np.zeros((2, 8), np.int32)
+    toks[1] = shared[:8]
+    _, ref_cache = dec.prefill_chunk(params, cfg, ref_cache,
+                                     jnp.asarray(toks),
+                                     jnp.asarray([0, 0], jnp.int32),
+                                     jnp.asarray([0, 8], jnp.int32))
+    flat_g, _ = jax.tree_util.tree_flatten_with_path(restored)
+    flat_r, _ = jax.tree_util.tree_flatten_with_path(ref_cache)
+    for (ka, a), (kb, b) in zip(flat_g, flat_r):
+        np.testing.assert_allclose(np.asarray(a, np.float32)[:, 1],
+                                   np.asarray(b, np.float32)[:, 1],
+                                   rtol=1e-4, atol=1e-4, err_msg=str(ka))
+
+
+def test_prefix_eviction_under_tiny_budget(all_params):
+    """With a 2-page budget the trie evicts LRU leaves constantly —
+    correctness must be unaffected (eviction only forgets reuse
+    opportunities, never corrupts admitted state)."""
+    params = all_params["tiny-rg"]
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, TINY_RG.vocab_size, size=30)
+               for _ in range(4)]
+    eng = ServeEngine(params, TINY_RG, slots=1, max_len=MAX_LEN,
+                      prefill_chunk=PAGE, page_size=PAGE, cache_pages=2)
+    uids = [eng.submit(p, max_new_tokens=4) for p in prompts]
+    eng.run_to_completion()
+    for u, p in zip(uids, prompts):
+        assert eng.result(u) == _reference_generate(params, TINY_RG, p, 4)
+    assert eng.stats["pages_evicted"] > 0
+    assert eng._pc.pages_in_use <= 2
+    _engine_invariants(eng)
+
+
+def test_prefix_lru_heap_stays_bounded_under_steady_hits(all_params):
+    """The lazy-deletion LRU heap must not grow without bound when the
+    trie stays under budget (allocation never drains it): every lookup
+    touches the matched chain, and compaction keeps the heap at a small
+    multiple of the live node count."""
+    params = all_params["tiny"]
+    rng = np.random.default_rng(41)
+    p = rng.integers(0, TINY.vocab_size, size=25)
+    eng = ServeEngine(params, TINY, slots=1, max_len=MAX_LEN,
+                      prefill_chunk=PAGE, page_size=PAGE, cache_pages=64)
+    eng.submit(p, max_new_tokens=2)
+    eng.run_to_completion()
+    pc = eng._pc
+    assert len(pc) > 0
+    for _ in range(5000):                     # steady warm traffic
+        pc.lookup(p)
+    assert len(pc._heap) <= 4 * (len(pc._nodes) + 16) + 1
+    # and eviction still works after compaction: drain the budget
+    t, node = pc.lookup(p)
+    assert t > 0 and node.page_id >= 0
+
+
+def test_prefix_a3_warm_matches_cold(all_params):
+    """The A^3 path: warm admission restores the sorted columns and the
+    ``sorted_upto`` watermark at the boundary (no admission re-sort);
+    the suffix's final chunk folds the full-ring sort exactly like a
+    cold admission, and decode crosses re-sort cadences identically —
+    same tokens, same host-mirrored resort count as a cache-less run."""
+    params = all_params["tiny"]
+    a3 = A3Config.conservative()
+    prompts = _shared_prefix_prompts(TINY.vocab_size, seed=11)
+    refs = [_reference_generate(params, TINY, p, a3=a3) for p in prompts]
+
+    cold = ServeEngine(params, TINY, slots=2, max_len=MAX_LEN,
+                       prefill_chunk=PAGE, a3=a3, resort_every=2)
+    warm = ServeEngine(params, TINY, slots=2, max_len=MAX_LEN,
+                       prefill_chunk=PAGE, a3=a3, resort_every=2,
+                       page_size=PAGE, cache_pages=32)
+    for eng in (cold, warm):
+        u0 = eng.submit(prompts[0], max_new_tokens=MAX_NEW)
+        eng.run_to_completion()
+        uids = [eng.submit(p, max_new_tokens=MAX_NEW)
+                for p in prompts[1:]]
+        eng.run_to_completion()
+        for u, ref in zip([u0] + uids, refs):
+            assert eng.result(u) == ref
+        assert eng.stats["resorts"] > 0
+        _engine_invariants(eng)
+    assert warm.stats["resorts"] == cold.stats["resorts"]
+    assert warm.stats["prefix_hits"] == len(prompts) - 1
+
+
+def test_prefix_stats_invariant_cold_equals_warm_plus_reused(all_params):
+    """The accounting identity: on the same workload, the cold engine's
+    prefilled tokens equal the warm engine's prefilled tokens plus the
+    tokens it reused from the trie — reuse removes work, it never
+    changes how much work exists."""
+    params = all_params["tiny"]
+    prompts = _shared_prefix_prompts(TINY.vocab_size, n=4, seed=13)
+    stats = {}
+    for label, pages in (("cold", 0), ("warm", 64)):
+        eng = ServeEngine(params, TINY, slots=2, max_len=MAX_LEN,
+                          prefill_chunk=PAGE, page_size=PAGE,
+                          cache_pages=pages)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=MAX_NEW)
+            eng.run_to_completion()   # serialize so later prompts can hit
+        stats[label] = eng.stats
+    assert stats["cold"]["prefix_tokens_reused"] == 0
+    assert stats["warm"]["prefix_tokens_reused"] > 0
+    assert stats["cold"]["prefill_tokens"] == \
+        stats["warm"]["prefill_tokens"] + \
+        stats["warm"]["prefix_tokens_reused"]
+
+
+# ---------------------------------------------------------------------------
+# decoder-level: the gather restores exactly the cold-prefill cache
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg", [TINY, TINY_RG, TINY_XL],
+                         ids=["attention", "rglru", "xlstm"])
+def test_prefix_gather_restores_cache_like_cold_prefill(all_params, cfg):
+    """Drive PrefixCache standalone: record a prompt from lane 0 with
+    page-aligned chunks, then admit its prefix into lane 1 of a fresh
+    cache — lane 1's every leaf must equal a cold chunked prefill of
+    the same prefix (ring rows, recurrent carries; unwritten rows read
+    zero)."""
+    params = all_params[cfg.name]
+    rng = np.random.default_rng(17)
+    p = rng.integers(0, cfg.vocab_size, size=26)
+    ps, t = PAGE, 16
+    pc = PrefixCache(cfg, max_len=MAX_LEN, page_size=ps, cache_pages=8)
+    cache = dec.init_cache(cfg, 2, MAX_LEN)
+    node = pc.root
+    for cur in range(0, len(p), ps):
+        take = min(ps, len(p) - cur)
+        toks = np.zeros((2, ps), np.int32)
+        toks[0, :take] = p[cur:cur + take]
+        _, cache = dec.prefill_chunk(params, cfg, cache,
+                                     jnp.asarray(toks),
+                                     jnp.asarray([cur, 0], jnp.int32),
+                                     jnp.asarray([take, 0], jnp.int32))
+        if (cur + take) % ps == 0:
+            node = pc.record_boundary(cache, 0, p, cur + take, node)
+            assert node is not None
+    # warm-admit the 16-token prefix into lane 1 of a FRESH cache
+    fresh = dec.init_cache(cfg, 2, MAX_LEN)
+    fresh2, got_t, _ = pc.admit(fresh, 1, p[:t + 1])
+    assert got_t == t
+    # cold reference: chunked prefill of p[:16] into lane 1
+    ref_cache = dec.init_cache(cfg, 2, MAX_LEN)
+    for cur in range(0, t, ps):
+        toks = np.zeros((2, ps), np.int32)
+        toks[1] = p[cur:cur + ps]
+        _, ref_cache = dec.prefill_chunk(params, cfg, ref_cache,
+                                         jnp.asarray(toks),
+                                         jnp.asarray([0, cur], jnp.int32),
+                                         jnp.asarray([0, ps], jnp.int32))
+    flat_g, _ = jax.tree_util.tree_flatten_with_path(fresh2)
+    flat_r, _ = jax.tree_util.tree_flatten_with_path(ref_cache)
+    for (ka, a), (kb, b) in zip(flat_g, flat_r):
+        assert str(ka) == str(kb)
+        np.testing.assert_allclose(np.asarray(a, np.float32)[:, 1],
+                                   np.asarray(b, np.float32)[:, 1],
+                                   rtol=1e-6, atol=1e-6, err_msg=str(ka))
+
+
+def test_prefix_slice_sorted_keys_matches_from_keys_sort():
+    """slice_sorted_keys recovers the comprehension sort of a truncated
+    ring from the longer snapshot: values equal a from-keys sort of the
+    zeroed-out matrix exactly, and candidate selection agrees."""
+    rng = np.random.default_rng(21)
+    n, d = 16, 8
+    key = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    sk_full = sort_key_columns(key)
+    for boundary in (1, 5, 12, 16):
+        keep = jnp.arange(n) < boundary
+        sliced = slice_sorted_keys(sk_full, keep)
+        ref = sort_key_columns(jnp.where(keep[:, None], key, 0.0))
+        np.testing.assert_array_equal(np.asarray(sliced.values),
+                                      np.asarray(ref.values))
+        # rows may reorder only among exactly-zero ties
+        nz = np.asarray(ref.values) != 0.0
+        np.testing.assert_array_equal(np.asarray(sliced.rows)[nz],
+                                      np.asarray(ref.rows)[nz])
+        q = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+        m_a, g_a = select_candidates(sliced, q, m_iters=12)
+        m_b, g_b = select_candidates(ref, q, m_iters=12)
+        np.testing.assert_array_equal(np.asarray(m_a), np.asarray(m_b))
+        np.testing.assert_allclose(np.asarray(g_a), np.asarray(g_b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# adaptive prefill chunking
+# ---------------------------------------------------------------------------
+
+def test_prefix_adaptive_chunk_shrinks_under_decode_load(all_params):
+    """prefill_chunk_min: ticks with >= 1 decoding slot use the floor
+    chunk (bounding the admission stall), a cold queue drains at the
+    full chunk — and chunk adaptation, like all chunking, never changes
+    outputs. The per-tick stall stays bounded: while a decoder was
+    active, no prefill dispatch moved more than prefill_chunk_min
+    tokens per lane."""
+    params = all_params["tiny"]
+    rng = np.random.default_rng(23)
+    short = rng.integers(0, TINY.vocab_size, size=6)
+    long_p = rng.integers(0, TINY.vocab_size, size=64)
+    ref_s = _reference_generate(params, TINY, short, 16)
+    ref_l = _reference_generate(params, TINY, long_p)
+    eng = ServeEngine(params, TINY, slots=2, max_len=MAX_LEN,
+                      prefill_chunk=32, prefill_chunk_min=8)
+    us = eng.submit(short, max_new_tokens=16)
+    eng.step()                          # short admits at the FULL chunk
+    assert eng.stats["adaptive_shrink_ticks"] == 0
+    assert eng.slots[0].decoding
+    ul = eng.submit(long_p, max_new_tokens=MAX_NEW)
+    ticks_before = eng.stats["ticks"]
+    eng.run_to_completion()
+    assert eng.result(us) == ref_s
+    assert eng.result(ul) == ref_l
+    # the long prompt admitted against an active decoder: every one of
+    # its prefill ticks shrank to the floor -> 64/8 = 8 shrunk ticks
+    assert eng.stats["adaptive_shrink_ticks"] == 8
+    assert eng.stats["ticks"] - ticks_before >= 8
+    _engine_invariants(eng)
+
+
+def test_prefix_adaptive_chunk_cold_queue_uses_full_chunk(all_params):
+    """No decoding slots -> the full chunk drains the queue: a 64-token
+    prompt admits in ceil(64/32)=2 dispatches, not 8."""
+    params = all_params["tiny"]
+    rng = np.random.default_rng(25)
+    p = rng.integers(0, TINY.vocab_size, size=64)
+    eng = ServeEngine(params, TINY, slots=2, max_len=MAX_LEN,
+                      prefill_chunk=32, prefill_chunk_min=8)
+    u = eng.submit(p, max_new_tokens=8)
+    eng.step()
+    eng.step()
+    assert eng.slots[0].decoding        # prompt fully admitted
+    assert eng.stats["prefill_dispatches"] == 2
+    assert eng.stats["adaptive_shrink_ticks"] == 0
+    eng.run_to_completion()
+    assert eng.result(u) == _reference_generate(params, TINY, p, 8)
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    {"slots": 0},
+    {"max_len": 0},
+    {"prefill_chunk": 0},
+    {"prefill_chunk": -3},
+    {"prefill_chunk_min": 0},
+    {"prefill_chunk": 16, "prefill_chunk_min": 32},
+    {"decode_block": 0},
+    {"page_size": 0},
+    {"cache_pages": -1},
+    {"temperature": -0.5},
+])
+def test_prefix_serveconfig_rejects_nonsense(kw):
+    """ServeConfig validates at construction with a clear error instead
+    of admitting values that explode (or silently mis-serve) three
+    layers deep in the engine."""
+    with pytest.raises(ValueError):
+        ServeConfig(**kw)
+
+
+def test_prefix_engine_rejects_bad_cache_knobs(all_params):
+    params = all_params["tiny"]
+    with pytest.raises(ValueError):
+        ServeEngine(params, TINY, slots=1, max_len=32, page_size=0,
+                    cache_pages=4)
+    with pytest.raises(ValueError):
+        ServeEngine(params, TINY, slots=1, max_len=32, cache_pages=-1)
+    with pytest.raises(ValueError):
+        ServeEngine(params, TINY, slots=1, max_len=32, prefill_chunk=8,
+                    prefill_chunk_min=16)
+    eng = ServeEngine(params, TINY, slots=1, max_len=32, prefill_chunk=8)
+    with pytest.raises(ValueError):
+        eng.submit(np.asarray([], np.int32))    # empty prompt
+
+
+# ---------------------------------------------------------------------------
+# sharded lowering (exercised on the multi-device CI matrix entry)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_sharded_prefix_gather_lowering():
+    """The warm-admission gather copy lowers under GSPMD on the CI mesh
+    for attention, hybrid-recurrent, and pure-recurrent archs, with the
+    slot cache donated (in-place restore) and the page pool sharded by
+    the same rules as the rings."""
+    out = check(run_with_devices("""
+from repro.config import A3Config, ShapeConfig, ShapeKind, \\
+    ShardingConfig, get_arch, smoke_variant
+from repro.launch.mesh import make_mesh
+from repro.launch.dryrun import lower_gather_pages
+pshape = ShapeConfig("prefill_smoke", ShapeKind.PREFILL, 256, 8)
+mesh = make_mesh((2, 4), ("data", "model"))
+scfg = ShardingConfig(remat="none")
+with mesh:
+    for arch in ("phi4-mini-3.8b", "recurrentgemma-2b", "xlstm-350m"):
+        cfg = smoke_variant(get_arch(arch))
+        c = lower_gather_pages(cfg, pshape, mesh, scfg, page_size=64,
+                               pages=128,
+                               a3=A3Config.conservative()).compile()
+        assert c.memory_analysis().alias_size_in_bytes > 0, arch
+print("OK")
+""", devices=8, timeout=900))
+    assert "OK" in out
