@@ -340,6 +340,19 @@ class ServeConfig:
     # decorrelated across requests.
     temperature: float = 0.0
     sample_seed: int = 0
+    # Bounded admission: maximum QUEUED requests (0 = unbounded, the
+    # historical behavior). When the bound is hit, ``shed_policy``
+    # picks the load-shedding victim: "reject-new" sheds the arriving
+    # request, "evict-oldest-queued" sheds the queue head (freshest-
+    # first service under overload). Shed requests terminate REJECTED
+    # — ``submit`` still returns a uid, it does not raise.
+    max_queue: int = 0
+    shed_policy: str = "reject-new"
+    # Default per-request deadline: a request not FINISHED within this
+    # many engine ticks of submission terminates EXPIRED (enforced at
+    # tick boundaries; ``submit(deadline_ticks=...)`` overrides per
+    # request). None = no deadline.
+    deadline_ticks: Optional[int] = None
 
     def __post_init__(self):
         # fail at construction, not three layers deep in the engine: a
@@ -377,6 +390,18 @@ class ServeConfig:
         if self.temperature < 0.0:
             raise ValueError(
                 f"temperature must be >= 0, got {self.temperature}")
+        if self.max_queue < 0:
+            raise ValueError(
+                f"max_queue must be >= 0, got {self.max_queue} "
+                f"(0 = unbounded queue)")
+        if self.shed_policy not in ("reject-new", "evict-oldest-queued"):
+            raise ValueError(
+                f"shed_policy must be 'reject-new' or "
+                f"'evict-oldest-queued', got {self.shed_policy!r}")
+        if self.deadline_ticks is not None and self.deadline_ticks < 1:
+            raise ValueError(
+                f"deadline_ticks must be >= 1, got "
+                f"{self.deadline_ticks} (use None for no deadline)")
 
 
 @dataclass(frozen=True)

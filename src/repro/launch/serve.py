@@ -7,6 +7,7 @@ through the slot engine, optionally with A^3 approximation.
 from __future__ import annotations
 
 import argparse
+import collections
 import time
 
 import jax
@@ -14,6 +15,7 @@ import numpy as np
 
 from repro.config import A3Config, ServeConfig, get_arch, smoke_variant
 from repro.models import decoder
+from repro.serve.chaos import ChaosConfig, ChaosInjector
 from repro.serve.engine import ServeEngine
 
 
@@ -54,6 +56,28 @@ def main() -> None:
                          "single-pass Pallas kernel (TPU)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="in-graph sampling temperature; 0 = greedy argmax")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bounded admission: maximum queued requests "
+                         "(overload beyond it is load-shed per "
+                         "--shed-policy); 0 = unbounded")
+    ap.add_argument("--shed-policy", default="reject-new",
+                    choices=["reject-new", "evict-oldest-queued"],
+                    help="which request a full queue sheds (shed "
+                         "requests terminate REJECTED, submit never "
+                         "raises for overload)")
+    ap.add_argument("--deadline-ticks", type=int, default=0,
+                    help="per-request deadline in engine ticks "
+                         "(requests not finished in time terminate "
+                         "EXPIRED); 0 = no deadline")
+    ap.add_argument("--chaos-rate", type=float, default=0.0,
+                    help="chaos injection: per-site per-tick fault "
+                         "probability (corrupt a decoding lane, fail a "
+                         "page gather, abort a tick mid-phase); 0 = "
+                         "injection off")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for the deterministic chaos schedule "
+                         "(a run is exactly reproducible from "
+                         "(seed, rate))")
     ap.add_argument("--a3", default="off",
                     choices=["off", "conservative", "aggressive"])
     ap.add_argument("--seed", type=int, default=0)
@@ -72,10 +96,19 @@ def main() -> None:
                         temperature=args.temperature,
                         sample_seed=args.seed,
                         page_size=args.page_size,
-                        cache_pages=args.cache_pages)
+                        cache_pages=args.cache_pages,
+                        max_queue=args.max_queue,
+                        shed_policy=args.shed_policy,
+                        deadline_ticks=args.deadline_ticks or None)
+
+    chaos = None
+    if args.chaos_rate > 0.0:
+        chaos = ChaosInjector(ChaosConfig(seed=args.chaos_seed,
+                                          rate=args.chaos_rate))
 
     params = decoder.init_params(jax.random.PRNGKey(args.seed), cfg)
-    engine = ServeEngine.from_config(params, cfg, serve, a3=a3)
+    engine = ServeEngine.from_config(params, cfg, serve, a3=a3,
+                                     chaos=chaos)
 
     rng = np.random.default_rng(args.seed)
     uids = [engine.submit(
@@ -87,9 +120,13 @@ def main() -> None:
     dt = time.time() - t0
     done = sum(1 for u in uids if engine.result(u) is not None)
     total_new = sum(len(engine.result(u) or []) for u in uids)
+    by_status = collections.Counter(engine.status(u) for u in uids)
     print(f"arch={cfg.name} a3={args.a3} requests={done}/{len(uids)} "
           f"new_tokens={total_new} ({total_new / dt:.1f} tok/s, "
-          f"{dt:.1f}s) stats={engine.stats}")
+          f"{dt:.1f}s) statuses={dict(by_status)} stats={engine.stats}")
+    if chaos is not None:
+        print(f"chaos: seed={args.chaos_seed} rate={args.chaos_rate} "
+              f"events={chaos.events} victims={sorted(chaos.injected_uids)}")
 
 
 if __name__ == "__main__":

@@ -465,6 +465,15 @@ def resort_sorted_keys(cache: Dict[str, Any], pos: jax.Array,
     return new_cache
 
 
+# Poison-quarantine sentinel for the decode token ring: emitted (once)
+# by a lane whose logits went non-finite (NaN/Inf), then the lane
+# freezes exactly like an exhausted ride-along. Distinct from -1
+# (inactive lane) so the per-block harvest can tell "no token" from
+# "poisoned lane" without any extra device read — the flag rides the
+# ring the host already syncs once per block.
+POISON = -2
+
+
 def sample_logits(logits: jax.Array, *, temperature: float = 0.0,
                   rng: Optional[jax.Array] = None,
                   pos: Optional[jax.Array] = None,
@@ -528,8 +537,12 @@ def decode_block(
     pad-lane masking), their ring entries read -1, and their carried
     token/pos freeze — so lanes that exhaust budget or hit ``max_len``
     mid-block leave ALL cache state untouched, for every segment kind.
-    With ``steps=1`` this is exactly one :func:`decode_step` plus
-    in-graph sampling.
+    A lane whose logits go non-finite (NaN/Inf — e.g. a corrupted mixer
+    state) emits the :data:`POISON` sentinel once and freezes the same
+    way; the host reads the sentinel off the ring it already harvests,
+    so poison detection costs no extra sync and healthy lanes stay
+    bit-identical. With ``steps=1`` this is exactly one
+    :func:`decode_step` plus in-graph sampling.
     """
     b = token.shape[0]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
@@ -546,10 +559,20 @@ def decode_block(
                                     a3=a3, use_kernel=use_kernel)
         nxt = sample_logits(logits, temperature=temperature, rng=rng,
                             pos=eff_pos, ids=sample_ids)
-        emit = jnp.where(active, nxt, -1)
-        token = jnp.where(active, nxt, token)
-        pos = jnp.where(active, pos + 1, pos)
-        remaining = jnp.where(active, remaining - 1, remaining)
+        # poison quarantine: a lane whose logits went non-finite — or
+        # whose handoff token already carried the POISON mark — emits
+        # POISON once and freezes like an exhausted ride-along. Healthy
+        # lanes take the identical select, so their tokens and cache
+        # state are bit-for-bit unchanged by this check.
+        ok = jnp.all(jnp.isfinite(logits), axis=-1) & (token != POISON)
+        advance = active & ok
+        poisoned = active & ~ok
+        emit = jnp.where(advance, nxt,
+                         jnp.where(poisoned, POISON, -1))
+        token = jnp.where(advance, nxt, token)
+        pos = jnp.where(advance, pos + 1, pos)
+        remaining = jnp.where(poisoned, 0,
+                              jnp.where(advance, remaining - 1, remaining))
         return (token, pos, remaining, cache), emit
 
     (_, _, _, cache), ring = jax.lax.scan(

@@ -1,6 +1,7 @@
+from repro.serve.chaos import ChaosConfig, ChaosError, ChaosInjector
 from repro.serve.engine import ServeEngine, make_decode_block_step, \
     make_serve_step
 from repro.serve.prefix_cache import PrefixCache
 
-__all__ = ["PrefixCache", "ServeEngine", "make_decode_block_step",
-           "make_serve_step"]
+__all__ = ["ChaosConfig", "ChaosError", "ChaosInjector", "PrefixCache",
+           "ServeEngine", "make_decode_block_step", "make_serve_step"]

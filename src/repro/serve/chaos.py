@@ -1,0 +1,166 @@
+"""Deterministic chaos injection for the serving engine.
+
+Fault tolerance is only as real as the faults it has been shown to
+survive. This module is the serving-plane counterpart of
+``train/fault.py``: a *seeded* injector the engine consults at fixed
+tick phases, so a chaos run is exactly reproducible from
+``(seed, rate)`` — the conformance tests replay the same fault schedule
+against the same workload and assert fault *isolation* (un-injected
+requests are token-for-token identical to a chaos-free run) the same
+way PRs 2-5 asserted correctness.
+
+Injection sites (each independently decided per tick from a counter-
+based RNG keyed on ``(seed, tick, site)`` — no shared stream, so adding
+or removing a site never reshuffles the others):
+
+* ``corrupt`` — pick one DECODING lane and overwrite its per-segment
+  mixer state with NaN (:func:`corrupt_cache_lane`). The lane's next
+  logits go non-finite, the decode dispatch emits the ``POISON``
+  sentinel in the token ring (``decoder.POISON``), and the engine
+  quarantines the request as FAILED off the *existing* per-block
+  harvest — detection costs no extra host sync.
+* ``gather`` — fail a warm admission's prefix-cache page gather
+  (:class:`ChaosError` raised before the copy dispatch, so the device
+  cache is untouched and no trie refs leak).
+* ``raise`` / ``delay`` — abort or stall a tick at a phase boundary
+  (``tick_start`` / ``pre_prefill`` / ``pre_advance``), exercising the
+  engine's mid-tick recovery (leftover device-resident handoff tokens
+  must be flushed, not overwritten).
+
+``max_injections`` caps the *fault* sites (corrupt + gather) so a test
+can pin "exactly N requests are victims" deterministically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ChaosConfig", "ChaosError", "ChaosInjector",
+           "corrupt_cache_lane"]
+
+
+class ChaosError(RuntimeError):
+    """A deliberately injected fault (stands in for a device error,
+    preempted host, or corrupted transfer mid-tick)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosConfig:
+    """Injection schedule knobs. ``rate`` is the per-site, per-tick
+    firing probability; every decision is a pure function of
+    ``(seed, tick, site)``."""
+    seed: int = 0
+    rate: float = 0.0
+    # fault sites (terminal for the victim request)
+    corrupt_logits: bool = True
+    fail_gather: bool = True
+    # disruption sites (abort/stall a tick; no request is a victim)
+    raise_mid_tick: bool = True
+    delay_mid_tick: bool = False
+    delay_s: float = 0.0
+    # cap on total corrupt + gather injections (None = unlimited)
+    max_injections: Optional[int] = None
+
+    def __post_init__(self):
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(f"rate must be in [0, 1], got {self.rate}")
+        if self.delay_s < 0.0:
+            raise ValueError(f"delay_s must be >= 0, got {self.delay_s}")
+        if self.max_injections is not None and self.max_injections < 0:
+            raise ValueError(f"max_injections must be >= 0, got "
+                             f"{self.max_injections}")
+
+
+def corrupt_cache_lane(cache: Dict[str, Any], si: int) -> Dict[str, Any]:
+    """NaN every floating-point leaf of lane ``si`` across all segment
+    states (every cache leaf is ``[L, B, ...]`` — batch axis 1).
+    Integer leaves (sk_rows, sorted_upto watermarks) are left intact:
+    the fault model is corrupted *values*, and the poison detector keys
+    on non-finite logits, which integer bookkeeping cannot produce."""
+    def poison(x):
+        if isinstance(x, (jax.Array, np.ndarray)) \
+                and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.at[:, si].set(jnp.nan)
+        return x
+    return jax.tree_util.tree_map(poison, cache)
+
+
+class ChaosInjector:
+    """Engine-facing injector. The engine calls :meth:`phase` at tick
+    phase boundaries, :meth:`pick_corrupt_victim` before each decode
+    dispatch, and passes :meth:`gather_fail` as the prefix-cache
+    admission hook. ``events`` records every injection as
+    ``(kind, tick, detail)``; :attr:`injected_uids` is the set of
+    request uids a fault site made victims (the conformance tests'
+    ground truth for who must terminate FAILED)."""
+
+    def __init__(self, config: ChaosConfig = ChaosConfig()):
+        self.config = config
+        self.events: List[Tuple[str, int, Any]] = []
+        self._faults = 0
+
+    # -- determinism core ----------------------------------------------------
+    def _rng(self, tick: int, site: str) -> np.random.Generator:
+        # counter-based: an independent generator per (seed, tick, site)
+        key = [int(self.config.seed), int(tick)] + [ord(c) for c in site]
+        return np.random.default_rng(key)
+
+    def _fault_budget_left(self) -> bool:
+        mi = self.config.max_injections
+        return mi is None or self._faults < mi
+
+    @property
+    def injected_uids(self) -> set:
+        """Uids made victims by a fault site (corrupt / gather_fail)."""
+        return {d for k, _, d in self.events
+                if k in ("corrupt", "gather_fail")}
+
+    # -- engine hooks --------------------------------------------------------
+    def phase(self, tick: int, name: str) -> None:
+        """Called at a tick phase boundary; may sleep (``delay``) or
+        abort the tick (``raise`` — the engine counts the aborted tick
+        and recovers on the next one)."""
+        c = self.config
+        if c.delay_mid_tick \
+                and self._rng(tick, "delay:" + name).random() < c.rate:
+            self.events.append(("delay", tick, name))
+            if c.delay_s > 0.0:
+                time.sleep(c.delay_s)
+        if c.raise_mid_tick \
+                and self._rng(tick, "raise:" + name).random() < c.rate:
+            self.events.append(("raise", tick, name))
+            raise ChaosError(f"injected tick abort at {name} "
+                             f"(tick {tick})")
+
+    def pick_corrupt_victim(self, tick: int,
+                            uids: Sequence[int]) -> Optional[int]:
+        """Maybe pick one decoding request whose lane state the engine
+        should corrupt this tick. Returns the victim uid or None."""
+        if not self.config.corrupt_logits or not uids \
+                or not self._fault_budget_left():
+            return None
+        rng = self._rng(tick, "corrupt")
+        if rng.random() >= self.config.rate:
+            return None
+        uid = int(sorted(uids)[int(rng.integers(len(uids)))])
+        self._faults += 1
+        self.events.append(("corrupt", tick, uid))
+        return uid
+
+    def gather_fail(self, tick: int, uid: int, matched: int) -> None:
+        """Prefix-cache admission hook: called for warm admissions
+        (``matched`` > 0 reused tokens) *before* the gather dispatch.
+        Raises :class:`ChaosError` to fail the gather."""
+        if not self.config.fail_gather or not self._fault_budget_left():
+            return
+        if self._rng(tick, f"gather:{uid}").random() < self.config.rate:
+            self._faults += 1
+            self.events.append(("gather_fail", tick, uid))
+            raise ChaosError(f"injected page-gather failure for uid "
+                             f"{uid} ({matched} matched tokens, tick "
+                             f"{tick})")

@@ -112,6 +112,53 @@ in-graph re-sort folds them in.
 ``make_prefill_chunk_step`` build the jitted dispatches used by both
 the engine and the multi-pod dry-run (they are what the ``decode_*`` /
 chunked-prefill shapes lower).
+
+Request lifecycle
+-----------------
+
+Every submitted request moves through the state machine below; the
+terminal states are exactly {FINISHED, REJECTED, CANCELLED, EXPIRED,
+FAILED} and a request reaches exactly one of them::
+
+    submit() ──────────────> REJECTED   (queue full w/ reject-new,
+       │                                 or engine draining)
+       v
+    QUEUED ────────────────> REJECTED   (shed by evict-oldest-queued)
+       │        ├──────────> CANCELLED  (cancel(uid) / drain())
+       │        └──────────> EXPIRED    (deadline_ticks elapsed)
+       v  admit (slot free; prefix-cache gather may chaos-FAIL)
+    PREFILLING ────────────> CANCELLED | EXPIRED | FAILED
+       v  prompt exhausted (first token sampled in-graph)
+    DECODING ──────────────> CANCELLED | EXPIRED
+       │        └──────────> FAILED     (non-finite logits: the lane
+       │                                 emits the POISON sentinel on
+       v                                 the harvested ring)
+    FINISHED    (budget exhausted or max_len reached)
+
+Releasing a slot from ANY in-flight state reclaims it the same tick
+(cancel/expire/poison never strand a lane) and drops the request's
+prefix-cache recording pin, so trie refcounts return to baseline — no
+leaked pages. The stats counters obey the conservation identity
+checked by the lifecycle tests::
+
+    submitted == finished + rejected + cancelled + expired + failed
+                 + in_flight            (in_flight = queued + on-slot)
+
+Overload policy: ``max_queue == 0`` keeps the historical unbounded
+deque; ``max_queue > 0`` bounds it, and ``shed_policy`` picks the
+victim — ``reject-new`` sheds the arriving request, ``evict-oldest-
+queued`` sheds the head of the queue (freshest-first service under
+overload). ``drain()`` enters graceful shutdown: queued work is
+cancelled, in-flight work finishes, new submits are rejected.
+
+Chaos injection: constructed with a ``serve.chaos.ChaosInjector`` the
+engine consults the injector at tick phase boundaries (delay / abort),
+before decode dispatches (corrupt one decoding lane's mixer state so
+its logits go non-finite), and inside warm prefix-cache admissions
+(fail the page gather). Faults are quarantined per request; the chaos
+conformance tests assert every un-injected request's token stream is
+bit-identical to a chaos-free run and that ``host_syncs`` does not
+grow (poison detection rides the existing per-block ring harvest).
 """
 from __future__ import annotations
 
@@ -126,6 +173,7 @@ import numpy as np
 
 from repro.config import A3Config, A3Mode, ModelConfig, ServeConfig
 from repro.models import decoder
+from repro.serve.chaos import ChaosError, ChaosInjector, corrupt_cache_lane
 from repro.serve.prefix_cache import PrefixCache
 
 
@@ -198,6 +246,14 @@ def make_prefill_chunk_step(cfg: ModelConfig, *, a3: bool = False,
     The ``rng`` argument exists only when ``temperature > 0`` (greedy
     dispatches keep the production signature)."""
 
+    def _mark_poison(tok, logits):
+        # poison quarantine rides the handoff: a finishing lane whose
+        # prompt logits are non-finite hands POISON to the decode block
+        # (or the direct read) instead of a garbage token — healthy
+        # lanes take the identical select, bit-for-bit
+        finite = jnp.all(jnp.isfinite(logits), axis=-1)
+        return jnp.where(finite, tok, decoder.POISON)
+
     if temperature > 0.0:
         def step(params, cache, tokens, pos, length, sort_lanes,
                  sample_pos, sample_ids, rng):
@@ -207,14 +263,15 @@ def make_prefill_chunk_step(cfg: ModelConfig, *, a3: bool = False,
             tok = decoder.sample_logits(logits, temperature=temperature,
                                         rng=rng, pos=sample_pos,
                                         ids=sample_ids)
-            return tok, cache
+            return _mark_poison(tok, logits), cache
     else:
         def step(params, cache, tokens, pos, length, sort_lanes,
                  sample_pos, sample_ids):
             logits, cache = decoder.prefill_chunk(
                 params, cfg, cache, tokens, pos, length, a3=a3,
                 sort_lanes=sort_lanes, update_sort=update_sort)
-            return decoder.sample_logits(logits), cache
+            return _mark_poison(decoder.sample_logits(logits),
+                                logits), cache
 
     return step
 
@@ -223,12 +280,27 @@ class Request(NamedTuple):
     uid: int
     prompt: np.ndarray            # [S] int32
     max_new_tokens: int
+    deadline: Optional[int] = None   # absolute tick, None = no deadline
 
 
-# slot phases
+# slot phases (doubling as the in-flight request statuses)
 IDLE = "idle"
 PREFILLING = "prefilling"
 DECODING = "decoding"
+
+# request lifecycle statuses (see the module docstring's state diagram)
+QUEUED = "queued"
+FINISHED = "finished"
+REJECTED = "rejected"
+CANCELLED = "cancelled"
+EXPIRED = "expired"
+FAILED = "failed"
+
+# terminal status -> stats counter (the conservation identity's terms)
+_TERMINAL = {FINISHED: "finished", REJECTED: "rejected",
+             CANCELLED: "cancelled", EXPIRED: "expired", FAILED: "failed"}
+
+SHED_POLICIES = ("reject-new", "evict-oldest-queued")
 
 # admission chunk when ServeConfig.prefill_chunk is None: bounds the
 # chunk dispatch's per-layer score/scan working set independent of
@@ -252,6 +324,9 @@ class SlotState:
     # cursor last crossed (ref-pinned against eviction while the slot
     # prefills); None = not recording (cache disabled / budget exhausted)
     rec_node: Any = None
+    # absolute tick by which the request must finish (None = never):
+    # enforced at tick boundaries by the engine's expiry sweep
+    deadline: Optional[int] = None
 
     @property
     def active(self) -> bool:
@@ -275,7 +350,10 @@ class ServeEngine:
                  prefill_chunk_min: Optional[int] = None,
                  decode_block: int = 1, use_kernel: bool = False,
                  temperature: float = 0.0, sample_seed: int = 0,
-                 page_size: int = 64, cache_pages: int = 0):
+                 page_size: int = 64, cache_pages: int = 0,
+                 max_queue: int = 0, shed_policy: str = "reject-new",
+                 deadline_ticks: Optional[int] = None,
+                 chaos: Optional[ChaosInjector] = None):
         if cfg.frontend:
             # the engine admits token prompts; frontend archs (audio /
             # vision) need precomputed embeddings the submit() API cannot
@@ -329,6 +407,24 @@ class ServeEngine:
                              f"cache)")
         self.page_size = int(page_size)
         self.cache_pages = int(cache_pages)
+        # bounded admission + load shedding (max_queue == 0 keeps the
+        # historical unbounded deque)
+        if int(max_queue) < 0:
+            raise ValueError(f"max_queue must be >= 0, got {max_queue} "
+                             f"(0 = unbounded queue)")
+        if shed_policy not in SHED_POLICIES:
+            raise ValueError(f"shed_policy must be one of "
+                             f"{SHED_POLICIES}, got {shed_policy!r}")
+        if deadline_ticks is not None and int(deadline_ticks) < 1:
+            raise ValueError(f"deadline_ticks must be >= 1, got "
+                             f"{deadline_ticks} (use None for no "
+                             f"deadline)")
+        self.max_queue = int(max_queue)
+        self.shed_policy = shed_policy
+        self.deadline_ticks = (int(deadline_ticks)
+                               if deadline_ticks is not None else None)
+        self._chaos = chaos
+        self._draining = False
         self.decode_block = max(1, int(decode_block))
         self.use_kernel = use_kernel
         # temperature > 0 is THE sampling switch: 0 pins greedy argmax
@@ -371,6 +467,9 @@ class ServeEngine:
         self._first_tok = None
         self._queue: Deque[Request] = collections.deque()
         self._done: Dict[int, List[int]] = {}
+        # request lifecycle: uid -> status (QUEUED / PREFILLING /
+        # DECODING / one of the _TERMINAL states)
+        self._status: Dict[int, str] = {}
         self._uid = 0
         self.stats = {"prefill_tokens": 0, "decode_steps": 0,
                       "decode_steps_advanced": 0,
@@ -379,7 +478,14 @@ class ServeEngine:
                       "handoff_syncs": 0, "ticks": 0, "resorts": 0,
                       "prefix_hits": 0, "prefix_tokens_reused": 0,
                       "gather_dispatches": 0, "pages_recorded": 0,
-                      "pages_evicted": 0, "adaptive_shrink_ticks": 0}
+                      "pages_evicted": 0, "adaptive_shrink_ticks": 0,
+                      # lifecycle counters: conservation identity
+                      # submitted == finished + rejected + cancelled
+                      #              + expired + failed + in_flight
+                      "submitted": 0, "finished": 0, "rejected": 0,
+                      "cancelled": 0, "expired": 0, "failed": 0,
+                      # robustness bookkeeping
+                      "chaos_aborted_ticks": 0, "max_ticks_exhausted": 0}
         # paged prefix cache: shared-prefix reuse across all mixer kinds
         # (cache_pages == 0 disables it — admission is byte-identical to
         # the cache-less engine, and no pool memory is allocated)
@@ -392,7 +498,8 @@ class ServeEngine:
 
     @classmethod
     def from_config(cls, params: Any, cfg: ModelConfig, serve: ServeConfig,
-                    a3: A3Config = A3Config()) -> "ServeEngine":
+                    a3: A3Config = A3Config(),
+                    chaos: Optional[ChaosInjector] = None) -> "ServeEngine":
         return cls(params, cfg, slots=serve.slots, max_len=serve.max_len,
                    a3=a3, resort_every=serve.resort_every,
                    prefill_chunk=serve.prefill_chunk,
@@ -402,64 +509,280 @@ class ServeEngine:
                    temperature=serve.temperature,
                    sample_seed=serve.sample_seed,
                    page_size=serve.page_size,
-                   cache_pages=serve.cache_pages)
+                   cache_pages=serve.cache_pages,
+                   max_queue=serve.max_queue,
+                   shed_policy=serve.shed_policy,
+                   deadline_ticks=serve.deadline_ticks,
+                   chaos=chaos)
 
     # -- public API ---------------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
-        prompt = np.asarray(prompt, np.int32)
-        if prompt.size == 0:
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
+               deadline_ticks: Optional[int] = None) -> int:
+        """Submit a prompt; returns the request uid.
+
+        Invalid *inputs* raise (TypeError / ValueError) without
+        consuming a uid; overload *shedding* does not raise — the uid
+        comes back with ``status(uid) == "rejected"`` so callers can
+        distinguish "you sent garbage" from "the server is full".
+
+        Validation: the prompt must be a non-empty 1-D integer array
+        with token ids in ``[0, vocab_size)`` and length <= ``max_len``
+        (a prompt of length *exactly* ``max_len`` is admitted and
+        finishes with just its prefill-sampled token — there is no
+        room to decode past it; longer prompts are an error, not a
+        silent truncation). ``max_new_tokens`` must be >= 1.
+        ``deadline_ticks`` (default: the engine-wide setting) expires
+        the request if it has not FINISHED within that many ticks of
+        submission."""
+        arr = np.asarray(prompt)
+        if arr.ndim != 1:
+            raise ValueError(f"prompt must be 1-D, got shape {arr.shape}")
+        if arr.size == 0:
             # neither admission path supports empty prompts (chunked
             # would fold a reused slot's stale ring into the A^3 sort;
             # whole-prompt prefill has no last position to unembed)
             raise ValueError("empty prompt")
+        if not np.issubdtype(arr.dtype, np.integer):
+            raise TypeError(f"prompt must be an integer token array, "
+                            f"got dtype {arr.dtype}")
+        if arr.size > self.max_len:
+            raise ValueError(
+                f"prompt length {arr.size} exceeds max_len "
+                f"{self.max_len}: the slot cache cannot hold it "
+                f"(submit a shorter prompt or raise max_len)")
+        if (arr < 0).any() or (arr >= self.cfg.vocab_size).any():
+            raise ValueError(
+                f"prompt token ids must lie in [0, "
+                f"{self.cfg.vocab_size}); got range "
+                f"[{int(arr.min())}, {int(arr.max())}]")
+        max_new_tokens = int(max_new_tokens)
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got "
+                             f"{max_new_tokens}")
+        if deadline_ticks is None:
+            deadline_ticks = self.deadline_ticks
+        deadline = None
+        if deadline_ticks is not None:
+            if int(deadline_ticks) < 1:
+                raise ValueError(f"deadline_ticks must be >= 1, got "
+                                 f"{deadline_ticks}")
+            deadline = self.stats["ticks"] + int(deadline_ticks)
         uid = self._uid
         self._uid += 1
-        self._queue.append(Request(uid, prompt, max_new_tokens))
+        self.stats["submitted"] += 1
+        if self._draining:
+            self._terminal(uid, REJECTED)
+            return uid
+        if self.max_queue and len(self._queue) >= self.max_queue:
+            if self.shed_policy == "evict-oldest-queued":
+                victim = self._queue.popleft()
+                self._terminal(victim.uid, REJECTED)
+            else:                      # reject-new
+                self._terminal(uid, REJECTED)
+                return uid
+        self._status[uid] = QUEUED
+        self._queue.append(
+            Request(uid, arr.astype(np.int32), max_new_tokens, deadline))
         return uid
 
     def result(self, uid: int) -> Optional[List[int]]:
+        """Generated tokens for a FINISHED request, else None (still in
+        flight, or terminated rejected/cancelled/expired/failed)."""
         return self._done.get(uid)
 
+    def status(self, uid: int) -> str:
+        """Lifecycle status of a submitted uid (see module docstring)."""
+        try:
+            return self._status[uid]
+        except KeyError:
+            raise KeyError(f"unknown request uid {uid}") from None
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel a request in any non-terminal state. Queued requests
+        leave the queue; on-slot requests are reclaimed immediately —
+        mid-prefill or mid-decode — and their prefix-cache recording
+        pin is dropped (refcounts return to baseline). Returns True if
+        the request was cancelled, False if already terminal (or
+        unknown)."""
+        st = self._status.get(uid)
+        if st == QUEUED:
+            self._queue = collections.deque(
+                r for r in self._queue if r.uid != uid)
+            self._terminal(uid, CANCELLED)
+            return True
+        if st in (PREFILLING, DECODING):
+            for si, s in enumerate(self.slots):
+                if s.active and s.uid == uid:
+                    self._release_slot(si, CANCELLED)
+                    return True
+        return False
+
+    def drain(self):
+        """Graceful shutdown: cancel all queued work, keep ticking
+        in-flight slots to completion, reject every new submit.
+        Idempotent; ``run_to_completion`` after ``drain`` finishes the
+        slots and returns."""
+        self._draining = True
+        while self._queue:
+            req = self._queue.popleft()
+            self._terminal(req.uid, CANCELLED)
+
+    @property
+    def draining(self) -> bool:
+        return self._draining
+
+    @property
+    def in_flight(self) -> int:
+        """Requests not yet terminal: queued plus on-slot."""
+        return len(self._queue) + sum(1 for s in self.slots if s.active)
+
     def step(self):
-        """One engine tick: admit -> chunked prefill -> blocked decode
-        (the A^3 re-sort runs *inside* the decode dispatch)."""
+        """One engine tick: expire -> admit -> chunked prefill ->
+        blocked decode (the A^3 re-sort runs *inside* the decode
+        dispatch). With a chaos injector attached the injector is
+        consulted at each phase boundary and may abort the tick with
+        :class:`~repro.serve.chaos.ChaosError` — every phase leaves the
+        engine consistent, so the next tick simply resumes (the
+        caller counts the abort; ``run_to_completion`` does)."""
         self.stats["ticks"] += 1
+        tick = self.stats["ticks"]
+        ch = self._chaos
+        if ch is not None:
+            ch.phase(tick, "tick_start")
+        self._expire_tick()
         self._admit()
+        if ch is not None:
+            ch.phase(tick, "pre_prefill")
         self._prefill_tick()
+        if ch is not None:
+            ch.phase(tick, "pre_advance")
+        self._corrupt_tick()
         self._advance()
 
     def run_to_completion(self, max_ticks: int = 10_000):
+        """Tick until no work remains. Injected tick aborts
+        (:class:`ChaosError`) are absorbed and counted in
+        ``stats["chaos_aborted_ticks"]``. Hitting ``max_ticks`` with
+        work still pending raises RuntimeError (and bumps
+        ``stats["max_ticks_exhausted"]``) instead of returning
+        silently with requests stranded in flight."""
         ticks = 0
-        while (self._queue or any(s.active for s in self.slots)) \
-                and ticks < max_ticks:
-            self.step()
+        while self.in_flight and ticks < max_ticks:
+            try:
+                self.step()
+            except ChaosError:
+                self.stats["chaos_aborted_ticks"] += 1
             ticks += 1
+        if self.in_flight:
+            self.stats["max_ticks_exhausted"] += 1
+            queued = [r.uid for r in self._queue]
+            on_slot = [s.uid for s in self.slots if s.active]
+            raise RuntimeError(
+                f"run_to_completion exhausted max_ticks={max_ticks} "
+                f"with {self.in_flight} requests still in flight "
+                f"(queued uids {queued}, on-slot uids {on_slot}) — "
+                f"raise max_ticks or investigate a stalled lane")
 
     # -- internals ------------------------------------------------------------
+    def _terminal(self, uid: int, status: str):
+        """Move a request to a terminal status exactly once and bump
+        the matching conservation counter."""
+        self._status[uid] = status
+        self.stats[_TERMINAL[status]] += 1
+
+    def _release_slot(self, si: int, status: str):
+        """Reclaim a slot from ANY in-flight phase (cancel / expire /
+        poison-fail): drop the prefix-cache recording pin so trie
+        refcounts return to baseline, forget any pending device-
+        resident handoff token, and free the lane — the slot admits new
+        work on the next tick. No device cleanup is needed: a fresh
+        admission resets the lane's mixer state in-graph at pos == 0."""
+        s = self.slots[si]
+        if s.rec_node is not None and self._pc is not None:
+            self._pc.unref(s.rec_node)
+        self._handoff.discard(si)
+        self._terminal(s.uid, status)
+        self.slots[si] = SlotState()
+
+    def _expire_tick(self):
+        """Enforce per-request deadlines at the tick boundary: a
+        request submitted at tick T with deadline_ticks d expires at
+        the start of tick T + d + 1 if not yet FINISHED — it gets d
+        full ticks of service, queued or on-slot alike."""
+        now = self.stats["ticks"]
+        if self._queue and any(r.deadline is not None
+                               for r in self._queue):
+            kept: Deque[Request] = collections.deque()
+            for req in self._queue:
+                if req.deadline is not None and now > req.deadline:
+                    self._terminal(req.uid, EXPIRED)
+                else:
+                    kept.append(req)
+            self._queue = kept
+        for si, s in enumerate(self.slots):
+            if s.active and s.deadline is not None and now > s.deadline:
+                self._release_slot(si, EXPIRED)
+
+    def _corrupt_tick(self):
+        """Chaos site: overwrite one decoding lane's mixer state with
+        NaN (victim picked deterministically by the injector). The
+        lane's next logits go non-finite and the decode dispatch emits
+        POISON on the harvested ring — detection costs no extra sync."""
+        if self._chaos is None:
+            return
+        decoding = {s.uid: si for si, s in enumerate(self.slots)
+                    if s.decoding}
+        if not decoding:
+            return
+        victim = self._chaos.pick_corrupt_victim(
+            self.stats["ticks"], sorted(decoding))
+        if victim is None:
+            return
+        self.cache = corrupt_cache_lane(self.cache, decoding[victim])
+
     def _admit(self):
         for si, slot in enumerate(self.slots):
-            if slot.active or not self._queue:
+            if slot.active:
                 continue
-            req = self._queue.popleft()
-            # warm path: walk the prefix trie and gather every matched
-            # page into the slot's cache with one jitted copy dispatch
-            # (ring rows from pool pages, recurrent carries from the
-            # boundary snapshot, A^3 sorted state + watermark restored)
-            # — the cursor starts past the matched prefix and only the
-            # suffix chunk-prefills. Cold path (miss / cache disabled):
-            # no host-side cache work at admit; the slot's first chunk
-            # dispatch resets its mixer state in-graph (pos == 0), so
-            # chunked prefill reproduces the whole-prompt cache state.
-            t, node = 0, None
-            if self._pc is not None:
-                self.cache, t, node = self._pc.admit(self.cache, si,
-                                                     req.prompt)
-                self._pc.ref(node)       # recording anchor pin
-            self.slots[si] = SlotState(uid=req.uid, pos=t, generated=[],
-                                       budget=req.max_new_tokens,
-                                       phase=PREFILLING,
-                                       prompt=req.prompt, cursor=t,
-                                       sorted_upto=t, rec_node=node)
+            while self._queue:
+                req = self._queue.popleft()
+                # warm path: walk the prefix trie and gather every
+                # matched page into the slot's cache with one jitted
+                # copy dispatch (ring rows from pool pages, recurrent
+                # carries from the boundary snapshot, A^3 sorted state
+                # + watermark restored) — the cursor starts past the
+                # matched prefix and only the suffix chunk-prefills.
+                # Cold path (miss / cache disabled): no host-side cache
+                # work at admit; the slot's first chunk dispatch resets
+                # its mixer state in-graph (pos == 0), so chunked
+                # prefill reproduces the whole-prompt cache state.
+                t, node = 0, None
+                if self._pc is not None:
+                    hook = None
+                    if self._chaos is not None:
+                        tick, uid = self.stats["ticks"], req.uid
+                        hook = (lambda matched, _t=tick, _u=uid:
+                                self._chaos.gather_fail(_t, _u, matched))
+                    try:
+                        self.cache, t, node = self._pc.admit(
+                            self.cache, si, req.prompt, fail_hook=hook)
+                    except ChaosError:
+                        # injected page-gather failure: the hook raises
+                        # BEFORE the copy dispatch, so the device cache
+                        # is untouched and no trie ref was taken — fail
+                        # the request, keep the slot for the next one
+                        self._terminal(req.uid, FAILED)
+                        continue
+                    self._pc.ref(node)       # recording anchor pin
+                self.slots[si] = SlotState(uid=req.uid, pos=t,
+                                           generated=[],
+                                           budget=req.max_new_tokens,
+                                           phase=PREFILLING,
+                                           prompt=req.prompt, cursor=t,
+                                           sorted_upto=t, rec_node=node,
+                                           deadline=req.deadline)
+                self._status[req.uid] = PREFILLING
+                break
 
     def _prefill_tick(self):
         """Advance every PREFILLING slot by one prompt chunk in a single
@@ -469,6 +792,10 @@ class ServeEngine:
                if s.phase == PREFILLING]
         if not pre:
             return
+        # an aborted tick (injected mid-tick raise) can leave handoff
+        # first tokens unharvested; resolve them with a direct read
+        # BEFORE this dispatch overwrites ``_first_tok``
+        self._flush_stale_handoff()
         n, c = len(self.slots), self._chunk
         # adaptive chunking: decoders active -> shrink the admission
         # stall to the floor; cold queue -> drain at the full chunk
@@ -563,6 +890,7 @@ class ServeEngine:
                 # device-resident handoff: the first token exists only
                 # in ``first_tok`` until the decode harvest resolves it
                 s.phase = DECODING
+                self._status[s.uid] = DECODING
                 s.generated = []
                 s.budget -= 1
                 s.sorted_upto = len(s.prompt)  # final chunk folded the sort
@@ -577,6 +905,30 @@ class ServeEngine:
                     s.rec_node = None
         if self._handoff:
             self._first_tok = first_tok
+
+    def _flush_stale_handoff(self):
+        """Resolve leftover device-resident handoff tokens with one
+        direct read. Only an injected mid-tick abort between the
+        prefill dispatch and the decode harvest leaves any — in normal
+        operation the same tick's ``_advance`` always consumes the
+        handoff set, so this never fires (and never costs a sync)."""
+        if not self._handoff:
+            return
+        first = np.asarray(self._first_tok)
+        self.stats["host_syncs"] += 1
+        self.stats["handoff_syncs"] += 1
+        for si in sorted(self._handoff):
+            s = self.slots[si]
+            if not s.decoding:
+                continue               # released while the token was stale
+            tok = int(first[si])
+            if tok == decoder.POISON:
+                self._release_slot(si, FAILED)
+            else:
+                s.generated.append(tok)
+        self._handoff = set()
+        self._first_tok = None
+        self._finish_done_slots()
 
     def _advance(self):
         handoff = self._handoff
@@ -597,7 +949,15 @@ class ServeEngine:
                 self.stats["host_syncs"] += 1
                 self.stats["handoff_syncs"] += 1
                 for si in sorted(handoff):
-                    self.slots[si].generated.append(int(first[si]))
+                    s = self.slots[si]
+                    if not s.decoding:
+                        continue
+                    tok = int(first[si])
+                    if tok == decoder.POISON:
+                        # non-finite prompt logits: quarantine
+                        self._release_slot(si, FAILED)
+                    else:
+                        s.generated.append(tok)
             self._finish_done_slots()
             return
         # blocked ragged decode: every advanceable slot moves up to
@@ -653,11 +1013,31 @@ class ServeEngine:
         ring_host = np.asarray(full)
         self.stats["host_syncs"] += 1
         for si in sorted(handoff):
-            self.slots[si].generated.append(int(ring_host[si, 0]))
+            s = self.slots[si]
+            if not s.decoding:
+                continue               # released while the token was stale
+            tok = int(ring_host[si, 0])
+            if tok == decoder.POISON:
+                # non-finite prompt logits poisoned the handoff token:
+                # quarantine off the harvest the block already paid for
+                self._release_slot(si, FAILED)
+            else:
+                s.generated.append(tok)
         for si in active:
             s = self.slots[si]
+            if not s.decoding:
+                continue               # failed via its handoff token above
             nb = int(min(t, steps_left[si]))
-            s.generated.extend(int(tok) for tok in ring_host[si, 1:1 + nb])
+            row = ring_host[si, 1:1 + nb]
+            if (row == decoder.POISON).any():
+                # the lane's logits went non-finite mid-block (POISON
+                # rode the existing harvest — no extra sync): FAIL the
+                # request and reclaim the slot; every other lane's
+                # tokens and cache state are bit-identical (the poison
+                # select is lane-local)
+                self._release_slot(si, FAILED)
+                continue
+            s.generated.extend(int(tok) for tok in row)
             if self._use_a3:
                 # mirror the in-graph watermark (checked before each
                 # step's ring write, exactly as resort_sorted_keys does)
@@ -678,4 +1058,5 @@ class ServeEngine:
     def _finish(self, si: int):
         slot = self.slots[si]
         self._done[slot.uid] = slot.generated
+        self._terminal(slot.uid, FINISHED)
         self.slots[si] = SlotState()

@@ -325,15 +325,24 @@ class PrefixCache:
         self.stats["pages_evicted"] += 1
 
     # -- admission -----------------------------------------------------------
-    def admit(self, cache: Dict[str, Any], si: int, prompt: np.ndarray
+    def admit(self, cache: Dict[str, Any], si: int, prompt: np.ndarray,
+              fail_hook: Optional[Any] = None
               ) -> Tuple[Dict[str, Any], int, _TrieNode]:
         """Walk the trie, gather every matched page into slot ``si``
         with one jitted copy dispatch, and return (cache, matched_len,
         matched_node). The caller should ``ref`` the node as the slot's
-        recording anchor and ``unref`` it at prefill end."""
+        recording anchor and ``unref`` it at prefill end.
+
+        ``fail_hook(matched_len)``, when given, is called for warm
+        admissions *before* the gather dispatch; it may raise (chaos
+        injection: a failed page gather) — the device cache is then
+        untouched, no stats are counted, and no refs are held, so the
+        caller can fail the request without unwinding anything."""
         t, node = self.lookup(prompt)
         if t == 0:
             return cache, 0, node
+        if fail_hook is not None:
+            fail_hook(t)
         ps = self.page_size
         # host-side block table walk: pool page id per page index
         chain: List[int] = []
@@ -460,6 +469,16 @@ class PrefixCache:
     @property
     def pages_in_use(self) -> int:
         return self.capacity - len(self._free)
+
+    @property
+    def referenced_nodes(self) -> int:
+        """Trie nodes with a live refcount. Refs exist only while a
+        slot prefills (the recording-anchor pin), so between ticks with
+        no PREFILLING slot this must be 0 — the lifecycle audit checks
+        it returns to baseline after any mix of finish / cancel /
+        expire / fail (a leaked ref would pin pages against eviction
+        forever)."""
+        return sum(1 for n in self._nodes if n.refs > 0)
 
     def __len__(self) -> int:
         return len(self._nodes)

@@ -1,0 +1,332 @@
+"""Request lifecycle + bounded-admission (load shedding) suite.
+
+The engine's state machine (engine module docstring) promises: every
+submitted request reaches exactly one terminal state {FINISHED,
+REJECTED, CANCELLED, EXPIRED, FAILED}; releasing a slot from any
+in-flight state reclaims the lane the same tick and drops prefix-cache
+recording pins (trie refcounts return to baseline); and the stats
+counters obey the conservation identity::
+
+    submitted == finished + rejected + cancelled + expired + failed
+                 + in_flight
+
+Every test here closes with ``_check_conservation`` so a leaked or
+double-counted request anywhere in the lifecycle fails loudly.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig, ServeConfig
+from repro.models import decoder as dec
+from repro.serve.engine import ServeEngine
+
+TINY = ModelConfig("tiny", "dense", num_layers=2, d_model=64, num_heads=4,
+                   num_kv_heads=2, d_ff=128, vocab_size=256, head_dim=16,
+                   dtype="float32")
+MAX_LEN = 96
+PROMPT_LENS = (5, 12, 23, 31, 9)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return dec.init_params(jax.random.PRNGKey(0), TINY)
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    rng = np.random.default_rng(0)
+    return [rng.integers(0, TINY.vocab_size, size=n) for n in PROMPT_LENS]
+
+
+def _check_conservation(eng: ServeEngine):
+    s = eng.stats
+    assert s["submitted"] == (s["finished"] + s["rejected"]
+                              + s["cancelled"] + s["expired"]
+                              + s["failed"] + eng.in_flight), s
+
+
+# ---------------------------------------------------------------------------
+# submit() input hardening
+# ---------------------------------------------------------------------------
+
+def test_lifecycle_submit_rejects_bad_inputs(params):
+    eng = ServeEngine(params, TINY, slots=1, max_len=16)
+    with pytest.raises(ValueError):
+        eng.submit(np.array([], np.int32))          # empty
+    with pytest.raises(ValueError):
+        eng.submit(np.array([[1, 2]], np.int32))    # not 1-D
+    with pytest.raises(TypeError):
+        eng.submit(np.array([0.5, 1.5]))            # float dtype
+    with pytest.raises(ValueError):
+        eng.submit(np.arange(17, dtype=np.int32))   # length > max_len
+    with pytest.raises(ValueError):
+        eng.submit(np.array([-1, 3], np.int32))     # negative token id
+    with pytest.raises(ValueError):
+        eng.submit(np.array([TINY.vocab_size], np.int32))  # out of vocab
+    with pytest.raises(ValueError):
+        eng.submit(np.array([1, 2], np.int32), max_new_tokens=0)
+    with pytest.raises(ValueError):
+        eng.submit(np.array([1, 2], np.int32), deadline_ticks=0)
+    # nothing above consumed a uid or touched the counters
+    assert eng.stats["submitted"] == 0 and eng.in_flight == 0
+    _check_conservation(eng)
+
+
+def test_lifecycle_submit_at_max_len_allowed(params):
+    # a prompt of length EXACTLY max_len is admitted and finishes with
+    # just its prefill-sampled token (no room to decode past max_len) —
+    # only longer prompts are an error
+    eng = ServeEngine(params, TINY, slots=1, max_len=16)
+    u = eng.submit(np.arange(16, dtype=np.int32), max_new_tokens=8)
+    eng.run_to_completion()
+    assert eng.status(u) == "finished"
+    assert len(eng.result(u)) == 1
+    _check_conservation(eng)
+
+
+def test_lifecycle_status_unknown_uid_raises(params):
+    eng = ServeEngine(params, TINY, slots=1, max_len=16)
+    with pytest.raises(KeyError):
+        eng.status(123)
+
+
+# ---------------------------------------------------------------------------
+# cancel / deadline expiry / drain
+# ---------------------------------------------------------------------------
+
+def test_lifecycle_cancel_queued_and_on_slot(params, prompts):
+    eng = ServeEngine(params, TINY, slots=2, max_len=MAX_LEN,
+                      prefill_chunk=8, decode_block=2)
+    uids = [eng.submit(p, max_new_tokens=20) for p in prompts]
+    assert eng.cancel(uids[4])                 # still queued
+    assert eng.status(uids[4]) == "cancelled"
+    eng.step(); eng.step()
+    assert eng.status(uids[0]) == "decoding"
+    assert eng.cancel(uids[0])                 # mid-decode: slot reclaimed
+    assert eng.status(uids[0]) == "cancelled"
+    assert eng.result(uids[0]) is None
+    assert not eng.cancel(uids[0])             # already terminal
+    eng.run_to_completion()
+    assert [eng.status(u) for u in uids] == \
+        ["cancelled", "finished", "finished", "finished", "cancelled"]
+    assert eng.stats["cancelled"] == 2 and eng.stats["finished"] == 3
+    _check_conservation(eng)
+
+
+def test_lifecycle_cancel_mid_prefill_reclaims_slot(params, prompts):
+    # chunk 4 means the 31-token prompt needs several prefill ticks;
+    # cancelling mid-prefill must free the lane for the next request
+    eng = ServeEngine(params, TINY, slots=1, max_len=MAX_LEN,
+                      prefill_chunk=4)
+    u0 = eng.submit(prompts[3], max_new_tokens=4)   # 31 tokens
+    u1 = eng.submit(prompts[0], max_new_tokens=4)
+    eng.step()
+    assert eng.status(u0) == "prefilling"
+    assert eng.cancel(u0)
+    eng.run_to_completion()
+    assert eng.status(u0) == "cancelled"
+    assert eng.status(u1) == "finished"
+    assert len(eng.result(u1)) == 4
+    _check_conservation(eng)
+
+
+def test_lifecycle_deadline_expires_queued_and_on_slot(params, prompts):
+    # one slot, engine-wide deadline of 3 ticks: the head request hogs
+    # the slot past everyone else's deadline
+    eng = ServeEngine(params, TINY, slots=1, max_len=MAX_LEN,
+                      prefill_chunk=8, deadline_ticks=3)
+    uids = [eng.submit(p, max_new_tokens=30) for p in prompts[:3]]
+    eng.run_to_completion()
+    assert all(eng.status(u) == "expired" for u in uids)
+    assert eng.stats["expired"] == 3
+    _check_conservation(eng)
+
+
+def test_lifecycle_deadline_generous_finishes(params, prompts):
+    # a deadline that is never hit changes nothing: token-for-token
+    # identical to the no-deadline run
+    free = ServeEngine(params, TINY, slots=2, max_len=MAX_LEN,
+                       prefill_chunk=8)
+    fu = [free.submit(p, max_new_tokens=6) for p in prompts]
+    free.run_to_completion()
+    eng = ServeEngine(params, TINY, slots=2, max_len=MAX_LEN,
+                      prefill_chunk=8, deadline_ticks=1000)
+    uids = [eng.submit(p, max_new_tokens=6) for p in prompts]
+    eng.run_to_completion()
+    assert all(eng.status(u) == "finished" for u in uids)
+    for a, b in zip(uids, fu):
+        assert eng.result(a) == free.result(b)
+    _check_conservation(eng)
+
+
+def test_lifecycle_drain_graceful_shutdown(params, prompts):
+    eng = ServeEngine(params, TINY, slots=1, max_len=MAX_LEN,
+                      prefill_chunk=8)
+    uids = [eng.submit(p, max_new_tokens=4) for p in prompts[:3]]
+    eng.step()                      # first request reaches a slot
+    eng.drain()
+    assert eng.draining
+    rejected = eng.submit(prompts[0], max_new_tokens=4)
+    assert eng.status(rejected) == "rejected"
+    eng.run_to_completion()         # in-flight work finishes
+    assert eng.status(uids[0]) == "finished"
+    assert [eng.status(u) for u in uids[1:]] == ["cancelled", "cancelled"]
+    eng.drain()                     # idempotent
+    _check_conservation(eng)
+
+
+# ---------------------------------------------------------------------------
+# bounded admission + load shedding
+# ---------------------------------------------------------------------------
+
+def test_shed_reject_new_bounds_queue(params, prompts):
+    eng = ServeEngine(params, TINY, slots=1, max_len=MAX_LEN, max_queue=2)
+    uids = [eng.submit(p, max_new_tokens=2) for p in prompts]
+    # no tick has run: the first two queue, the rest are shed
+    assert [eng.status(u) for u in uids] == \
+        ["queued", "queued", "rejected", "rejected", "rejected"]
+    assert all(eng.result(u) is None for u in uids)
+    eng.run_to_completion()
+    assert [eng.status(u) for u in uids[:2]] == ["finished", "finished"]
+    assert eng.stats["rejected"] == 3
+    _check_conservation(eng)
+
+
+def test_shed_evict_oldest_queued_prefers_fresh(params, prompts):
+    eng = ServeEngine(params, TINY, slots=1, max_len=MAX_LEN, max_queue=2,
+                      shed_policy="evict-oldest-queued")
+    uids = [eng.submit(p, max_new_tokens=2) for p in prompts]
+    # each overflow evicts the then-oldest queued request
+    assert [eng.status(u) for u in uids] == \
+        ["rejected", "rejected", "rejected", "queued", "queued"]
+    eng.run_to_completion()
+    assert [eng.status(u) for u in uids[3:]] == ["finished", "finished"]
+    assert eng.stats["rejected"] == 3
+    _check_conservation(eng)
+
+
+def test_shed_queue_drains_then_admits_again(params, prompts):
+    # shedding is a function of the *current* queue depth, not history
+    eng = ServeEngine(params, TINY, slots=2, max_len=MAX_LEN, max_queue=1)
+    u0 = eng.submit(prompts[0], max_new_tokens=2)
+    eng.step()                                      # u0 admitted to a slot
+    u1 = eng.submit(prompts[1], max_new_tokens=2)   # queue free again
+    u2 = eng.submit(prompts[2], max_new_tokens=2)   # queue full -> shed
+    assert eng.status(u1) == "queued"
+    assert eng.status(u2) == "rejected"
+    eng.run_to_completion()
+    u3 = eng.submit(prompts[2], max_new_tokens=2)   # queue empty again
+    assert eng.status(u3) == "queued"
+    eng.run_to_completion()
+    assert [eng.status(u) for u in (u0, u1, u3)] == \
+        ["finished", "finished", "finished"]
+    _check_conservation(eng)
+
+
+def test_shed_config_validation():
+    with pytest.raises(ValueError):
+        ServeConfig(max_queue=-1)
+    with pytest.raises(ValueError):
+        ServeConfig(shed_policy="drop-the-table")
+    with pytest.raises(ValueError):
+        ServeConfig(deadline_ticks=0)
+    ServeConfig(max_queue=8, shed_policy="evict-oldest-queued",
+                deadline_ticks=100)   # valid combination constructs
+
+
+def test_shed_engine_validation(params):
+    with pytest.raises(ValueError):
+        ServeEngine(params, TINY, slots=1, max_len=16, max_queue=-1)
+    with pytest.raises(ValueError):
+        ServeEngine(params, TINY, slots=1, max_len=16, shed_policy="nope")
+    with pytest.raises(ValueError):
+        ServeEngine(params, TINY, slots=1, max_len=16, deadline_ticks=0)
+
+
+# ---------------------------------------------------------------------------
+# run_to_completion max_ticks exhaustion
+# ---------------------------------------------------------------------------
+
+def test_lifecycle_max_ticks_exhaustion_raises(params, prompts):
+    eng = ServeEngine(params, TINY, slots=1, max_len=MAX_LEN,
+                      prefill_chunk=8)
+    u = eng.submit(prompts[0], max_new_tokens=50)
+    with pytest.raises(RuntimeError, match="max_ticks"):
+        eng.run_to_completion(max_ticks=2)
+    assert eng.stats["max_ticks_exhausted"] == 1
+    assert eng.status(u) in ("prefilling", "decoding")  # not stranded
+    _check_conservation(eng)
+    eng.run_to_completion()         # and the engine can simply resume
+    assert eng.status(u) == "finished"
+    assert len(eng.result(u)) == 50
+    _check_conservation(eng)
+
+
+# ---------------------------------------------------------------------------
+# prefix-cache refcount audit
+# ---------------------------------------------------------------------------
+
+def test_lifecycle_refcount_audit_after_mixed_terminals(params, prompts):
+    """After any mix of finish / cancel / expire, every trie node's
+    refcount returns to baseline (0 — pins exist only while a slot
+    prefills) and the FULL pool is evictable: the allocator can hand
+    out every page, which is impossible if a terminal path leaked a
+    recording pin."""
+    shared = np.asarray(prompts[3], np.int32)       # 31 tokens
+    eng = ServeEngine(params, TINY, slots=2, max_len=MAX_LEN,
+                      prefill_chunk=8, page_size=8, cache_pages=12)
+    # finish: records the shared prefix
+    u0 = eng.submit(shared, max_new_tokens=3)
+    eng.run_to_completion()
+    assert eng.status(u0) == "finished"
+    # cancel mid-prefill: rec_node pin must be dropped
+    u1 = eng.submit(np.concatenate([shared, shared])[:48],
+                    max_new_tokens=3)
+    eng.step()
+    assert eng.status(u1) == "prefilling"
+    assert eng.cancel(u1)
+    # expire mid-decode
+    u2 = eng.submit(shared[:16], max_new_tokens=40, deadline_ticks=2)
+    eng.run_to_completion()
+    assert eng.status(u2) == "expired"
+    # cancel while queued never takes a ref at all
+    u3 = eng.submit(shared, max_new_tokens=3)
+    assert eng.cancel(u3)
+    _check_conservation(eng)
+
+    pc = eng._pc
+    assert pc.referenced_nodes == 0
+    assert len(pc) > 0 and pc.pages_in_use > 0
+    # full pool evictable: drain the allocator to capacity
+    got = [pc._alloc_page() for _ in range(pc.capacity)]
+    assert all(p is not None for p in got)
+    assert sorted(got) == list(range(pc.capacity))
+    assert len(pc) == 0             # every node evicted
+
+
+def test_lifecycle_conservation_under_churn(params, prompts):
+    """Randomized churn: submit/cancel/step interleavings keep the
+    conservation identity at every tick."""
+    rng = np.random.default_rng(7)
+    eng = ServeEngine(params, TINY, slots=2, max_len=MAX_LEN,
+                      prefill_chunk=8, decode_block=2, max_queue=3,
+                      deadline_ticks=12)
+    uids = []
+    for i in range(40):
+        op = rng.integers(3)
+        if op == 0:
+            p = prompts[int(rng.integers(len(prompts)))]
+            uids.append(eng.submit(p, max_new_tokens=int(rng.integers(1, 8))))
+        elif op == 1 and uids:
+            eng.cancel(int(rng.choice(uids)))
+        else:
+            eng.step()
+        _check_conservation(eng)
+    eng.run_to_completion()
+    _check_conservation(eng)
+    assert eng.in_flight == 0
+    terminal = {"finished", "rejected", "cancelled", "expired", "failed"}
+    assert all(eng.status(u) in terminal for u in uids)
