@@ -353,6 +353,13 @@ class ServeConfig:
     # tick boundaries; ``submit(deadline_ticks=...)`` overrides per
     # request). None = no deadline.
     deadline_ticks: Optional[int] = None
+    # Prefix-cache pool precision: "int8" stores KV pages (and A^3
+    # sorted-key leaf snapshots) as int8 with per-page / per-sorted-
+    # column fp32 scales — ~2x pages held at equal HBM — dequantized
+    # inside the one-dispatch warm gather. "none" keeps the pool in the
+    # serving dtype (token-for-token identical to no cache). Slot ring
+    # K/V always stays in the serving dtype; only the pool quantizes.
+    kv_quant: str = "none"
 
     def __post_init__(self):
         # fail at construction, not three layers deep in the engine: a
@@ -402,6 +409,10 @@ class ServeConfig:
             raise ValueError(
                 f"deadline_ticks must be >= 1, got "
                 f"{self.deadline_ticks} (use None for no deadline)")
+        if self.kv_quant not in ("none", "int8"):
+            raise ValueError(
+                f"kv_quant must be 'none' or 'int8', got "
+                f"{self.kv_quant!r}")
 
 
 @dataclass(frozen=True)

@@ -32,7 +32,7 @@ from repro.core.candidate_selection import (
 from repro.core.post_scoring import masked_softmax, post_scoring_mask
 from repro.core.quantization import (
     LutExp,
-    make_lut_exp,
+    cached_lut_exp,
     quantize_fixed_point,
     softmax_fixed_point,
 )
@@ -104,7 +104,9 @@ def a3_attention_batch(
     state: A3State, queries: jax.Array, cfg: A3Config
 ) -> Tuple[jax.Array, dict]:
     """vmap of the unit op over a [q, d] query batch (pipelined queries)."""
-    lut = make_lut_exp(2 * cfg.frac_bits, 2 * cfg.frac_bits + 5) if (
+    # cached builder: every dispatch (and every trace) closes over the
+    # SAME two tables instead of re-deriving them per call
+    lut = cached_lut_exp(2 * cfg.frac_bits, 2 * cfg.frac_bits + 5) if (
         cfg.lut_exponent and cfg.frac_bits is not None) else None
     fn = lambda q: a3_attention_single(state, q, cfg, lut)
     return jax.vmap(fn)(queries)

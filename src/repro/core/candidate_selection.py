@@ -57,6 +57,22 @@ def sort_key_columns(key: jax.Array) -> SortedKeys:
     return SortedKeys(values=values, rows=order.astype(jnp.int32))
 
 
+def quantize_sorted_keys(sk: SortedKeys) -> Tuple[SortedKeys, jax.Array]:
+    """Quantize sorted key columns to int8 with per-column fp32 scales.
+
+    Round-to-nearest is monotone, so each quantized column stays validly
+    ascending and the int8 ``SortedKeys`` can feed the same greedy walk.
+    Returns (int8 SortedKeys, scales [d]) — pass the scales back to
+    :func:`select_candidates`, which folds them into the query so the
+    walk runs *directly on the int8 values* (scoring int8 keys against a
+    scale-folded query is bit-identical to scoring the dequantized
+    keys; no dequantized key matrix is ever materialized).
+    """
+    from repro.core.quantization import quantize_int8_block
+    q, scale = quantize_int8_block(sk.values, axes=(0,))     # per column
+    return SortedKeys(values=q, rows=sk.rows), scale.reshape(-1)
+
+
 def slice_sorted_keys(sk: SortedKeys, keep_rows: jax.Array) -> SortedKeys:
     """Restrict a per-column sort to a subset of ring rows (the paged
     prefix-cache's page-boundary restore).
@@ -179,6 +195,10 @@ def _prefix_products(
     else:
         vals = jnp.where(qpos, bot, top)
         rows = jnp.where(qpos, bot_r, top_r)
+    if not jnp.issubdtype(vals.dtype, jnp.floating):
+        # int8 sorted keys (kv_quant): score directly on the integer
+        # values — the per-column scale is already folded into ``query``
+        vals = vals.astype(jnp.float32)
     return vals * query[None, :], rows
 
 
@@ -220,6 +240,7 @@ def select_candidates(
     m_iters: int,
     use_heuristic: bool = True,
     prefix_cap: Optional[int] = None,
+    scales: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Vectorized greedy candidate selection — exact equivalent of the oracle.
 
@@ -231,8 +252,16 @@ def select_candidates(
     c*M/d (c ~ 4) captures the walk with high probability at O(M) instead
     of O(M d) work — the production decode path uses this (SSPerf H3.v2);
     ``None`` keeps the oracle-exact behaviour.
+
+    ``scales`` [d] (``kv_quant=int8``): per-column fp32 scales for int8
+    ``sorted_keys`` (see :func:`quantize_sorted_keys`). The scale is
+    positive, so folding it into the query preserves each column's walk
+    order — the selection runs directly on the int8 values and is
+    bit-identical to selecting over the dequantized keys.
     """
     n, d = sorted_keys.n, sorted_keys.d
+    if scales is not None:
+        query = query.astype(jnp.float32) * scales
     m = int(min(m_iters, n * d))
     length = int(min(m, n))
     if prefix_cap is not None:

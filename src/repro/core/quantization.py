@@ -23,7 +23,8 @@ non-positive inputs) is verified in tests/test_quantization.py.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+import functools
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,11 +36,19 @@ def quantize_fixed_point(
     """Round-to-nearest fixed point with ``int_bits``/``frac_bits`` + sign.
 
     Representable range: [-(2^i - 2^-f), 2^i - 2^-f].
+
+    The rounding grid is built in f32 regardless of the input dtype: a
+    bf16 input times the weak-typed Python scalar ``2**frac_bits`` stays
+    bf16, whose 8-bit mantissa cannot hold ``x * 2^f`` — fake
+    quantization would silently degrade to a no-op / wrong grid. Compute
+    internally in f32, cast back to the input dtype.
     """
+    x = jnp.asarray(x)
     scale = 2.0 ** frac_bits
     limit = 2.0 ** int_bits - 2.0 ** (-frac_bits)
-    q = jnp.round(x * scale) / scale
-    return jnp.clip(q, -limit, limit)
+    xf = x.astype(jnp.float32)
+    q = jnp.round(xf * scale) / scale
+    return jnp.clip(q, -limit, limit).astype(x.dtype)
 
 
 class LutExp(NamedTuple):
@@ -58,16 +67,23 @@ class LutExp(NamedTuple):
     out_frac_bits: int
 
     def __call__(self, x: jax.Array) -> jax.Array:
-        """exp(x) for x <= 0 via the two tables (vectorized)."""
+        """exp(x) for x <= 0 via the two tables (vectorized).
+
+        Index and output-register arithmetic run in f32 (``x * 2^f``
+        overflows a bf16 mantissa); the result is cast back to the
+        input dtype.
+        """
+        x = jnp.asarray(x)
         scale = 2.0 ** self.frac_bits
         kmax = 2 ** self.total_bits - 1
-        k = jnp.clip(jnp.round(-x * scale), 0, kmax).astype(jnp.int32)
+        xf = x.astype(jnp.float32)
+        k = jnp.clip(jnp.round(-xf * scale), 0, kmax).astype(jnp.int32)
         lo = k & ((1 << self.lo_bits) - 1)
         hi = k >> self.lo_bits
-        y = self.hi_table[hi] * self.lo_table[lo]
+        y = (self.hi_table[hi] * self.lo_table[lo]).astype(jnp.float32)
         # the ASIC multiplier output register keeps out_frac_bits fraction bits
         oscale = 2.0 ** self.out_frac_bits
-        return jnp.round(y * oscale) / oscale
+        return (jnp.round(y * oscale) / oscale).astype(x.dtype)
 
     @property
     def table_entries(self) -> int:
@@ -103,6 +119,20 @@ def make_lut_exp(
                   out_frac_bits=out_frac_bits)
 
 
+@functools.lru_cache(maxsize=None)
+def cached_lut_exp(frac_bits: int, total_bits: int) -> LutExp:
+    """Module-level cached :func:`make_lut_exp` keyed on
+    ``(frac_bits, total_bits)``.
+
+    ``softmax_fixed_point`` (and the decode dispatches built on it) used
+    to rebuild the default tables inside every traced call — each trace
+    re-materialized both LUTs as fresh constants. The cache returns the
+    SAME table arrays every call, so jit closes over one constant pair
+    and repeated dispatches reuse it instead of re-deriving it per tick.
+    """
+    return make_lut_exp(frac_bits=frac_bits, total_bits=total_bits)
+
+
 def softmax_fixed_point(
     scores: jax.Array,
     frac_bits: int,
@@ -121,8 +151,13 @@ def softmax_fixed_point(
         # Index width = fraction bits of the score register + enough integer
         # bits to cover the useful exponent range (e^-32 ~ 1e-14 underflows
         # any fixed-point weight register, so 5 integer bits suffice).
-        lut = make_lut_exp(frac_bits=2 * frac_bits, total_bits=2 * frac_bits + 5)
-    neg_inf = jnp.finfo(scores.dtype).min
+        lut = cached_lut_exp(2 * frac_bits, 2 * frac_bits + 5)
+    # Internal arithmetic in f32: the 2f-bit weight grid (and the max-
+    # subtract) are not representable in a bf16 mantissa — compute wide,
+    # cast the final weights back to the input dtype.
+    out_dtype = jnp.asarray(scores).dtype
+    scores = jnp.asarray(scores).astype(jnp.float32)
+    neg_inf = jnp.finfo(jnp.float32).min
     if mask is not None:
         scores = jnp.where(mask, scores, neg_inf)
     mx = jnp.max(scores, axis=axis, keepdims=True)
@@ -131,6 +166,40 @@ def softmax_fixed_point(
     if mask is not None:
         e = jnp.where(mask, e, 0.0)
     denom = jnp.sum(e, axis=axis, keepdims=True)
-    w = e / jnp.maximum(denom, jnp.finfo(scores.dtype).tiny)
+    w = e / jnp.maximum(denom, jnp.finfo(jnp.float32).tiny)
     scale = 2.0 ** (2 * frac_bits)
-    return jnp.round(w * scale) / scale
+    return (jnp.round(w * scale) / scale).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Int8 block quantization for the serving cache (``kv_quant=int8``)
+# ---------------------------------------------------------------------------
+#
+# The paged prefix cache stores KV pages (and A^3 sorted-key column
+# snapshots) as int8 with fp32 amax scales per block — per page for KV
+# rows, per sorted-column block for sorted keys. Symmetric round-to-
+# nearest: q = round(x / s), s = amax/127, so |x - s*q| <= s/2 and the
+# warm-restored ring differs from the cold one by at most half a
+# quantization step per element.
+
+def quantize_int8_block(
+    x: jax.Array, axes: Tuple[int, ...]
+) -> Tuple[jax.Array, jax.Array]:
+    """Quantize ``x`` to int8 with one fp32 scale per block.
+
+    ``axes`` are the dimensions reduced into each scale (the block);
+    the returned ``scale`` keeps those dims at size 1 so
+    ``dequantize_int8_block`` broadcasts without bookkeeping.
+    """
+    xf = jnp.asarray(x).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=axes, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, jnp.float32(1e-12))
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8_block(
+    q: jax.Array, scale: jax.Array, dtype=jnp.float32
+) -> jax.Array:
+    """Inverse of :func:`quantize_int8_block` (scale broadcasts)."""
+    return (q.astype(jnp.float32) * scale).astype(dtype)

@@ -21,24 +21,35 @@ def candidate_block_map_for_heads(
     q: jax.Array,                   # [B, Hq, Sq, D]
     k: jax.Array,                   # [B, Hkv, Sk, D]
     cfg: A3Config,
+    k_scale: Optional[jax.Array] = None,   # [B, Hkv, D] fp32 (int8 k)
 ) -> Tuple[jax.Array, jax.Array]:
     """Run greedy candidate selection per (batch, head, query), reduce to
     kv-block granularity, and union across each GQA group — the kernel
     streams K/V per kv head, so the map is per kv head too. Returns
-    (kv_indices [B, Hkv, nq, maxb], kv_counts [B, Hkv, nq])."""
+    (kv_indices [B, Hkv, nq, maxb], kv_counts [B, Hkv, nq]).
+
+    With ``k_scale`` the keys may be int8 (per-(batch, kv-head, column)
+    symmetric quantization): the positive scale is folded into the query
+    instead of dequantizing S x D keys — column sort order and the
+    greedy walk's sign split are both scale-invariant."""
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
     group = hq // hkv
     scale = d ** -0.5
     m = cfg.m_for(sk)
 
-    def per_bh(qh, kh):             # qh [Sq, d], kh [Sk, d]
+    qs = q * scale
+    if k_scale is not None:
+        qs = (qs.astype(jnp.float32)
+              * jnp.repeat(k_scale, group, axis=1)[:, :, None, :])
+
+    def per_bh(qh, kh):             # qh [Sq, d] (pre-scaled), kh [Sk, d]
         sk_sorted = sort_key_columns(kh)
-        mask, _ = select_candidates_batch(sk_sorted, qh * scale, m)
+        mask, _ = select_candidates_batch(sk_sorted, qh, m)
         return mask                  # [Sq, Sk]
 
     kq = jnp.repeat(k, group, axis=1)
-    masks = jax.vmap(jax.vmap(per_bh))(q, kq)            # [B, Hq, Sq, Sk]
+    masks = jax.vmap(jax.vmap(per_bh))(qs, kq)           # [B, Hq, Sq, Sk]
     bq, bk = min(cfg.block_q, sq), min(cfg.block_k, sk)
     nq, nk = sq // bq, sk // bk
     bm = masks.reshape(b, hq, nq, bq, nk, bk).any(axis=(3, 5))
@@ -54,16 +65,36 @@ def a3_attention(
     *,
     causal: bool = True,
     window: Optional[int] = None,
+    k_scale: Optional[jax.Array] = None,   # [B, Hkv, D] fp32 (int8 k)
+    v_scale: Optional[jax.Array] = None,   # [B, Hkv, D] fp32 (int8 v)
     use_kernel: bool = False,
     interpret: bool = False,
 ) -> jax.Array:
-    """A³-approximate (or exact when cfg.mode == OFF) fused attention."""
+    """A³-approximate (or exact when cfg.mode == OFF) fused attention.
+
+    ``k_scale``/``v_scale`` enable int8 K/V: candidate selection scores
+    the int8 keys directly (scale folded into the query inside
+    :func:`candidate_block_map_for_heads`); only the fused softmax
+    kernel sees dequantized values."""
+
+    def _dequant(x, s):
+        return (x.astype(jnp.float32) * s[:, :, None, :]).astype(q.dtype)
+
     if cfg.mode == A3Mode.OFF:
         from repro.kernels.flash_attention.ops import fused_attention
+        if k_scale is not None:
+            k = _dequant(k, k_scale)
+        if v_scale is not None:
+            v = _dequant(v, v_scale)
         return fused_attention(q, k, v, causal=causal, window=window,
                                use_kernel=use_kernel, interpret=interpret)
 
-    kv_indices, kv_counts = candidate_block_map_for_heads(q, k, cfg)
+    kv_indices, kv_counts = candidate_block_map_for_heads(
+        q, k, cfg, k_scale=k_scale)
+    if k_scale is not None:
+        k = _dequant(k, k_scale)
+    if v_scale is not None:
+        v = _dequant(v, v_scale)
     threshold = cfg.threshold_nats
     fn = a3_sparse_attention if use_kernel else a3_sparse_attention_ref
     kw = dict(threshold=threshold, causal=causal, window=window,

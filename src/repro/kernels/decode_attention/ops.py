@@ -77,6 +77,9 @@ def a3_decode_attention_compact(
     sorted_keys: SortedKeys,        # batched per (B, Hkv): [B, Hkv, S, D]
     fresh_mask: Optional[jax.Array] = None,   # [B, S] always-include rows
     budget: Optional[int] = None,
+    sk_scale: Optional[jax.Array] = None,     # [B, Hkv, NS, D] fp32
+    k_scale: Optional[jax.Array] = None,      # [B, Hkv, S] fp32 per row
+    v_scale: Optional[jax.Array] = None,      # [B, Hkv, S] fp32 per row
 ) -> jax.Array:
     """A^3 decode with **sharded compaction** (SSPerf H3.v4).
 
@@ -92,6 +95,17 @@ def a3_decode_attention_compact(
 
     Candidate sets are unioned across the GQA group; ``fresh_mask`` rows
     (written after the last re-sort) are force-included per block.
+
+    **Int8 scoring** (the quantized-cache path): with ``sk_scale``,
+    ``sorted_keys.values`` may be int8 columns — the per-(block, column)
+    fp32 scale is folded into the query instead of dequantizing the
+    ring, so the greedy walk scores S x D int8 bytes and only the
+    selected C candidates are ever widened. Positive scales preserve
+    both the per-column sort order and the q-sign split, so the walk
+    itself is unchanged. With ``k_scale``/``v_scale`` (per ring row) the
+    K/V blocks may be int8 too; scales are gathered along with the
+    ``idx`` winners and applied to just the [C] compacted candidates —
+    the exact softmax then runs in f32 over dequantized values.
     """
     b, hq, d = q.shape
     _, hkv, s_len, dv = v.shape
@@ -130,6 +144,10 @@ def a3_decode_attention_compact(
 
     qpos = (qg > 0)[:, :, None, :, None, :]          # [B,Hkv,1,G,1,D]
     qexp = qg[:, :, None, :, None, :]
+    if sk_scale is not None:
+        # int8 sorted columns: fold the per-(block, column) scale into
+        # the query (scale > 0 keeps the sign split and walk order)
+        qexp = qexp * sk_scale.reshape(b, hkv, ns, 1, 1, d)
     tv = top_v[:, :, :, None].astype(jnp.float32)    # [B,Hkv,NS,1,cap,D]
     bv = bot_v[:, :, :, None].astype(jnp.float32)
     prod_max = shard_act(jnp.where(qpos, tv, bv) * qexp,
@@ -175,11 +193,27 @@ def a3_decode_attention_compact(
                    "a3_blocks")                      # [B,Hkv,NS,Cl,D]
     vc = shard_act(jnp.take_along_axis(vb, idx[..., None], axis=3),
                    "a3_blocks")
+    # int8 K/V: dequantize ONLY the compacted candidates — the per-row
+    # scales ride the same idx gather, so S x D stays 1 byte/element
+    # and just C x D elements widen to f32
+    if k_scale is not None:
+        ksc = jnp.take_along_axis(k_scale.reshape(b, hkv, ns, sl),
+                                  idx, axis=3)[..., None]
+        kc = kc.astype(jnp.float32) * ksc
+    if v_scale is not None:
+        vsc = jnp.take_along_axis(v_scale.reshape(b, hkv, ns, sl),
+                                  idx, axis=3)[..., None]
+        vc = vc.astype(jnp.float32) * vsc
 
     # v7: score/output matmuls take bf16 inputs with f32 accumulation
     # (MXU-native); keeps the gathered K/V in their cache dtype instead
     # of converting to f32 (halves the gather-side bytes).
-    scores = jnp.einsum("bhgd,bhncd->bhgnc", qg.astype(k.dtype), kc,
+    kdt = (kc.dtype if jnp.issubdtype(kc.dtype, jnp.floating)
+           else jnp.float32)
+    vdt = (vc.dtype if jnp.issubdtype(vc.dtype, jnp.floating)
+           else jnp.float32)
+    scores = jnp.einsum("bhgd,bhncd->bhgnc", qg.astype(kdt),
+                        kc.astype(kdt),
                         preferred_element_type=jnp.float32)
     scores = jnp.where(live[:, :, None], scores, -jnp.inf)
     scores = scores.reshape(b, hkv, group, ns * c_loc)
@@ -187,7 +221,7 @@ def a3_decode_attention_compact(
     keep = scores >= mx - thr                        # post-scoring SSIV-D
     w = jnp.where(keep, jnp.exp(scores - mx), 0.0)
     w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-20)
-    vcat = vc.reshape(b, hkv, ns * c_loc, dv)
-    out = jnp.einsum("bhgc,bhcd->bhgd", w.astype(v.dtype), vcat,
+    vcat = vc.astype(vdt).reshape(b, hkv, ns * c_loc, dv)
+    out = jnp.einsum("bhgc,bhcd->bhgd", w.astype(vdt), vcat,
                      preferred_element_type=jnp.float32)
-    return out.reshape(b, hq, dv).astype(v.dtype)
+    return out.reshape(b, hq, dv).astype(vdt)

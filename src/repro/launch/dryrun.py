@@ -240,7 +240,8 @@ def lower_prefill_chunk(cfg: ModelConfig, shape: ShapeConfig, mesh,
 def lower_gather_pages(cfg: ModelConfig, shape: ShapeConfig, mesh,
                        sharding_cfg: ShardingConfig, *,
                        page_size: int = 64, pages: int = 4096,
-                       a3: A3Config = A3Config()):
+                       a3: A3Config = A3Config(),
+                       kv_quant: str = "none"):
     """Lower the prefix-cache warm-admission *gather* dispatch — the
     ONE jitted copy a warm admission pays instead of re-prefilling the
     matched prefix — on the production mesh with the slot cache donated
@@ -262,12 +263,15 @@ def lower_gather_pages(cfg: ModelConfig, shape: ShapeConfig, mesh,
     cache_shape = jax.eval_shape(
         lambda: decoder.init_cache(cfg, b, s, a3=use_a3))
     pool_shape = jax.eval_shape(
-        lambda: decoder.init_page_pool(cfg, pages, page_size, a3=use_a3))
+        lambda: decoder.init_page_pool(cfg, pages, page_size, a3=use_a3,
+                                       kv_quant=kv_quant))
     cspecs = shardings_for(cache_specs(cache_shape, shape, mesh,
                                        sharding_cfg), mesh)
     # pool leaves are [L, pages, Hkv, page_size, hd] — the same 5-dim
     # layout as the rings with the page axis in the batch position, so
-    # the cache rules shard them (pages over dp, page rows over model)
+    # the cache rules shard them (pages over dp, page rows over model);
+    # int8 pools add fp32 scale leaves [L, pages, Hkv, 1, 1], still
+    # 5-dim so the same rules apply (w=1 keeps them off the ring axis)
     pspecs = shardings_for(cache_specs(pool_shape, shape, mesh,
                                        sharding_cfg), mesh)
     rep = NamedSharding(mesh, P())
@@ -309,6 +313,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              decode_block: Optional[int] = None,
              gather_pages: Optional[int] = None,
              page_size: int = 64,
+             kv_quant: str = "none",
              verbose: bool = True,
              save_hlo_dir: Optional[str] = None) -> Dict[str, Any]:
     cfg = get_arch(arch)
@@ -337,7 +342,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                 lowered = lower_gather_pages(cfg, shape, mesh,
                                              sharding_cfg,
                                              page_size=page_size,
-                                             pages=gather_pages, a3=a3)
+                                             pages=gather_pages, a3=a3,
+                                             kv_quant=kv_quant)
             elif chunkable:
                 lowered = lower_prefill_chunk(cfg, shape, mesh,
                                               sharding_cfg,
@@ -429,6 +435,12 @@ def main() -> None:
                          "of this many pages (0 = normal prefill cell)")
     ap.add_argument("--page-size", type=int, default=64,
                     help="prefix-cache page size for --gather-pages")
+    ap.add_argument("--kv-quant", default="none",
+                    choices=["none", "int8"],
+                    help="pool precision for --gather-pages: int8 "
+                         "lowers the gather against an int8 page pool "
+                         "with per-page fp32 scales (dequantize fused "
+                         "into the copy dispatch)")
     ap.add_argument("--out", default=None)
     ap.add_argument("--save-hlo", default=None,
                     help="directory for gzipped per-cell compiled HLO")
@@ -467,6 +479,7 @@ def main() -> None:
                         decode_block=args.decode_block or None,
                         gather_pages=args.gather_pages or None,
                         page_size=args.page_size,
+                        kv_quant=args.kv_quant,
                         save_hlo_dir=args.save_hlo))
                 except Exception as e:   # noqa: BLE001
                     print(f"FAIL {arch} x {shape_name} "

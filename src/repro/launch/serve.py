@@ -47,6 +47,13 @@ def main() -> None:
                          "--page-size tokens; shared prompt prefixes "
                          "admit via one gather dispatch instead of "
                          "re-prefilling); 0 = disabled")
+    ap.add_argument("--kv-quant", default="none",
+                    choices=["none", "int8"],
+                    help="prefix-cache pool precision: int8 stores KV "
+                         "pages (and A^3 sorted-key snapshots) with "
+                         "per-page fp32 scales — ~2x cache residency at "
+                         "equal HBM — dequantized inside the warm "
+                         "gather; none = pool in serving dtype")
     ap.add_argument("--decode-block", type=int, default=1,
                     help="decode steps per jitted dispatch (lax.scan with "
                          "in-graph sampling + A^3 re-sort; the host syncs "
@@ -99,7 +106,8 @@ def main() -> None:
                         cache_pages=args.cache_pages,
                         max_queue=args.max_queue,
                         shed_policy=args.shed_policy,
-                        deadline_ticks=args.deadline_ticks or None)
+                        deadline_ticks=args.deadline_ticks or None,
+                        kv_quant=args.kv_quant)
 
     chaos = None
     if args.chaos_rate > 0.0:

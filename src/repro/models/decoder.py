@@ -329,7 +329,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def init_page_pool(cfg: ModelConfig, pages: int, page_size: int,
-                   dtype=None, a3: bool = False) -> Dict[str, Any]:
+                   dtype=None, a3: bool = False,
+                   kv_quant: str = "none") -> Dict[str, Any]:
     """Paged prefix-cache pool: the page-axis view of the decode cache.
 
     Where :func:`init_cache` allocates per-*slot* state (a [L, B, ...]
@@ -342,12 +343,17 @@ def init_page_pool(cfg: ModelConfig, pages: int, page_size: int,
     no pool arrays — their state is snapshotted at page boundaries by
     the trie, not paged. ``a3`` is accepted for signature symmetry with
     ``init_cache``; sorted-key state is a whole-ring property restored
-    at gather time, never paged."""
+    at gather time, never paged. With ``kv_quant="int8"`` attention
+    pool pages are stored as int8 with per-page fp32 scale leaves
+    (``k_scale``/``v_scale``, [L, pages, Hkv, 1, 1]); the gather hook
+    dequantizes back to the slot-cache dtype inside the one-dispatch
+    warm gather."""
     dtype = dtype or jnp.dtype(cfg.dtype)
     pool: Dict[str, Any] = {}
     for si, seg in enumerate(build_segments(cfg)):
         seg_pages = MIXERS[seg.kind].init_pages(cfg, seg, pages,
-                                                page_size, dtype, a3)
+                                                page_size, dtype, a3,
+                                                kv_quant=kv_quant)
         if seg_pages is not None:
             pool[f"seg{si}"] = seg_pages
     return pool

@@ -396,13 +396,30 @@ def _attn_decode_step(lp: Params, state: Dict[str, jax.Array],
 
 
 def _attn_init_pages(cfg: ModelConfig, seg: SegmentSpec, pages: int,
-                     page_size: int, dtype, a3: bool
-                     ) -> Dict[str, jax.Array]:
+                     page_size: int, dtype, a3: bool,
+                     kv_quant: str = "none") -> Dict[str, jax.Array]:
     """Attention's share of the paged prefix-cache pool: per-page K/V
     rows. A *logical* page spans ``page_size`` token positions across
     every segment at once; sorted-key state is not paged (it is a
-    whole-ring property, restored at gather time)."""
+    whole-ring property, restored at gather time).
+
+    ``kv_quant="int8"`` stores the pages as int8 with one fp32 amax
+    scale per (layer, page, kv head) — ~4x more pages resident at equal
+    HBM, and the warm gather moves 1 byte/element instead of 4.
+    ``write_page`` quantizes on record and ``gather_pages`` dequantizes
+    inside the same one-dispatch copy (the presence of the scale leaves
+    is what routes them)."""
     L, hd = seg.count, cfg.resolved_head_dim
+    if kv_quant == "int8":
+        shp = (L, pages, cfg.num_kv_heads, page_size, hd)
+        return {
+            "k": jnp.zeros(shp, jnp.int8),
+            "v": jnp.zeros(shp, jnp.int8),
+            "k_scale": jnp.zeros((L, pages, cfg.num_kv_heads, 1, 1),
+                                 jnp.float32),
+            "v_scale": jnp.zeros((L, pages, cfg.num_kv_heads, 1, 1),
+                                 jnp.float32),
+        }
     return {
         "k": jnp.zeros((L, pages, cfg.num_kv_heads, page_size, hd), dtype),
         "v": jnp.zeros((L, pages, cfg.num_kv_heads, page_size, hd), dtype),
@@ -418,7 +435,10 @@ def _attn_write_page(pool_seg: Dict[str, jax.Array],
     ``rows`` [ps] maps page offsets to ring rows (``pos % w``); offsets
     whose position fell out of the ring (``valid`` False — a page wider
     than a sliding window) store zeros, matching what an unwritten ring
-    row reads as at restore time."""
+    row reads as at restore time.
+
+    On an int8 pool (``k_scale`` present) the copy quantizes in the same
+    dispatch: one fp32 amax scale per (layer, head) for this page."""
     v4 = valid[None, None, :, None]
 
     def put(pages, leaf):
@@ -426,8 +446,22 @@ def _attn_write_page(pool_seg: Dict[str, jax.Array],
         src = jnp.where(v4, src, jnp.zeros((), leaf.dtype))
         return pages.at[:, page_id].set(src)
 
-    return {"k": put(pool_seg["k"], state["k"]),
-            "v": put(pool_seg["v"], state["v"])}
+    if "k_scale" not in pool_seg:
+        return {"k": put(pool_seg["k"], state["k"]),
+                "v": put(pool_seg["v"], state["v"])}
+
+    from repro.core.quantization import quantize_int8_block
+
+    def put_q(pages, scales, leaf):
+        src = leaf[:, si][:, :, rows]                  # [L, H, ps, hd]
+        src = jnp.where(v4, src, jnp.zeros((), leaf.dtype))
+        q, scale = quantize_int8_block(src, axes=(2, 3))   # [L, H, 1, 1]
+        return (pages.at[:, page_id].set(q),
+                scales.at[:, page_id].set(scale))
+
+    k, ks = put_q(pool_seg["k"], pool_seg["k_scale"], state["k"])
+    v, vs = put_q(pool_seg["v"], pool_seg["v_scale"], state["v"])
+    return {"k": k, "v": v, "k_scale": ks, "v_scale": vs}
 
 
 def _attn_gather_pages(state: Dict[str, jax.Array],
@@ -446,25 +480,44 @@ def _attn_gather_pages(state: Dict[str, jax.Array],
     snapshot via :func:`~repro.core.candidate_selection.slice_sorted_keys`
     when one exists (``sk_snap``), else re-derived by a comprehension
     sort of the gathered ring — either way ``sorted_upto`` comes back as
-    ``t``, so admission triggers no A^3 re-sort."""
-    v4 = valid[None, None, :, None]
+    ``t``, so admission triggers no A^3 re-sort.
 
-    def take(pages):
+    An int8 pool (``k_scale`` present) dequantizes inside this same
+    dispatch — per-page fp32 scales broadcast over the gathered rows, so
+    the slot ring comes back in its serving dtype and the wire/HBM
+    traffic of the gather stays 1 byte/element. Int8 sorted-key
+    snapshots (``sk_snap["scale"]``) dequantize per sorted column before
+    the boundary slice."""
+    v4 = valid[None, None, :, None]
+    quant = "k_scale" in pool_seg
+    out_dtype = state["k"].dtype
+
+    def take(pages, scales=None):
         g = pages[:, page_idx, :, row_off]             # [w, L, H, hd]
         g = jnp.moveaxis(g, 0, 2)                      # [L, H, w, hd]
-        return jnp.where(v4, g, jnp.zeros((), pages.dtype))
+        if scales is not None:
+            sc = scales[:, page_idx, :, 0, 0]          # [w, L, H]
+            sc = jnp.moveaxis(sc, 0, 2)[..., None]     # [L, H, w, 1]
+            g = (g.astype(jnp.float32) * sc).astype(out_dtype)
+        return jnp.where(v4, g, jnp.zeros((), g.dtype))
 
-    k_slot = take(pool_seg["k"])
+    k_slot = take(pool_seg["k"], pool_seg.get("k_scale"))
     new = {"k": state["k"].at[:, si].set(k_slot),
-           "v": state["v"].at[:, si].set(take(pool_seg["v"]))}
+           "v": state["v"].at[:, si].set(
+               take(pool_seg["v"], pool_seg.get("v_scale")))}
     if a3 and "sk_vals" in state:
         from repro.core.candidate_selection import SortedKeys, \
             slice_sorted_keys, sort_key_columns
+        from repro.core.quantization import dequantize_int8_block
         if sk_snap is not None:
+            sk_vals = sk_snap["vals"]
+            if "scale" in sk_snap:
+                sk_vals = dequantize_int8_block(sk_vals, sk_snap["scale"],
+                                                dtype=out_dtype)
             sliced = jax.vmap(jax.vmap(
                 lambda v_, r_: slice_sorted_keys(SortedKeys(v_, r_),
                                                  valid)))(
-                sk_snap["vals"], sk_snap["rows"])
+                sk_vals, sk_snap["rows"])
         else:
             sliced = jax.vmap(jax.vmap(sort_key_columns))(k_slot)
         new["sk_vals"] = state["sk_vals"].at[:, si].set(sliced.values)
@@ -660,7 +713,8 @@ def _slstm_decode_step(lp: Params, state: Dict[str, jax.Array],
 # ---------------------------------------------------------------------------
 
 def _no_pages(cfg: ModelConfig, seg: SegmentSpec, pages: int,
-              page_size: int, dtype, a3: bool) -> None:
+              page_size: int, dtype, a3: bool,
+              kv_quant: str = "none") -> None:
     """Recurrent kinds keep no per-token pages: their decode state is a
     fixed-size carry, snapshotted per page boundary instead."""
     return None

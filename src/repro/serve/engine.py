@@ -353,6 +353,7 @@ class ServeEngine:
                  page_size: int = 64, cache_pages: int = 0,
                  max_queue: int = 0, shed_policy: str = "reject-new",
                  deadline_ticks: Optional[int] = None,
+                 kv_quant: str = "none",
                  chaos: Optional[ChaosInjector] = None):
         if cfg.frontend:
             # the engine admits token prompts; frontend archs (audio /
@@ -407,6 +408,10 @@ class ServeEngine:
                              f"cache)")
         self.page_size = int(page_size)
         self.cache_pages = int(cache_pages)
+        if kv_quant not in ("none", "int8"):
+            raise ValueError(f"kv_quant must be 'none' or 'int8', got "
+                             f"{kv_quant!r}")
+        self.kv_quant = kv_quant
         # bounded admission + load shedding (max_queue == 0 keeps the
         # historical unbounded deque)
         if int(max_queue) < 0:
@@ -494,7 +499,9 @@ class ServeEngine:
             self._pc = PrefixCache(cfg, max_len=max_len,
                                    page_size=self.page_size,
                                    cache_pages=self.cache_pages,
-                                   a3=self._use_a3, stats=self.stats)
+                                   a3=self._use_a3,
+                                   kv_quant=self.kv_quant,
+                                   stats=self.stats)
 
     @classmethod
     def from_config(cls, params: Any, cfg: ModelConfig, serve: ServeConfig,
@@ -513,6 +520,7 @@ class ServeEngine:
                    max_queue=serve.max_queue,
                    shed_policy=serve.shed_policy,
                    deadline_ticks=serve.deadline_ticks,
+                   kv_quant=serve.kv_quant,
                    chaos=chaos)
 
     # -- public API ---------------------------------------------------------

@@ -141,6 +141,7 @@ class PrefixCache:
 
     def __init__(self, cfg: ModelConfig, *, max_len: int, page_size: int,
                  cache_pages: int, a3: bool = False, dtype=None,
+                 kv_quant: str = "none",
                  stats: Optional[Dict[str, int]] = None):
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
@@ -148,11 +149,15 @@ class PrefixCache:
             raise ValueError(
                 f"cache_pages must be >= 1 for a PrefixCache, got "
                 f"{cache_pages} (use ServeConfig.cache_pages=0 to disable)")
+        if kv_quant not in ("none", "int8"):
+            raise ValueError(
+                f"kv_quant must be 'none' or 'int8', got {kv_quant!r}")
         self.cfg = cfg
         self.max_len = int(max_len)
         self.page_size = int(page_size)
         self.capacity = int(cache_pages)
         self.a3 = bool(a3)
+        self.kv_quant = kv_quant
         self.segs = build_segments(cfg)
         # per-attention-segment ring widths (the pool mirrors only these)
         self._widths = {
@@ -180,7 +185,8 @@ class PrefixCache:
         self._page_terminals = (not self._has_rec and all(
             w >= self.max_len for w in self._widths.values()))
         self.pool = decoder.init_page_pool(cfg, cache_pages, page_size,
-                                           dtype=dtype, a3=a3)
+                                           dtype=dtype, a3=a3,
+                                           kv_quant=kv_quant)
         self.root = _TrieNode(None, (), 0)
         self._free: List[int] = list(range(cache_pages))
         self._nodes: set = set()
@@ -225,7 +231,22 @@ class PrefixCache:
 
     def _sk_snapshot_fn(self, cache, si):
         """Leaf snapshot of the A^3 sorted columns (whole-ring state:
-        captured once per recorded prompt, sliced at restore)."""
+        captured once per recorded prompt, sliced at restore).
+
+        With ``kv_quant="int8"`` the sorted values are stored int8 with
+        one fp32 scale per sorted column (axis ``w`` of [L, H, w, d]) —
+        round-to-nearest is monotone, so the quantized columns remain
+        validly ascending for the greedy candidate walk; the gather hook
+        dequantizes before the boundary slice."""
+        if self.kv_quant == "int8":
+            from repro.core.quantization import quantize_int8_block
+            out = {}
+            for name in self._sk_widths:
+                q, scale = quantize_int8_block(
+                    cache[name]["sk_vals"][:, si], axes=(2,))
+                out[name] = {"vals": q, "scale": scale,
+                             "rows": cache[name]["sk_rows"][:, si]}
+            return out
         return {name: {"vals": cache[name]["sk_vals"][:, si],
                        "rows": cache[name]["sk_rows"][:, si]}
                 for name in self._sk_widths}

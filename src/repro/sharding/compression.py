@@ -46,6 +46,11 @@ def psum_compressed(grads: Any, axis_name: str,
         err = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
 
     def one(g, e):
+        # error feedback folds into the gradient BEFORE the amax: the
+        # scale must cover g + e, otherwise feedback can exceed the int8
+        # grid, clip, and re-enter the residual every step instead of
+        # draining (non-accumulation is pinned by the drain property in
+        # test_sharding_multidev.py)
         gf = g.astype(jnp.float32) + e
         amax = jax.lax.pmax(jnp.max(jnp.abs(gf)), axis_name)
         scale = jnp.maximum(amax / 127.0, 1e-12)

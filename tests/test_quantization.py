@@ -5,8 +5,11 @@ import pytest
 from helpers import given, settings, st
 
 from repro.core.quantization import (
+    cached_lut_exp,
+    dequantize_int8_block,
     make_lut_exp,
     quantize_fixed_point,
+    quantize_int8_block,
     softmax_fixed_point,
 )
 
@@ -87,3 +90,77 @@ def test_softmax_fixed_point_mask():
     w = np.asarray(softmax_fixed_point(scores, frac_bits=8, mask=mask))
     assert w[1] == 0.0
     assert abs(w.sum() - 1.0) < 1e-2
+
+
+def test_fixed_point_bf16_grid_matches_f32():
+    """Regression: the rounding grid must be built in f32 internally.
+
+    bf16's 8-bit mantissa cannot represent ``x * 2**frac_bits`` for
+    frac_bits >= 1 without destroying the fractional part, so a grid
+    computed in the input dtype silently no-ops (jnp weak typing keeps
+    the Python scalar multiply in bf16). The fix computes in f32 and
+    casts back — a bf16 input must land on exactly the same grid points
+    (post-cast) as the f32 reference."""
+    rng = np.random.default_rng(7)
+    x32 = rng.uniform(-15.0, 15.0, size=512).astype(np.float32)
+    xbf = jnp.asarray(x32).astype(jnp.bfloat16)
+    q_bf = quantize_fixed_point(xbf, int_bits=4, frac_bits=4)
+    assert q_bf.dtype == jnp.bfloat16
+    ref = quantize_fixed_point(xbf.astype(jnp.float32), 4, 4)
+    # bit-equality with the f32 grid, rounded back into bf16
+    np.testing.assert_array_equal(
+        np.asarray(q_bf.astype(jnp.float32)),
+        np.asarray(ref.astype(jnp.bfloat16).astype(jnp.float32)))
+    # and it must actually quantize: bf16 in-range values off the grid
+    # may not pass through unchanged
+    step = 2.0 ** -4
+    g = np.asarray(q_bf.astype(jnp.float32))
+    np.testing.assert_allclose(g / step, np.round(g / step), atol=1e-6)
+
+
+def test_softmax_fixed_point_bf16_grid():
+    """Same weak-typing regression for the softmax output register."""
+    rng = np.random.default_rng(11)
+    s32 = (rng.standard_normal(64) * 3).astype(np.float32)
+    sbf = jnp.asarray(s32).astype(jnp.bfloat16)
+    w = softmax_fixed_point(sbf, frac_bits=6)
+    assert w.dtype == jnp.bfloat16
+    wref = softmax_fixed_point(sbf.astype(jnp.float32), frac_bits=6)
+    np.testing.assert_array_equal(
+        np.asarray(w.astype(jnp.float32)),
+        np.asarray(wref.astype(jnp.bfloat16).astype(jnp.float32)))
+    # outputs sit on the 2**-12 output grid (f32 reference path)
+    ostep = 2.0 ** -12
+    wn = np.asarray(wref)
+    np.testing.assert_allclose(wn / ostep, np.round(wn / ostep), atol=1e-5)
+
+
+def test_cached_lut_exp_identity():
+    """The module-level LUT cache must return ONE LutExp per
+    (frac_bits, total_bits) — table construction happens once, not per
+    traced call (quantization.py's softmax default + a3_attention both
+    route through it)."""
+    a = cached_lut_exp(16, 21)
+    b = cached_lut_exp(16, 21)
+    assert a is b
+    assert cached_lut_exp(8, 16) is not a
+    # and the cached builder matches a fresh make_lut_exp numerically
+    fresh = make_lut_exp(frac_bits=16, total_bits=21)
+    x = jnp.asarray(-np.linspace(0.0, 20.0, 257), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(a(x)), np.asarray(fresh(x)))
+
+
+def test_int8_block_quant_roundtrip_bound():
+    """Symmetric int8: roundtrip error <= scale/2 per element, scale
+    = amax/127 per block."""
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((4, 8, 16)).astype(np.float32) * 5
+    q, scale = quantize_int8_block(jnp.asarray(x), axes=(2,))
+    assert q.dtype == jnp.int8
+    assert scale.shape == (4, 8, 1)
+    back = np.asarray(dequantize_int8_block(q, scale))
+    err = np.abs(back - x)
+    bound = np.broadcast_to(np.asarray(scale) / 2, x.shape)
+    assert np.all(err <= bound + 1e-7)
+    # amax element is exactly representable (hits +-127)
+    assert np.abs(np.asarray(q)).max() == 127
