@@ -40,6 +40,14 @@ admission's ``prefill_tokens`` collapses to the suffix, with the exact
 accounting identity ``prefill_tokens_cold == prefill_tokens_warm +
 prefix_tokens_reused`` asserted in the payload.
 
+The *l2-eviction-pressure* scenario measures the host-RAM L2 tier
+claim: Zipf-popular shared prefixes whose working set is ~4x the device
+page budget thrash the L1 trie; with the L2 tier, evictions demote to
+checksummed host blobs and later lookups promote them back, recovering
+the reuse L1-only loses — with the exact token-accounting identity
+asserted for both tiers, identical generations everywhere, and
+``l2_integrity_drops == 0`` on the fault-free run.
+
 The *overload-shed* scenario measures the bounded-admission claim:
 requests arriving at ~2x service capacity run against an unbounded
 queue vs ``max_queue=8`` + reject-new shedding. Unbounded, late
@@ -541,6 +549,120 @@ def run_kv_quant(params, *, shared_len: int = 512, requests: int = 8,
     return results
 
 
+def run_l2_eviction_pressure(params, *, n_prefixes: int = 8,
+                             shared_len: int = 256, requests: int = 24,
+                             suffix_len: int = 16, page_size: int = 64,
+                             cache_pages: int = 8, chunk: int = 64,
+                             max_new: int = 4,
+                             l2_bytes: int = 1 << 28) -> dict:
+    """The host-RAM L2 tier claim: Zipf-popular shared prefixes whose
+    working set is ~4x the device page budget (``cache_pages`` holds
+    1/4 of it), so the L1 trie thrashes — pages recorded for one prefix
+    evict another's before it returns.
+
+    Three engines on the SAME Zipf-sampled request stream: ``cold``
+    (no cache), ``l1_only`` (device pages only — evictions free the
+    page), and ``l2`` (evictions demote to the checksummed host store;
+    later lookups promote verified blobs back). L1-only under thrash
+    loses most reuse; the L2 tier recovers it at the cost of a
+    host->device copy instead of a full prefix re-prefill — recorded as
+    ``l2_hit_speedup_vs_cold`` (mean admission latency, cold /
+    L2-enabled). Deterministic claims asserted in the payload: the
+    accounting identity ``prefill_tokens_cold == prefill_tokens_warm +
+    prefix_tokens_reused`` holds exactly for BOTH cached variants, the
+    L2 engine reuses strictly more tokens than L1-only, every variant
+    emits identical generations, and a fault-free run counts
+    ``l2_integrity_drops == 0``."""
+    rng = np.random.default_rng(11)
+    prefixes = [rng.integers(0, TINY.vocab_size, size=shared_len)
+                for _ in range(n_prefixes)]
+    # Zipf popularity over the prefix set (s ~ 1.1)
+    w = 1.0 / np.arange(1, n_prefixes + 1) ** 1.1
+    w /= w.sum()
+    picks = rng.choice(n_prefixes, size=requests, p=w)
+    prompts = [np.concatenate([prefixes[k],
+                               rng.integers(0, TINY.vocab_size,
+                                            size=suffix_len)])
+               for k in picks]
+    max_len = shared_len + suffix_len + max_new + 8
+    working_set_pages = n_prefixes * (shared_len // page_size)
+    results = {}
+    outs = {}
+    for label, pages, l2 in (("cold", 0, 0),
+                             ("l1_only", cache_pages, 0),
+                             ("l2", cache_pages, l2_bytes)):
+        eng = ServeEngine(params, TINY, slots=2, max_len=max_len,
+                          prefill_chunk=chunk, page_size=page_size,
+                          cache_pages=pages, l2_bytes=l2)
+        wu = eng.submit(rng.integers(0, TINY.vocab_size, size=24),
+                        max_new_tokens=2)
+        eng.run_to_completion()
+        assert eng.result(wu) is not None
+        base = dict(eng.stats)
+        admit_s = []
+        outs[label] = []
+        gc.disable()
+        try:
+            for p in prompts:
+                t0 = time.perf_counter()
+                u = eng.submit(p, max_new_tokens=max_new)
+                eng.run_to_completion()
+                jax.block_until_ready(jax.tree.leaves(eng.cache)[0])
+                admit_s.append(time.perf_counter() - t0)
+                outs[label].append(eng.result(u))
+        finally:
+            gc.enable()
+            gc.collect()
+        ts = np.asarray(admit_s)
+        results[label] = {
+            "prefill_tokens": eng.stats["prefill_tokens"]
+            - base["prefill_tokens"],
+            "prefix_hits": eng.stats["prefix_hits"],
+            "prefix_tokens_reused": eng.stats["prefix_tokens_reused"],
+            "pages_recorded": eng.stats["pages_recorded"],
+            "pages_evicted": eng.stats["pages_evicted"],
+            "l2_spills": eng.stats.get("l2_spills", 0),
+            "l2_hits": eng.stats.get("l2_hits", 0),
+            "l2_evictions": eng.stats.get("l2_evictions", 0),
+            "l2_integrity_drops": eng.stats.get("l2_integrity_drops", 0),
+            "l2_bytes_used": (eng._pc.l2.bytes_used
+                              if pages and eng._pc.l2 is not None else 0),
+            "request_ms_p50": float(np.percentile(ts, 50) * 1e3),
+            "request_ms_mean": float(ts.mean() * 1e3),
+        }
+    c, l1, l2r = results["cold"], results["l1_only"], results["l2"]
+    # reuse removes work, never changes it — exact, for both tiers
+    for r in (l1, l2r):
+        assert c["prefill_tokens"] == (r["prefill_tokens"]
+                                       + r["prefix_tokens_reused"]), \
+            (c, r)
+    results["tokens_invariant_holds"] = True
+    # same generations everywhere: a promoted page is a copy
+    assert outs["cold"] == outs["l1_only"] == outs["l2"]
+    results["generations_match"] = True
+    # fault-free run: every promotion verified clean
+    assert l2r["l2_integrity_drops"] == 0, l2r
+    # the tier must actually engage and recover thrashed reuse
+    assert l2r["l2_hits"] > 0, l2r
+    assert l2r["prefix_tokens_reused"] > l1["prefix_tokens_reused"], \
+        (l1, l2r)
+    results["l2_hit_speedup_vs_cold"] = (c["request_ms_mean"]
+                                         / l2r["request_ms_mean"])
+    results["l2_speedup_vs_l1_only"] = (l1["request_ms_mean"]
+                                        / l2r["request_ms_mean"])
+    results["reuse_recovered_tokens"] = (l2r["prefix_tokens_reused"]
+                                         - l1["prefix_tokens_reused"])
+    results["config"] = {"n_prefixes": n_prefixes,
+                         "shared_len": shared_len, "requests": requests,
+                         "suffix_len": suffix_len, "page_size": page_size,
+                         "cache_pages": cache_pages,
+                         "working_set_pages": working_set_pages,
+                         "chunk": chunk, "max_new": max_new,
+                         "l2_bytes": l2_bytes, "zipf_s": 1.1,
+                         "arch": TINY.name}
+    return results
+
+
 def run_overload_shed(params, *, slots: int = 4, requests: int = 64,
                       prompt_len: int = 24, max_new: int = 16,
                       max_len: int = 128, max_queue: int = 8) -> dict:
@@ -666,6 +788,7 @@ def main() -> None:
     blocks = run_decode_block_sweep(params, slots=args.slots)
     prefix = run_prefix_reuse(params)
     kv_quant = run_kv_quant(params)
+    l2_pressure = run_l2_eviction_pressure(params)
     overload = run_overload_shed(params, slots=args.slots)
     payload = {
         "bench": "serve_latency_staggered",
@@ -680,6 +803,7 @@ def main() -> None:
         "decode_block_sweep": blocks,
         "prefix_reuse": prefix,
         "kv_quant": kv_quant,
+        "l2_eviction_pressure": l2_pressure,
         "overload_shed": overload,
     }
     with open(args.out, "w") as f:

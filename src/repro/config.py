@@ -360,6 +360,13 @@ class ServeConfig:
     # serving dtype (token-for-token identical to no cache). Slot ring
     # K/V always stays in the serving dtype; only the pool quantizes.
     kv_quant: str = "none"
+    # Host-RAM L2 page tier (serve.page_store): byte budget for
+    # checksummed blobs of evicted prefix-cache pages — eviction
+    # demotes instead of freeing, and a later lookup promotes verified
+    # blobs back into the device pool (corrupt blobs degrade that node
+    # to cold prefill, never wrong tokens). 0 disables the tier
+    # (historical free-on-evict).
+    l2_bytes: int = 0
 
     def __post_init__(self):
         # fail at construction, not three layers deep in the engine: a
@@ -413,6 +420,10 @@ class ServeConfig:
             raise ValueError(
                 f"kv_quant must be 'none' or 'int8', got "
                 f"{self.kv_quant!r}")
+        if self.l2_bytes < 0:
+            raise ValueError(
+                f"l2_bytes must be >= 0, got {self.l2_bytes} "
+                f"(0 disables the host-RAM L2 page tier)")
 
 
 @dataclass(frozen=True)

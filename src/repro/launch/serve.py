@@ -54,6 +54,24 @@ def main() -> None:
                          "per-page fp32 scales — ~2x cache residency at "
                          "equal HBM — dequantized inside the warm "
                          "gather; none = pool in serving dtype")
+    ap.add_argument("--l2-bytes", type=int, default=0,
+                    help="host-RAM L2 page-store budget in bytes: "
+                         "prefix-cache evictions demote pages (KV + "
+                         "int8 scales + mixer snapshots + A^3 sorted "
+                         "keys) to checksummed host blobs instead of "
+                         "freeing them, and later lookups promote "
+                         "verified blobs back to the device pool; "
+                         "0 = disabled (evictions free)")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="write a crash-consistent engine checkpoint "
+                         "(slots, queue, device cache, prefix trie + "
+                         "L2 tier) to this directory after the run; "
+                         "empty = no checkpoint")
+    ap.add_argument("--restore", action="store_true",
+                    help="restore the engine from --checkpoint-dir "
+                         "before serving (continues any in-flight "
+                         "requests token-for-token); the directory "
+                         "must hold a checkpoint")
     ap.add_argument("--decode-block", type=int, default=1,
                     help="decode steps per jitted dispatch (lax.scan with "
                          "in-graph sampling + A^3 re-sort; the host syncs "
@@ -107,7 +125,8 @@ def main() -> None:
                         max_queue=args.max_queue,
                         shed_policy=args.shed_policy,
                         deadline_ticks=args.deadline_ticks or None,
-                        kv_quant=args.kv_quant)
+                        kv_quant=args.kv_quant,
+                        l2_bytes=args.l2_bytes)
 
     chaos = None
     if args.chaos_rate > 0.0:
@@ -115,8 +134,16 @@ def main() -> None:
                                           rate=args.chaos_rate))
 
     params = decoder.init_params(jax.random.PRNGKey(args.seed), cfg)
-    engine = ServeEngine.from_config(params, cfg, serve, a3=a3,
-                                     chaos=chaos)
+    if args.restore:
+        if not args.checkpoint_dir:
+            ap.error("--restore requires --checkpoint-dir")
+        engine = ServeEngine.restore(args.checkpoint_dir, params, cfg,
+                                     a3=a3, chaos=chaos)
+        print(f"restored engine from {args.checkpoint_dir} "
+              f"(in_flight={engine.in_flight})")
+    else:
+        engine = ServeEngine.from_config(params, cfg, serve, a3=a3,
+                                         chaos=chaos)
 
     rng = np.random.default_rng(args.seed)
     uids = [engine.submit(
@@ -135,6 +162,9 @@ def main() -> None:
     if chaos is not None:
         print(f"chaos: seed={args.chaos_seed} rate={args.chaos_rate} "
               f"events={chaos.events} victims={sorted(chaos.injected_uids)}")
+    if args.checkpoint_dir:
+        engine.checkpoint(args.checkpoint_dir)
+        print(f"checkpointed engine to {args.checkpoint_dir}")
 
 
 if __name__ == "__main__":

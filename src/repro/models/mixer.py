@@ -53,6 +53,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import A3Config, A3Mode, AttentionKind, BlockKind, \
     ModelConfig
@@ -735,6 +736,21 @@ def _carry_restore(state: Dict[str, jax.Array],
     return {k: v.at[:, si].set(snap[k][:, 0]) for k, v in state.items()}
 
 
+def _snapshot_dump(snap: Dict[str, jax.Array]) -> Dict[str, np.ndarray]:
+    """Serialize a boundary snapshot to host numpy for the durable page
+    store / engine checkpoint (dtype- and bit-exact: float leaves round-
+    trip unchanged, so a promoted or restored carry replays the same
+    tokens). Per-kind mixers with non-array snapshot state override
+    this pair."""
+    return {k: np.asarray(v) for k, v in snap.items()}
+
+
+def _snapshot_load(host: Dict[str, np.ndarray]) -> Dict[str, jax.Array]:
+    """Rehydrate a dumped snapshot to device arrays (L2 promotion /
+    checkpoint restore)."""
+    return {k: jnp.asarray(v) for k, v in host.items()}
+
+
 @dataclasses.dataclass(frozen=True)
 class SegmentMixer:
     """The per-kind mixer-state interface (see module docstring)."""
@@ -749,6 +765,10 @@ class SegmentMixer:
     gather_pages: Optional[Callable[..., Dict[str, jax.Array]]] = None
     snapshot_state: Callable[..., Dict[str, jax.Array]] = _carry_snapshot
     restore_state: Callable[..., Dict[str, jax.Array]] = _carry_restore
+    # durable-state hooks (repro.serve.page_store): snapshot <-> host
+    # bytes for the L2 tier and the engine checkpoint
+    dump_snapshot: Callable[..., Dict[str, np.ndarray]] = _snapshot_dump
+    load_snapshot: Callable[..., Dict[str, jax.Array]] = _snapshot_load
 
 
 MIXERS: Dict[BlockKind, SegmentMixer] = {

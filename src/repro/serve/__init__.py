@@ -1,7 +1,10 @@
-from repro.serve.chaos import ChaosConfig, ChaosError, ChaosInjector
+from repro.serve.chaos import ChaosConfig, ChaosError, ChaosInjector, \
+    EngineCrash
 from repro.serve.engine import ServeEngine, make_decode_block_step, \
     make_serve_step
+from repro.serve.page_store import CheckpointError, IntegrityError, PageStore
 from repro.serve.prefix_cache import PrefixCache
 
-__all__ = ["ChaosConfig", "ChaosError", "ChaosInjector", "PrefixCache",
+__all__ = ["ChaosConfig", "ChaosError", "ChaosInjector", "CheckpointError",
+           "EngineCrash", "IntegrityError", "PageStore", "PrefixCache",
            "ServeEngine", "make_decode_block_step", "make_serve_step"]

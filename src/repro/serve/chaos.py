@@ -25,28 +25,52 @@ or removing a site never reshuffles the others):
 * ``raise`` / ``delay`` — abort or stall a tick at a phase boundary
   (``tick_start`` / ``pre_prefill`` / ``pre_advance``), exercising the
   engine's mid-tick recovery (leftover device-resident handoff tokens
-  must be flushed, not overwritten).
+  must be flushed, not overwritten). A ``delay`` firing accrues
+  ``delay_ticks`` onto a *virtual* stall counter the engine consults at
+  each tick start (:meth:`ChaosInjector.consume_delay`) — no
+  ``time.sleep``, so chaos runs are wall-clock-independent and the
+  ``(seed, tick, site)`` schedule is exact in CI.
+* ``spill`` — force-evict LRU prefix-cache pages at a tick boundary
+  (:meth:`ChaosInjector.pick_spill`), demoting them to the host-RAM L2
+  tier: exercises the demote -> promote round trip under pressure.
+* ``restore_corrupt`` — flip a byte of an L2 blob immediately before
+  its verified restore (the engine wires this as the prefix cache's
+  ``l2_fault_hook``): the checksum must catch it and the node must
+  degrade to cold prefill, never to wrong tokens.
+* ``crash`` — kill the engine at a phase boundary
+  (:class:`EngineCrash`, *not* absorbed by ``run_to_completion``):
+  stands in for process death. The recovery story is
+  ``ServeEngine.checkpoint`` / ``ServeEngine.restore`` — the chaos
+  harness proves token-for-token continuation from the last durable
+  checkpoint.
 
-``max_injections`` caps the *fault* sites (corrupt + gather) so a test
-can pin "exactly N requests are victims" deterministically.
+``max_injections`` caps the *fault* sites (corrupt + gather +
+restore_corrupt) so a test can pin "exactly N injections" and "exactly
+N request victims" deterministically (restore_corrupt never makes a
+request a victim — it degrades a cache node, not a request).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["ChaosConfig", "ChaosError", "ChaosInjector",
+__all__ = ["ChaosConfig", "ChaosError", "ChaosInjector", "EngineCrash",
            "corrupt_cache_lane"]
 
 
 class ChaosError(RuntimeError):
     """A deliberately injected fault (stands in for a device error,
     preempted host, or corrupted transfer mid-tick)."""
+
+
+class EngineCrash(ChaosError):
+    """An injected process death mid-tick. Unlike a plain ChaosError it
+    propagates out of ``run_to_completion`` — recovery means restoring
+    a fresh engine from the last checkpoint, not ticking on."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,18 +83,34 @@ class ChaosConfig:
     # fault sites (terminal for the victim request)
     corrupt_logits: bool = True
     fail_gather: bool = True
+    # durable-state fault site: corrupt an L2 blob before its restore
+    # (non-terminal — the node degrades to cold prefill)
+    restore_corrupt: bool = False
     # disruption sites (abort/stall a tick; no request is a victim)
     raise_mid_tick: bool = True
     delay_mid_tick: bool = False
-    delay_s: float = 0.0
-    # cap on total corrupt + gather injections (None = unlimited)
+    # virtual ticks a fired delay stalls the engine for (consumed at
+    # tick starts — no wall clock involved)
+    delay_ticks: int = 1
+    # force-evict (demote-to-L2) up to this many LRU prefix-cache
+    # pages when the spill site fires (0 disables the site)
+    spill_pages: int = 0
+    # kill the engine at a phase boundary (EngineCrash propagates out
+    # of run_to_completion; recovery = checkpoint/restore)
+    crash_mid_tick: bool = False
+    # cap on total corrupt + gather + restore_corrupt injections
+    # (None = unlimited)
     max_injections: Optional[int] = None
 
     def __post_init__(self):
         if not 0.0 <= self.rate <= 1.0:
             raise ValueError(f"rate must be in [0, 1], got {self.rate}")
-        if self.delay_s < 0.0:
-            raise ValueError(f"delay_s must be >= 0, got {self.delay_s}")
+        if self.delay_ticks < 0:
+            raise ValueError(f"delay_ticks must be >= 0, got "
+                             f"{self.delay_ticks}")
+        if self.spill_pages < 0:
+            raise ValueError(f"spill_pages must be >= 0, got "
+                             f"{self.spill_pages}")
         if self.max_injections is not None and self.max_injections < 0:
             raise ValueError(f"max_injections must be >= 0, got "
                              f"{self.max_injections}")
@@ -103,6 +143,7 @@ class ChaosInjector:
         self.config = config
         self.events: List[Tuple[str, int, Any]] = []
         self._faults = 0
+        self._delay_pending = 0
 
     # -- determinism core ----------------------------------------------------
     def _rng(self, tick: int, site: str) -> np.random.Generator:
@@ -122,20 +163,67 @@ class ChaosInjector:
 
     # -- engine hooks --------------------------------------------------------
     def phase(self, tick: int, name: str) -> None:
-        """Called at a tick phase boundary; may sleep (``delay``) or
-        abort the tick (``raise`` — the engine counts the aborted tick
-        and recovers on the next one)."""
+        """Called at a tick phase boundary; may accrue a virtual stall
+        (``delay``), kill the engine (``crash`` — EngineCrash, the
+        checkpoint/restore harness's trigger), or abort the tick
+        (``raise`` — the engine counts the aborted tick and recovers on
+        the next one)."""
         c = self.config
         if c.delay_mid_tick \
                 and self._rng(tick, "delay:" + name).random() < c.rate:
             self.events.append(("delay", tick, name))
-            if c.delay_s > 0.0:
-                time.sleep(c.delay_s)
+            self._delay_pending += c.delay_ticks
+        if c.crash_mid_tick \
+                and self._rng(tick, "crash:" + name).random() < c.rate:
+            self.events.append(("crash", tick, name))
+            raise EngineCrash(f"injected engine crash at {name} "
+                              f"(tick {tick})")
         if c.raise_mid_tick \
                 and self._rng(tick, "raise:" + name).random() < c.rate:
             self.events.append(("raise", tick, name))
             raise ChaosError(f"injected tick abort at {name} "
                              f"(tick {tick})")
+
+    def consume_delay(self) -> bool:
+        """Engine tick-start hook for the virtual delay counter: True
+        means this tick is a stall (the engine does no work and counts
+        ``stats["chaos_delayed_ticks"]``). Deterministic — the pending
+        count is a pure function of the fired delay events."""
+        if self._delay_pending <= 0:
+            return False
+        self._delay_pending -= 1
+        return True
+
+    def pick_spill(self, tick: int) -> int:
+        """Maybe force-evict prefix-cache pages this tick (demoting
+        them to the L2 tier). Returns how many pages to spill."""
+        c = self.config
+        if c.spill_pages <= 0:
+            return 0
+        rng = self._rng(tick, "spill")
+        if rng.random() >= c.rate:
+            return 0
+        n = int(rng.integers(1, c.spill_pages + 1))
+        self.events.append(("spill", tick, n))
+        return n
+
+    def l2_restore_corrupt(self, tick: int,
+                           key: Sequence[int]) -> bool:
+        """Prefix-cache ``l2_fault_hook``: called with the blob key
+        before each L2 restore; True corrupts the blob first (the
+        checksum must then catch it — graceful degradation, counted in
+        ``stats["l2_integrity_drops"]``, never wrong tokens). Keyed on
+        the blob key contents so multiple promotions in one tick draw
+        independently."""
+        c = self.config
+        if not c.restore_corrupt or not self._fault_budget_left():
+            return False
+        site = f"l2corrupt:{len(key)}:{sum(key) % 65536}"
+        if self._rng(tick, site).random() >= c.rate:
+            return False
+        self._faults += 1
+        self.events.append(("restore_corrupt", tick, tuple(key)))
+        return True
 
     def pick_corrupt_victim(self, tick: int,
                             uids: Sequence[int]) -> Optional[int]:

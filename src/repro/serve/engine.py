@@ -135,6 +135,20 @@ FAILED} and a request reaches exactly one of them::
        v                                 the harvested ring)
     FINISHED    (budget exhausted or max_len reached)
 
+    ── durability (orthogonal to the per-request lifecycle) ──────────
+    any state ──checkpoint()──> <directory>     (atomic rename commit;
+       │                                         every QUEUED /
+       │                                         PREFILLING / DECODING
+       │                                         request snapshots
+       │                                         mid-flight)
+       X  crash (EngineCrash / process death: partial tick discarded)
+       │
+    ServeEngine.restore() ──> same states as at checkpoint() — ticking
+    on yields token-for-token the uninterrupted run's outputs for
+    every in-flight request (greedy argmax and the (seed, uid, pos)-
+    keyed sampler are both replay-deterministic; the device cache,
+    prefix trie, pool pages, and L2 blobs round-trip bit-exactly)
+
 Releasing a slot from ANY in-flight state reclaims it the same tick
 (cancel/expire/poison never strand a lane) and drops the request's
 prefix-cache recording pin, so trie refcounts return to baseline — no
@@ -164,6 +178,10 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import json
+import os
+import shutil
+import zlib
 from typing import Any, Callable, Deque, Dict, List, NamedTuple, Optional, \
     Tuple
 
@@ -173,7 +191,10 @@ import numpy as np
 
 from repro.config import A3Config, A3Mode, ModelConfig, ServeConfig
 from repro.models import decoder
-from repro.serve.chaos import ChaosError, ChaosInjector, corrupt_cache_lane
+from repro.serve.chaos import ChaosError, ChaosInjector, EngineCrash, \
+    corrupt_cache_lane
+from repro.serve.page_store import CheckpointError, IntegrityError, \
+    deserialize_tree, serialize_tree
 from repro.serve.prefix_cache import PrefixCache
 
 
@@ -353,7 +374,7 @@ class ServeEngine:
                  page_size: int = 64, cache_pages: int = 0,
                  max_queue: int = 0, shed_policy: str = "reject-new",
                  deadline_ticks: Optional[int] = None,
-                 kv_quant: str = "none",
+                 kv_quant: str = "none", l2_bytes: int = 0,
                  chaos: Optional[ChaosInjector] = None):
         if cfg.frontend:
             # the engine admits token prompts; frontend archs (audio /
@@ -412,6 +433,10 @@ class ServeEngine:
             raise ValueError(f"kv_quant must be 'none' or 'int8', got "
                              f"{kv_quant!r}")
         self.kv_quant = kv_quant
+        if int(l2_bytes) < 0:
+            raise ValueError(f"l2_bytes must be >= 0, got {l2_bytes} "
+                             f"(0 disables the host-RAM L2 tier)")
+        self.l2_bytes = int(l2_bytes)
         # bounded admission + load shedding (max_queue == 0 keeps the
         # historical unbounded deque)
         if int(max_queue) < 0:
@@ -434,7 +459,11 @@ class ServeEngine:
         self.use_kernel = use_kernel
         # temperature > 0 is THE sampling switch: 0 pins greedy argmax
         self.temperature = max(0.0, temperature)
-        self._sample_rng = (jax.random.PRNGKey(sample_seed)
+        # the seed is the whole sampling state: the key is never
+        # mutated (draws fold (uid, pos) per request), so a restored
+        # engine reconstructs identical sampling from this int alone
+        self.sample_seed = int(sample_seed)
+        self._sample_rng = (jax.random.PRNGKey(self.sample_seed)
                             if self.temperature > 0.0 else None)
         self.slots = [SlotState() for _ in range(slots)]
         self.cache = decoder.init_cache(cfg, slots, max_len,
@@ -490,7 +519,13 @@ class ServeEngine:
                       "submitted": 0, "finished": 0, "rejected": 0,
                       "cancelled": 0, "expired": 0, "failed": 0,
                       # robustness bookkeeping
-                      "chaos_aborted_ticks": 0, "max_ticks_exhausted": 0}
+                      "chaos_aborted_ticks": 0, "max_ticks_exhausted": 0,
+                      "chaos_delayed_ticks": 0,
+                      # durable-state bookkeeping (host-RAM L2 tier +
+                      # engine checkpoint/restore)
+                      "l2_spills": 0, "l2_hits": 0, "l2_evictions": 0,
+                      "l2_integrity_drops": 0, "checkpoints": 0,
+                      "restores": 0}
         # paged prefix cache: shared-prefix reuse across all mixer kinds
         # (cache_pages == 0 disables it — admission is byte-identical to
         # the cache-less engine, and no pool memory is allocated)
@@ -501,7 +536,14 @@ class ServeEngine:
                                    cache_pages=self.cache_pages,
                                    a3=self._use_a3,
                                    kv_quant=self.kv_quant,
+                                   l2_bytes=self.l2_bytes,
                                    stats=self.stats)
+            if self._pc.l2 is not None and chaos is not None:
+                # restore_corrupt site: flip a blob byte right before
+                # its verified L2 restore (checksum must catch it)
+                self._pc.l2_fault_hook = (
+                    lambda key: self._chaos.l2_restore_corrupt(
+                        self.stats["ticks"], key))
 
     @classmethod
     def from_config(cls, params: Any, cfg: ModelConfig, serve: ServeConfig,
@@ -521,6 +563,7 @@ class ServeEngine:
                    shed_policy=serve.shed_policy,
                    deadline_ticks=serve.deadline_ticks,
                    kv_quant=serve.kv_quant,
+                   l2_bytes=serve.l2_bytes,
                    chaos=chaos)
 
     # -- public API ---------------------------------------------------------
@@ -657,6 +700,15 @@ class ServeEngine:
         ch = self._chaos
         if ch is not None:
             ch.phase(tick, "tick_start")
+            if ch.consume_delay():
+                # virtual stall: the whole tick does no work (the
+                # wall-clock-free replacement for the old time.sleep
+                # delay — deterministic, and deadlines still elapse)
+                self.stats["chaos_delayed_ticks"] += 1
+                return
+            spill = ch.pick_spill(tick)
+            if spill and self._pc is not None:
+                self._pc.spill(spill)
         self._expire_tick()
         self._admit()
         if ch is not None:
@@ -678,6 +730,10 @@ class ServeEngine:
         while self.in_flight and ticks < max_ticks:
             try:
                 self.step()
+            except EngineCrash:
+                # injected process death: NOT absorbed — the caller's
+                # recovery path is restore() from the last checkpoint
+                raise
             except ChaosError:
                 self.stats["chaos_aborted_ticks"] += 1
             ticks += 1
@@ -690,6 +746,206 @@ class ServeEngine:
                 f"with {self.in_flight} requests still in flight "
                 f"(queued uids {queued}, on-slot uids {on_slot}) — "
                 f"raise max_ticks or investigate a stalled lane")
+
+    # -- crash-consistent checkpoint / restore --------------------------------
+    def _ckpt_kwargs(self) -> Dict[str, Any]:
+        """The JSON-serializable constructor kwargs a restore rebuilds
+        the engine from (params / cfg / a3 / chaos come from the
+        caller and are validated against the saved echo)."""
+        return {"slots": len(self.slots), "max_len": self.max_len,
+                "resort_every": self.resort_every,
+                "prefill_chunk": self.prefill_chunk,
+                "prefill_chunk_min": self._chunk_min,
+                "decode_block": self.decode_block,
+                "use_kernel": bool(self.use_kernel),
+                "temperature": self.temperature,
+                "sample_seed": self.sample_seed,
+                "page_size": self.page_size,
+                "cache_pages": self.cache_pages,
+                "max_queue": self.max_queue,
+                "shed_policy": self.shed_policy,
+                "deadline_ticks": self.deadline_ticks,
+                "kv_quant": self.kv_quant,
+                "l2_bytes": self.l2_bytes}
+
+    def checkpoint(self, path: str) -> None:
+        """Snapshot the complete serving state to directory ``path``
+        with an atomic rename commit: slots (mid-prefill cursors,
+        generated tokens, budgets), queue, per-request status map and
+        results, sampling state (the seed — the key is never mutated),
+        stats, the device cache, and the prefix trie + pool + L2 blob
+        store. A crash at ANY point leaves either the previous complete
+        checkpoint or the new one — never a torn mix: everything is
+        written into ``path + ".tmp"`` first and a single
+        ``os.rename`` is the commit point (an interrupted commit
+        leaves ``path + ".old"``, which :meth:`restore` falls back
+        to). ``state.json`` carries a crc32 and the array payload is a
+        self-checksummed :func:`~repro.serve.page_store.serialize_tree`
+        blob, so a torn or bit-rotted checkpoint fails restore loudly
+        (:class:`~repro.serve.page_store.CheckpointError`) instead of
+        resuming with silently wrong state."""
+        # resolve any pending device-resident handoff tokens first:
+        # the snapshot must be host-consistent at a tick boundary
+        self._flush_stale_handoff()
+        slots_meta = []
+        for s in self.slots:
+            rec = None
+            if s.rec_node is not None and self._pc is not None:
+                rec = [int(x) for x in self._pc._path_of(s.rec_node)]
+            slots_meta.append({
+                "uid": s.uid, "pos": s.pos,
+                "generated": [int(x) for x in s.generated],
+                "budget": s.budget, "phase": s.phase,
+                "prompt": (None if s.prompt is None
+                           else [int(x) for x in s.prompt]),
+                "cursor": s.cursor, "sorted_upto": s.sorted_upto,
+                "rec": rec, "has_rec": s.rec_node is not None,
+                "deadline": s.deadline})
+        state: Dict[str, Any] = {
+            "version": 1, "cfg_name": self.cfg.name,
+            "a3_mode": self.a3.mode.value,
+            "engine": self._ckpt_kwargs(),
+            "uid": self._uid, "draining": self._draining,
+            "stats": dict(self.stats),
+            "status": {str(k): v for k, v in self._status.items()},
+            "done": {str(k): [int(t) for t in v]
+                     for k, v in self._done.items()},
+            "queue": [{"uid": r.uid,
+                       "prompt": [int(x) for x in r.prompt],
+                       "max_new": r.max_new_tokens,
+                       "deadline": r.deadline} for r in self._queue],
+            "slots": slots_meta}
+        arrays: Dict[str, Any] = {"cache": self.cache}
+        l2_blobs: List[bytes] = []
+        if self._pc is not None:
+            pc_meta, pc_arrays = self._pc.dump_state()
+            state["pc"] = pc_meta
+            arrays["pc"] = pc_arrays
+            if self._pc.l2 is not None:
+                index, off = [], 0
+                for key, blob in self._pc.l2.raw_items():
+                    index.append({"key": list(key), "off": off,
+                                  "len": len(blob)})
+                    l2_blobs.append(blob)
+                    off += len(blob)
+                state["l2_index"] = index
+        tmp = path + ".tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        payload = json.dumps(state, sort_keys=True).encode()
+        with open(os.path.join(tmp, "state.json"), "wb") as f:
+            f.write(b"%d\n" % zlib.crc32(payload) + payload)
+        with open(os.path.join(tmp, "arrays.bin"), "wb") as f:
+            f.write(serialize_tree(arrays))
+        with open(os.path.join(tmp, "l2.bin"), "wb") as f:
+            f.write(b"".join(l2_blobs))
+        # atomic commit: the rename below is the durability point
+        old = path + ".old"
+        shutil.rmtree(old, ignore_errors=True)
+        if os.path.isdir(path):
+            os.rename(path, old)
+        os.rename(tmp, path)
+        shutil.rmtree(old, ignore_errors=True)
+        self.stats["checkpoints"] += 1
+
+    @classmethod
+    def restore(cls, path: str, params: Any, cfg: ModelConfig,
+                a3: A3Config = A3Config(),
+                chaos: Optional[ChaosInjector] = None) -> "ServeEngine":
+        """Rebuild an engine from a :meth:`checkpoint` directory and
+        resume exactly where it left off: ticking the restored engine
+        yields token-for-token the outputs the uninterrupted run would
+        have produced, for every queued / prefilling / decoding
+        request (see the module docstring's durability diagram). The
+        caller supplies what a checkpoint cannot durably own — params,
+        the model config, the A^3 config, and optionally a fresh chaos
+        injector — and the saved echo (cfg name, A^3 mode) is
+        validated against them. Raises
+        :class:`~repro.serve.page_store.CheckpointError` on any
+        verification failure."""
+        if not os.path.isdir(path) and os.path.isdir(path + ".old"):
+            # a crash between the commit renames leaves only .old:
+            # the previous complete checkpoint is still durable
+            path = path + ".old"
+        try:
+            with open(os.path.join(path, "state.json"), "rb") as f:
+                raw = f.read()
+            crc_s, payload = raw.split(b"\n", 1)
+            if zlib.crc32(payload) != int(crc_s):
+                raise CheckpointError(
+                    f"{path}: state.json checksum mismatch")
+            state = json.loads(payload.decode())
+            with open(os.path.join(path, "arrays.bin"), "rb") as f:
+                arrays = deserialize_tree(f.read())
+            with open(os.path.join(path, "l2.bin"), "rb") as f:
+                l2_raw = f.read()
+        except CheckpointError:
+            raise
+        except (OSError, ValueError, IntegrityError) as e:
+            raise CheckpointError(
+                f"unreadable checkpoint {path}: {e}") from None
+        if state.get("version") != 1:
+            raise CheckpointError(
+                f"unsupported checkpoint version "
+                f"{state.get('version')!r}")
+        if state["cfg_name"] != cfg.name:
+            raise CheckpointError(
+                f"checkpoint was taken with model "
+                f"{state['cfg_name']!r}; restoring with {cfg.name!r}")
+        if state["a3_mode"] != a3.mode.value:
+            raise CheckpointError(
+                f"checkpoint A^3 mode {state['a3_mode']!r} does not "
+                f"match {a3.mode.value!r}")
+        eng = cls(params, cfg, a3=a3, chaos=chaos, **state["engine"])
+        # stats is SHARED with the prefix cache: update in place
+        eng.stats.update({k: int(v) for k, v in state["stats"].items()})
+        eng._uid = int(state["uid"])
+        eng._draining = bool(state["draining"])
+        eng._status = {int(k): v for k, v in state["status"].items()}
+        eng._done = {int(k): [int(t) for t in v]
+                     for k, v in state["done"].items()}
+        eng._queue = collections.deque(
+            Request(int(q["uid"]), np.asarray(q["prompt"], np.int32),
+                    int(q["max_new"]),
+                    None if q["deadline"] is None else int(q["deadline"]))
+            for q in state["queue"])
+        eng.cache = jax.tree_util.tree_map(jnp.asarray, arrays["cache"])
+        if eng._pc is not None and "pc" in state:
+            eng._pc.load_state(state["pc"], arrays.get("pc", {}))
+            if eng._pc.l2 is not None:
+                for entry in state.get("l2_index", []):
+                    off, n = int(entry["off"]), int(entry["len"])
+                    eng._pc.l2.put_raw(
+                        tuple(int(x) for x in entry["key"]),
+                        l2_raw[off:off + n])
+        for si, sm in enumerate(state["slots"]):
+            s = SlotState(
+                uid=int(sm["uid"]), pos=int(sm["pos"]),
+                generated=[int(x) for x in sm["generated"]],
+                budget=int(sm["budget"]), phase=sm["phase"],
+                prompt=(None if sm["prompt"] is None
+                        else np.asarray(sm["prompt"], np.int32)),
+                cursor=int(sm["cursor"]),
+                sorted_upto=int(sm["sorted_upto"]),
+                deadline=(None if sm["deadline"] is None
+                          else int(sm["deadline"])))
+            if sm["has_rec"] and eng._pc is not None:
+                # re-derive the recording-anchor pin from the node's
+                # token path (refs are not serialized — they restore
+                # exactly from the slots that hold them)
+                node: Any = eng._pc.root
+                toks = [int(x) for x in sm["rec"]]
+                ps = eng.page_size
+                for b in range(0, len(toks), ps):
+                    node = node.children.get(tuple(toks[b:b + ps]))
+                    if node is None:
+                        break
+                if node is not None:
+                    s.rec_node = node
+                    eng._pc.ref(node)
+            eng.slots[si] = s
+        eng.stats["restores"] += 1
+        return eng
 
     # -- internals ------------------------------------------------------------
     def _terminal(self, uid: int, status: str):
@@ -749,48 +1005,58 @@ class ServeEngine:
         self.cache = corrupt_cache_lane(self.cache, decoding[victim])
 
     def _admit(self):
+        # Phase 1 — assignment: queued requests claim free slots. The
+        # warm path walks the prefix trie (extending through the L2
+        # tier: demoted pages promote back with verified restores) —
+        # the cursor starts past the matched prefix and only the
+        # suffix chunk-prefills. Cold path (miss / cache disabled): no
+        # host-side cache work at admit; the slot's first chunk
+        # dispatch resets its mixer state in-graph (pos == 0), so
+        # chunked prefill reproduces the whole-prompt cache state.
+        assigned: List[Tuple[int, Request, int, Any]] = []
         for si, slot in enumerate(self.slots):
             if slot.active:
                 continue
             while self._queue:
                 req = self._queue.popleft()
-                # warm path: walk the prefix trie and gather every
-                # matched page into the slot's cache with one jitted
-                # copy dispatch (ring rows from pool pages, recurrent
-                # carries from the boundary snapshot, A^3 sorted state
-                # + watermark restored) — the cursor starts past the
-                # matched prefix and only the suffix chunk-prefills.
-                # Cold path (miss / cache disabled): no host-side cache
-                # work at admit; the slot's first chunk dispatch resets
-                # its mixer state in-graph (pos == 0), so chunked
-                # prefill reproduces the whole-prompt cache state.
                 t, node = 0, None
                 if self._pc is not None:
-                    hook = None
-                    if self._chaos is not None:
-                        tick, uid = self.stats["ticks"], req.uid
-                        hook = (lambda matched, _t=tick, _u=uid:
-                                self._chaos.gather_fail(_t, _u, matched))
-                    try:
-                        self.cache, t, node = self._pc.admit(
-                            self.cache, si, req.prompt, fail_hook=hook)
-                    except ChaosError:
-                        # injected page-gather failure: the hook raises
-                        # BEFORE the copy dispatch, so the device cache
-                        # is untouched and no trie ref was taken — fail
-                        # the request, keep the slot for the next one
-                        self._terminal(req.uid, FAILED)
-                        continue
+                    t, node = self._pc.lookup(req.prompt)
+                    if t > 0 and self._chaos is not None:
+                        try:
+                            self._chaos.gather_fail(self.stats["ticks"],
+                                                    req.uid, t)
+                        except ChaosError:
+                            # injected page-gather failure BEFORE the
+                            # copy dispatch: the device cache is
+                            # untouched and no trie ref was taken —
+                            # fail the request, keep the slot free for
+                            # the next one
+                            self._terminal(req.uid, FAILED)
+                            continue
+                    # pin the matched chain NOW: a later assignment's
+                    # L2 promotion could otherwise evict it between
+                    # this lookup and the batched gather below
                     self._pc.ref(node)       # recording anchor pin
-                self.slots[si] = SlotState(uid=req.uid, pos=t,
-                                           generated=[],
-                                           budget=req.max_new_tokens,
-                                           phase=PREFILLING,
-                                           prompt=req.prompt, cursor=t,
-                                           sorted_upto=t, rec_node=node,
-                                           deadline=req.deadline)
-                self._status[req.uid] = PREFILLING
+                assigned.append((si, req, t, node))
                 break
+        # Phase 2 — one stacked gather dispatch warm-admits EVERY
+        # matched slot (ring rows from pool pages, recurrent carries
+        # from boundary snapshots, A^3 sorted state + watermark
+        # restored — no re-sort): a flash crowd of N same-prefix hits
+        # costs one gather_dispatches increment, not N.
+        warm = [(si, t, node) for si, req, t, node in assigned if t > 0]
+        if warm:
+            self.cache = self._pc.gather_into(self.cache, warm)
+        for si, req, t, node in assigned:
+            self.slots[si] = SlotState(uid=req.uid, pos=t,
+                                       generated=[],
+                                       budget=req.max_new_tokens,
+                                       phase=PREFILLING,
+                                       prompt=req.prompt, cursor=t,
+                                       sorted_upto=t, rec_node=node,
+                                       deadline=req.deadline)
+            self._status[req.uid] = PREFILLING
 
     def _prefill_tick(self):
         """Advance every PREFILLING slot by one prompt chunk in a single

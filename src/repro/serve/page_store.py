@@ -1,0 +1,295 @@
+"""Durable page store: the checksummed host-RAM L2 tier behind the
+paged prefix cache, plus the blob (de)serialization the engine
+checkpoint reuses.
+
+HBM bounds how many shared prefixes the device pool (L1) can hold; a
+host-RAM tier multiplies cache residency far past it (the butterfly
+co-design observation: serving wins come from memory-layout
+restructuring, not just kernel math). But a durable tier is only
+trustworthy if a spilled page that comes back corrupt degrades to cold
+prefill — never to wrong tokens — so every blob here is *verified on
+every restore*:
+
+* **Blob format** (``serialize_tree`` / ``deserialize_tree``): a nested
+  dict of arrays flattens to a JSON manifest (key paths, dtypes,
+  shapes) plus the concatenated raw bytes, prefixed with a magic tag
+  and a ``zlib.crc32`` over manifest+payload. ``deserialize_tree``
+  recomputes the checksum and raises :class:`IntegrityError` on any
+  mismatch, truncation, or malformed header — a caller can *always*
+  distinguish "bit rot" from "valid data". (xxhash would be faster but
+  is not in the baked image; crc32 is stdlib and the blobs are cold.)
+* **:class:`PageStore`** holds blobs keyed by the full token path of
+  the evicted trie node, LRU-evicted under a byte budget
+  (``l2_bytes``). ``get`` verifies lazily: a corrupt blob is dropped
+  *at read time* and counted in ``stats["l2_integrity_drops"]`` — the
+  prefix cache then falls back to cold prefill for that node only.
+  Promotion ``pop``s the blob (a page lives in exactly one tier), so
+  the store can never leak host memory for a node that moved back to
+  the device pool.
+* **:class:`Stager`** double-buffers ``jax.device_put`` uploads for
+  promotion: it pins the last two staged trees so the host can
+  serialize / overwrite the next promotion's buffers while the previous
+  pool-insert dispatch is still consuming its staged arrays
+  asynchronously — the upload overlaps the one-dispatch warm gather
+  that follows it instead of serializing behind it.
+
+The same ``serialize_tree`` blobs are the engine checkpoint's array
+payload and the wire format the ROADMAP's multi-host disaggregation
+item needs (a prefill host records pages, a decode host warm-admits
+them): self-describing, integrity-checked, host-portable bytes.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import struct
+import zlib
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["IntegrityError", "CheckpointError", "PageStore", "Stager",
+           "serialize_tree", "deserialize_tree"]
+
+_MAGIC = b"A3L2"
+_HEADER = struct.Struct("<4sII")     # magic, crc32, manifest length
+
+
+class IntegrityError(RuntimeError):
+    """A serialized blob failed verification (checksum mismatch,
+    truncation, or malformed header) — the caller must treat the data
+    as lost, never as approximately right."""
+
+
+class CheckpointError(RuntimeError):
+    """An engine checkpoint directory failed verification or does not
+    match the restoring configuration."""
+
+
+def _flatten(tree: Any, prefix: str = "") -> List[Tuple[str, np.ndarray]]:
+    if isinstance(tree, dict):
+        out: List[Tuple[str, np.ndarray]] = []
+        for k in sorted(tree):
+            out.extend(_flatten(tree[k], f"{prefix}{k}/"))
+        return out
+    if tree is None:
+        return []
+    return [(prefix[:-1], np.asarray(tree))]
+
+
+def _dtype_tag(dt: np.dtype) -> str:
+    # ml_dtypes extension dtypes (bfloat16, float8_*) stringify to an
+    # opaque void typestr ("|V2") that np.dtype cannot reverse; their
+    # registered name round-trips through _np_dtype below.
+    return dt.name if dt.kind == "V" else dt.str
+
+
+def _np_dtype(tag: str) -> np.dtype:
+    try:
+        dt = np.dtype(tag)
+        if dt.kind == "V":      # a fresh-format manifest never carries
+            raise TypeError     # a void typestr; fall through to name
+        return dt
+    except TypeError:
+        import ml_dtypes
+        try:
+            return np.dtype(getattr(ml_dtypes, tag))
+        except (AttributeError, TypeError):
+            raise IntegrityError(
+                f"unknown dtype {tag!r} in manifest") from None
+
+
+def serialize_tree(tree: Any) -> bytes:
+    """Nested dict of arrays -> self-describing checksummed bytes.
+    Leaves may be numpy or jax arrays (device leaves transfer to host
+    here); ``None`` leaves and empty dicts serialize to nothing and
+    restore as absent keys."""
+    leaves = _flatten(tree)
+    manifest = []
+    chunks = []
+    for key, arr in leaves:
+        arr = np.ascontiguousarray(arr)
+        manifest.append({"key": key, "dtype": _dtype_tag(arr.dtype),
+                         "shape": list(arr.shape)})
+        chunks.append(arr.tobytes())
+    mbytes = json.dumps(manifest, sort_keys=True).encode()
+    payload = b"".join(chunks)
+    crc = zlib.crc32(payload, zlib.crc32(mbytes))
+    return _HEADER.pack(_MAGIC, crc, len(mbytes)) + mbytes + payload
+
+
+def deserialize_tree(blob: bytes) -> Dict[str, Any]:
+    """Verified inverse of :func:`serialize_tree` (host numpy leaves).
+    Raises :class:`IntegrityError` unless the blob's checksum, header,
+    and per-leaf byte counts all hold."""
+    if len(blob) < _HEADER.size:
+        raise IntegrityError(f"blob truncated: {len(blob)} bytes < "
+                             f"{_HEADER.size}-byte header")
+    magic, crc, mlen = _HEADER.unpack_from(blob)
+    if magic != _MAGIC:
+        raise IntegrityError(f"bad magic {magic!r}")
+    body = blob[_HEADER.size:]
+    if len(body) < mlen:
+        raise IntegrityError("blob truncated inside manifest")
+    if zlib.crc32(body) != crc:
+        raise IntegrityError("checksum mismatch")
+    try:
+        manifest = json.loads(body[:mlen].decode())
+    except ValueError as e:
+        raise IntegrityError(f"malformed manifest: {e}") from None
+    tree: Dict[str, Any] = {}
+    off = mlen
+    for entry in manifest:
+        dtype = _np_dtype(entry["dtype"])
+        shape = tuple(entry["shape"])
+        n = dtype.itemsize * int(np.prod(shape, dtype=np.int64))
+        if off + n > len(body):
+            raise IntegrityError("blob truncated inside payload")
+        arr = np.frombuffer(body[off:off + n], dtype=dtype).reshape(shape)
+        off += n
+        node = tree
+        *parents, leaf = entry["key"].split("/")
+        for p in parents:
+            node = node.setdefault(p, {})
+        node[leaf] = arr
+    if off != len(body):
+        raise IntegrityError(f"{len(body) - off} trailing bytes")
+    return tree
+
+
+class Stager:
+    """Double-buffered ``jax.device_put`` staging for L2 promotion (see
+    module docstring): rotating references keep the previous upload
+    alive while its insert dispatch drains, so staging promotion N+1
+    overlaps gathering promotion N."""
+
+    def __init__(self):
+        self._bufs: List[Any] = [None, None]
+        self._i = 0
+
+    def stage(self, tree: Any) -> Any:
+        staged = jax.tree_util.tree_map(jax.device_put, tree)
+        self._i ^= 1
+        self._bufs[self._i] = staged
+        return staged
+
+
+_STAT_KEYS = ("l2_spills", "l2_hits", "l2_evictions",
+              "l2_integrity_drops")
+
+
+class PageStore:
+    """Byte-budgeted LRU host store of checksummed blobs, keyed by the
+    evicted node's full token path. ``stats`` may be externally owned
+    (the prefix cache passes the engine's dict)."""
+
+    def __init__(self, max_bytes: int,
+                 stats: Optional[Dict[str, int]] = None):
+        if max_bytes < 1:
+            raise ValueError(f"max_bytes must be >= 1 for a PageStore, "
+                             f"got {max_bytes} (use l2_bytes=0 to "
+                             f"disable the L2 tier)")
+        self.max_bytes = int(max_bytes)
+        self._blobs: "collections.OrderedDict[Tuple[int, ...], bytes]" = \
+            collections.OrderedDict()
+        self._bytes = 0
+        self.stats = stats if stats is not None else {}
+        for k in _STAT_KEYS:
+            self.stats.setdefault(k, 0)
+
+    # -- capacity ------------------------------------------------------------
+    @property
+    def bytes_used(self) -> int:
+        return self._bytes
+
+    def _reserve(self, need: int) -> bool:
+        """Evict LRU blobs until ``need`` bytes fit; False if ``need``
+        alone exceeds the budget (the blob is dropped, not stored —
+        losing an L2 entry only costs a cold prefill later)."""
+        if need > self.max_bytes:
+            return False
+        while self._bytes + need > self.max_bytes:
+            _, blob = self._blobs.popitem(last=False)
+            self._bytes -= len(blob)
+            self.stats["l2_evictions"] += 1
+        return True
+
+    # -- store / load --------------------------------------------------------
+    def put(self, key: Tuple[int, ...], tree: Any) -> bool:
+        """Serialize and store a demoted node's payload; True if it was
+        admitted under the byte budget."""
+        blob = serialize_tree(tree)
+        self.discard(key)
+        if not self._reserve(len(blob)):
+            return False
+        self._blobs[key] = blob
+        self._bytes += len(blob)
+        self.stats["l2_spills"] += 1
+        return True
+
+    def put_raw(self, key: Tuple[int, ...], blob: bytes) -> bool:
+        """Re-admit an already-serialized blob (checkpoint restore);
+        verification stays lazy — ``get`` checks the crc as usual."""
+        self.discard(key)
+        if not self._reserve(len(blob)):
+            return False
+        self._blobs[key] = bytes(blob)
+        self._bytes += len(blob)
+        return True
+
+    def get(self, key: Tuple[int, ...]) -> Optional[Dict[str, Any]]:
+        """Verified load. None on miss; a blob failing verification is
+        dropped here (graceful degradation: the caller cold-prefills)
+        and counted in ``stats["l2_integrity_drops"]``."""
+        blob = self._blobs.get(key)
+        if blob is None:
+            return None
+        self._blobs.move_to_end(key)
+        try:
+            tree = deserialize_tree(blob)
+        except IntegrityError:
+            self.discard(key)
+            self.stats["l2_integrity_drops"] += 1
+            return None
+        self.stats["l2_hits"] += 1
+        return tree
+
+    def pop(self, key: Tuple[int, ...]) -> None:
+        """Remove a promoted blob (a page lives in exactly one tier)."""
+        self.discard(key)
+
+    def discard(self, key: Tuple[int, ...]) -> None:
+        blob = self._blobs.pop(key, None)
+        if blob is not None:
+            self._bytes -= len(blob)
+
+    def clear(self) -> None:
+        self._blobs.clear()
+        self._bytes = 0
+
+    # -- introspection / fault injection -------------------------------------
+    def __contains__(self, key: Tuple[int, ...]) -> bool:
+        return key in self._blobs
+
+    def __len__(self) -> int:
+        return len(self._blobs)
+
+    def keys(self) -> Iterable[Tuple[int, ...]]:
+        return self._blobs.keys()
+
+    def raw_items(self) -> Iterable[Tuple[Tuple[int, ...], bytes]]:
+        """(key, blob) pairs for the engine checkpoint (blobs are
+        written as-is: they carry their own checksums)."""
+        return self._blobs.items()
+
+    def corrupt(self, key: Tuple[int, ...]) -> bool:
+        """Deterministically flip one payload byte of a stored blob
+        (the chaos ``restore_corrupt`` site and the conformance tests'
+        bit-rot model). Returns True if the key was present."""
+        blob = self._blobs.get(key)
+        if blob is None:
+            return False
+        flipped = blob[:-1] + bytes([blob[-1] ^ 0xFF])
+        self._blobs[key] = flipped
+        return True

@@ -52,6 +52,24 @@ snapshots taken at page boundaries:
   leaf's sorted-key snapshot rides along and is freed with it). Nodes
   pinned by an in-flight admission or an actively recording slot are
   never evicted.
+* **Host-RAM L2 tier** (``l2_bytes > 0``): eviction *demotes* instead
+  of freeing — the node's pool page (KV rows + int8 scales), recurrent
+  carry snapshot, and A^3 sorted-key leaf snapshot serialize to one
+  checksummed blob in a :class:`~repro.serve.page_store.PageStore`.
+  ``lookup`` extends a stalled trie walk through L2: each continuing
+  page found there is *promoted* back — blob verified, device page
+  allocated (may itself demote an LRU victim), arrays staged via a
+  double-buffered ``jax.device_put`` overlapping the warm gather that
+  follows, and the trie node re-created in place. Degradation is
+  graceful and node-local: a checksum mismatch, missing blob, or failed
+  host->device copy drops *that node only* back to cold prefill
+  (``stats["l2_integrity_drops"]``) — a corrupted L2 entry can shorten
+  the reused prefix but never change emitted tokens.
+* **Batched warm admission**: ``gather_into`` admits N matched slots in
+  ONE jitted copy dispatch (the flash-crowd case — one viral system
+  prompt, N concurrent hits), applying THE per-slot gather graph
+  (``gather_fn``) N times inside a single program;
+  ``stats["gather_dispatches"]`` counts dispatches, not slots.
 """
 from __future__ import annotations
 
@@ -69,9 +87,11 @@ from repro.config import BlockKind, ModelConfig
 from repro.models import decoder
 from repro.models.mixer import FULL_WINDOW, MIXERS, build_segments, \
     cache_len_for
+from repro.serve.page_store import PageStore, Stager
 
 _STAT_KEYS = ("prefix_hits", "prefix_tokens_reused", "gather_dispatches",
-              "pages_recorded", "pages_evicted")
+              "pages_recorded", "pages_evicted", "l2_spills", "l2_hits",
+              "l2_evictions", "l2_integrity_drops")
 
 
 def gather_fn(segs, a3, cache, pool, si, t, idx, snaps, sk_snaps):
@@ -94,6 +114,26 @@ def gather_fn(segs, a3, cache, pool, si, t, idx, snaps, sk_snaps):
             new_cache[name] = mixer.restore_state(cache[name],
                                                   snaps[name], si)
     return new_cache
+
+
+def gather_many_fn(segs, a3, cache, pool, packed):
+    """Stacked multi-slot warm admission: apply THE gather graph
+    (:func:`gather_fn`) once per matched slot inside a single jitted
+    dispatch, threading the cache through — a flash crowd of N
+    same-prefix hits costs ONE copy dispatch instead of N."""
+    for e in packed:
+        cache = gather_fn(segs, a3, cache, pool, e["si"], e["t"],
+                          e["idx"], e["snaps"], e["sk"])
+    return cache
+
+
+def insert_page_fn(pool, pid, page):
+    """L2-promotion pool insert: write one staged host page back into
+    logical page ``pid`` across every pool leaf (KV rows + int8
+    scales). Module-level so the sharded lowering test compiles the
+    same graph the cache dispatches."""
+    return jax.tree_util.tree_map(
+        lambda leaf, pg: leaf.at[:, pid].set(pg), pool, page)
 
 
 class _TrieNode:
@@ -141,7 +181,7 @@ class PrefixCache:
 
     def __init__(self, cfg: ModelConfig, *, max_len: int, page_size: int,
                  cache_pages: int, a3: bool = False, dtype=None,
-                 kv_quant: str = "none",
+                 kv_quant: str = "none", l2_bytes: int = 0,
                  stats: Optional[Dict[str, int]] = None):
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
@@ -201,10 +241,23 @@ class PrefixCache:
         self.stats = stats if stats is not None else {}
         for k in _STAT_KEYS:
             self.stats.setdefault(k, 0)
+        # host-RAM L2 tier: eviction demotes checksummed blobs here
+        # instead of freeing (0 = historical free-on-evict)
+        if int(l2_bytes) < 0:
+            raise ValueError(f"l2_bytes must be >= 0, got {l2_bytes} "
+                             f"(0 disables the L2 tier)")
+        self.l2: Optional[PageStore] = (
+            PageStore(int(l2_bytes), stats=self.stats)
+            if int(l2_bytes) > 0 else None)
+        self._stager = Stager()
+        # chaos hook: called with the blob key before each L2 restore;
+        # returning True corrupts the blob first (restore_corrupt site)
+        self.l2_fault_hook: Optional[Any] = None
         self._jit_record = jax.jit(self._record_fn, donate_argnums=(0,))
-        self._jit_gather = jax.jit(
-            functools.partial(gather_fn, self.segs, self.a3),
+        self._jit_gather_many = jax.jit(
+            functools.partial(gather_many_fn, self.segs, self.a3),
             donate_argnums=(0,))
+        self._jit_insert = jax.jit(insert_page_fn, donate_argnums=(0,))
         self._jit_snapshot = jax.jit(self._snapshot_fn)
         self._jit_sk_snapshot = jax.jit(self._sk_snapshot_fn)
 
@@ -295,6 +348,21 @@ class PrefixCache:
             self._touch(node)
             if node.snap_valid or self._page_terminals:
                 best_t, best_node = t, node
+        if self.l2 is not None:
+            # the trie walk stalled: its demoted continuation (if any)
+            # lives in L2 — promote page by page until a miss, an
+            # integrity drop, or an unallocatable device page ends the
+            # match (eviction only ever demotes childless nodes, so
+            # once the chain leaves L1 it never re-enters it)
+            while t + ps < len(prompt):
+                edge = tuple(int(x) for x in prompt[t:t + ps])
+                child = self._promote(node, edge)
+                if child is None:
+                    break
+                node = child
+                t += ps
+                if node.snap_valid or self._page_terminals:
+                    best_t, best_node = t, node
         return best_t, best_node
 
     def ref(self, node: Optional[_TrieNode]) -> None:
@@ -333,6 +401,8 @@ class PrefixCache:
         return None
 
     def _evict(self, node: _TrieNode) -> None:
+        if self.l2 is not None:
+            self._demote(node)          # spill, don't lose
         node.parent.children.pop(node.tokens, None)
         self._nodes.discard(node)
         self._free.append(node.page_id)
@@ -344,6 +414,136 @@ class PrefixCache:
         if not node.parent.children:
             self._push(node.parent)     # parent may now be evictable
         self.stats["pages_evicted"] += 1
+
+    def spill(self, n: int) -> int:
+        """Force-evict up to ``n`` LRU evictable nodes (the chaos
+        ``spill`` site / external memory pressure): demotes to L2 when
+        enabled, frees otherwise. Returns the number evicted."""
+        done = 0
+        while done < n:
+            victim = None
+            while self._heap:
+                lu, _, node = heapq.heappop(self._heap)
+                if node.page_id < 0 or node.children or node.refs > 0 \
+                        or lu != node.last_used:
+                    continue
+                victim = node
+                break
+            if victim is None:
+                break
+            self._evict(victim)
+            done += 1
+        return done
+
+    # -- L2 tier (host-RAM page store) ----------------------------------------
+    def _seg_kind(self, name: str) -> BlockKind:
+        return self.segs[int(name[3:])].kind
+
+    def _path_of(self, node: _TrieNode) -> Tuple[int, ...]:
+        """Full token path from the root — the node's L2 blob key."""
+        parts: List[Tuple[int, ...]] = []
+        n = node
+        while n is not self.root:
+            parts.append(n.tokens)
+            n = n.parent
+        out: List[int] = []
+        for tk in reversed(parts):
+            out.extend(tk)
+        return tuple(out)
+
+    def _demote(self, node: _TrieNode) -> None:
+        """Serialize an evicted node's durable payload — pool page
+        rows (+ int8 scales), recurrent carry snapshot, A^3 sorted-key
+        leaf snapshot — into one checksummed L2 blob. Off the decode
+        hot path (runs only under eviction pressure), so the one
+        blocking device read per demotion is acceptable."""
+        page = {}
+        if self.pool:
+            page = jax.device_get(jax.tree_util.tree_map(
+                lambda a: a[:, node.page_id], self.pool))
+        snap = {name: MIXERS[self._seg_kind(name)].dump_snapshot(s)
+                for name, s in node.snap.items()}
+        sk = {}
+        if node.sk_snap is not None:
+            sk = {name: {k: np.asarray(v) for k, v in h.items()}
+                  for name, h in node.sk_snap.items()}
+        self.l2.put(self._path_of(node),
+                    {"page": page, "snap": snap, "sk": sk,
+                     "meta": {"snap_valid": np.uint8(node.snap_valid)}})
+
+    def _promote(self, parent: _TrieNode, edge: Tuple[int, ...]
+                 ) -> Optional[_TrieNode]:
+        """Move one demoted page L2 -> L1: verify the blob, allocate a
+        device page (may itself demote an LRU victim), stage the host
+        arrays through the double-buffered ``jax.device_put`` buffer,
+        insert into the pool, and re-create the trie node. Returns None
+        on a miss or on *graceful degradation* — a checksum mismatch,
+        missing blob, or failed host->device copy drops this node (and
+        only it) back to cold prefill, counted in
+        ``stats["l2_integrity_drops"]``."""
+        ps = self.page_size
+        key = self._path_of(parent) + edge
+        if self.l2_fault_hook is not None and self.l2_fault_hook(key):
+            self.l2.corrupt(key)        # chaos restore_corrupt site
+        tree = self.l2.get(key)     # verified; None on miss or bit rot
+        if tree is None:
+            return None
+        # pin the attach point: _alloc_page's eviction scan must not
+        # demote the very node we are extending
+        self.ref(parent)
+        pid = None
+        try:
+            pid = self._alloc_page()
+            if pid is None:
+                return None     # budget fully pinned; blob stays put
+            if self.pool:
+                staged = self._stager.stage(tree["page"])
+                self.pool = self._jit_insert(
+                    self.pool, jnp.asarray(pid, jnp.int32), staged)
+            snap = {}
+            if self._has_rec:
+                snap = {name: MIXERS[self._seg_kind(name)]
+                        .load_snapshot(h)
+                        for name, h in tree.get("snap", {}).items()}
+            snap_valid = bool(int(np.asarray(
+                tree["meta"]["snap_valid"]).ravel()[0]))
+        except Exception:
+            # failed copy / malformed payload: degrade this node only
+            if pid is not None:
+                self._free.append(pid)
+            self.l2.discard(key)
+            self.stats["l2_integrity_drops"] += 1
+            return None
+        finally:
+            self.unref(parent)
+        self.l2.pop(key)        # a page lives in exactly one tier
+        child = _TrieNode(parent, edge, parent.end + ps)
+        child.page_id = pid
+        child.snap = snap
+        child.snap_valid = snap_valid
+        parent.children[edge] = child
+        self._nodes.add(child)
+        self._touch(child)
+        sk_host = tree.get("sk")
+        if sk_host and self._sk_widths:
+            # re-charge the leaf snapshot's budget pages; dropping it
+            # is not an error (the warm gather re-derives the sort)
+            self.ref(child)     # pin against the charge's own evictions
+            charged: List[int] = []
+            for _ in range(self._sk_cost):
+                p = self._alloc_page()
+                if p is None:
+                    self._free.extend(charged)
+                    charged = []
+                    break
+                charged.append(p)
+            self.unref(child)
+            if len(charged) == self._sk_cost:
+                child.sk_pages = charged
+                child.sk_snap = {
+                    name: {k: jnp.asarray(v) for k, v in h.items()}
+                    for name, h in sk_host.items()}
+        return child
 
     # -- admission -----------------------------------------------------------
     def admit(self, cache: Dict[str, Any], si: int, prompt: np.ndarray,
@@ -364,37 +564,53 @@ class PrefixCache:
             return cache, 0, node
         if fail_hook is not None:
             fail_hook(t)
-        ps = self.page_size
-        # host-side block table walk: pool page id per page index
-        chain: List[int] = []
-        n = node
-        while n is not self.root:
-            chain.append(n.page_id)
-            n = n.parent
-        pid_of = np.asarray(chain[::-1], np.int32)
-        idx = {}
-        for name, w in self._widths.items():
-            r = np.arange(w)
-            q = (t - 1) - ((t - 1 - r) % w)    # position held by ring row r
-            valid = q >= 0
-            qc = np.where(valid, q, 0)
-            idx[name] = {"page": jnp.asarray(pid_of[qc // ps], jnp.int32),
-                         "off": jnp.asarray(qc % ps, jnp.int32),
-                         "valid": jnp.asarray(valid)}
-        snaps = node.snap if self._has_rec else {}
-        sk_snaps: Dict[str, Any] = {}
-        if self._sk_widths:
-            donor = self._find_sk_donor(node)
-            if donor is not None:
-                sk_snaps = donor.sk_snap
-        cache = self._jit_gather(cache, self.pool,
-                                 jnp.asarray(si, jnp.int32),
-                                 jnp.asarray(t, jnp.int32), idx, snaps,
-                                 sk_snaps)
-        self.stats["prefix_hits"] += 1
-        self.stats["prefix_tokens_reused"] += t
-        self.stats["gather_dispatches"] += 1
+        cache = self.gather_into(cache, [(si, t, node)])
         return cache, t, node
+
+    def gather_into(self, cache: Dict[str, Any],
+                    entries: List[Tuple[int, int, _TrieNode]]
+                    ) -> Dict[str, Any]:
+        """Warm-admit every matched ``(si, t, node)`` with ONE jitted
+        stacked copy dispatch — the flash-crowd path: N same-prefix
+        slots cost one ``gather_dispatches`` increment, not N. Entries
+        must be ref-pinned by the caller before this runs (an L2
+        promotion inside a *later* lookup could otherwise evict an
+        earlier entry's matched chain between lookup and gather);
+        page ids are resolved here, at dispatch time."""
+        ps = self.page_size
+        packed = []
+        for si, t, node in entries:
+            # host-side block table walk: pool page id per page index
+            chain: List[int] = []
+            n = node
+            while n is not self.root:
+                chain.append(n.page_id)
+                n = n.parent
+            pid_of = np.asarray(chain[::-1], np.int32)
+            idx = {}
+            for name, w in self._widths.items():
+                r = np.arange(w)
+                q = (t - 1) - ((t - 1 - r) % w)  # position in ring row r
+                valid = q >= 0
+                qc = np.where(valid, q, 0)
+                idx[name] = {
+                    "page": jnp.asarray(pid_of[qc // ps], jnp.int32),
+                    "off": jnp.asarray(qc % ps, jnp.int32),
+                    "valid": jnp.asarray(valid)}
+            snaps = node.snap if self._has_rec else {}
+            sk_snaps: Dict[str, Any] = {}
+            if self._sk_widths:
+                donor = self._find_sk_donor(node)
+                if donor is not None:
+                    sk_snaps = donor.sk_snap
+            packed.append({"si": jnp.asarray(si, jnp.int32),
+                           "t": jnp.asarray(t, jnp.int32),
+                           "idx": idx, "snaps": snaps, "sk": sk_snaps})
+        cache = self._jit_gather_many(cache, self.pool, packed)
+        self.stats["prefix_hits"] += len(entries)
+        self.stats["prefix_tokens_reused"] += sum(t for _, t, _ in entries)
+        self.stats["gather_dispatches"] += 1
+        return cache
 
     # -- recording -----------------------------------------------------------
     def record_boundary(self, cache: Dict[str, Any], si: int,
@@ -473,6 +689,80 @@ class PrefixCache:
         node.sk_pages = charged
         node.sk_snap = self._jit_sk_snapshot(cache,
                                              jnp.asarray(si, jnp.int32))
+
+    # -- checkpoint -----------------------------------------------------------
+    def dump_state(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        """``(host_meta, arrays)`` snapshot for the engine checkpoint:
+        the trie structure in parent-before-child order plus the device
+        pool and per-node snapshots (host-transferred through the mixer
+        ``dump_snapshot`` hooks). L2 blobs are not here — they are
+        already serialized bytes (``l2.raw_items()``)."""
+        nodes: List[_TrieNode] = []
+        index = {id(self.root): -1}
+        queue = collections.deque([self.root])
+        while queue:
+            n = queue.popleft()
+            for child in n.children.values():
+                index[id(child)] = len(nodes)
+                nodes.append(child)
+                queue.append(child)
+        meta = {"nodes": [{"parent": index[id(n.parent)],
+                           "tokens": list(n.tokens), "end": n.end,
+                           "page_id": n.page_id,
+                           "snap_valid": bool(n.snap_valid),
+                           "sk_pages": list(n.sk_pages),
+                           "last_used": n.last_used} for n in nodes],
+                "free": list(self._free), "clock": self._clock}
+        arrays = {
+            "pool": self.pool,
+            "snaps": {str(i): {name:
+                               MIXERS[self._seg_kind(name)]
+                               .dump_snapshot(s)
+                               for name, s in n.snap.items()}
+                      for i, n in enumerate(nodes) if n.snap},
+            "sks": {str(i): n.sk_snap for i, n in enumerate(nodes)
+                    if n.sk_snap is not None}}
+        return meta, arrays
+
+    def load_state(self, meta: Dict[str, Any],
+                   arrays: Dict[str, Any]) -> None:
+        """Rebuild the trie + pool on a freshly constructed cache from
+        a checkpoint snapshot. Refcounts restore to 0 — the engine
+        re-pins recording anchors from its restored slots. LRU clocks
+        come back too, so post-restore eviction order matches the
+        uninterrupted run."""
+        nodes: List[_TrieNode] = []
+        for rec in meta["nodes"]:
+            parent = (self.root if rec["parent"] < 0
+                      else nodes[rec["parent"]])
+            node = _TrieNode(parent,
+                             tuple(int(x) for x in rec["tokens"]),
+                             int(rec["end"]))
+            node.page_id = int(rec["page_id"])
+            node.snap_valid = bool(rec["snap_valid"])
+            node.sk_pages = [int(p) for p in rec["sk_pages"]]
+            node.last_used = int(rec["last_used"])
+            parent.children[node.tokens] = node
+            self._nodes.add(node)
+            nodes.append(node)
+        for i, n in enumerate(nodes):
+            snap = arrays.get("snaps", {}).get(str(i))
+            if snap:
+                n.snap = {name: MIXERS[self._seg_kind(name)]
+                          .load_snapshot(h) for name, h in snap.items()}
+            sk = arrays.get("sks", {}).get(str(i))
+            if sk is not None:
+                n.sk_snap = {name: {k: jnp.asarray(v)
+                                    for k, v in h.items()}
+                             for name, h in sk.items()}
+        if self.pool:
+            self.pool = jax.tree_util.tree_map(jnp.asarray,
+                                               arrays["pool"])
+        self._free = [int(p) for p in meta["free"]]
+        self._clock = int(meta["clock"])
+        self._heap = []
+        for n in nodes:
+            self._push(n)
 
     # -- introspection --------------------------------------------------------
     @property

@@ -39,6 +39,29 @@ def test_serve_cli_smoke_with_a3():
 
 
 @pytest.mark.slow
+def test_serve_cli_checkpoint_then_restore(tmp_path):
+    """--l2-bytes / --checkpoint-dir / --restore: a run checkpoints at
+    exit, and a second invocation restores the durable state (served
+    results, trie, L2 tier) instead of starting cold."""
+    ck = str(tmp_path / "ckpt")
+    p = _run(["repro.launch.serve", "--arch", "phi4-mini-3.8b", "--smoke",
+              "--requests", "2", "--prompt-len", "12", "--max-new", "4",
+              "--max-len", "64", "--cache-pages", "8", "--page-size", "8",
+              "--l2-bytes", str(1 << 24), "--checkpoint-dir", ck])
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "requests=2/2" in p.stdout
+    assert "checkpointed engine" in p.stdout
+    assert os.path.isdir(ck)
+    p2 = _run(["repro.launch.serve", "--arch", "phi4-mini-3.8b", "--smoke",
+               "--requests", "1", "--prompt-len", "12", "--max-new", "4",
+               "--max-len", "64",
+               "--checkpoint-dir", ck, "--restore"])
+    assert p2.returncode == 0, p2.stderr[-2000:]
+    assert "restored engine" in p2.stdout
+    assert "requests=1/1" in p2.stdout
+
+
+@pytest.mark.slow
 def test_dryrun_cli_list():
     p = _run(["repro.launch.dryrun", "--list"], timeout=300)
     assert p.returncode == 0, p.stderr[-2000:]

@@ -211,6 +211,12 @@ def test_chaos_mid_tick_aborts_change_nothing(params, prompts):
     aborts = [e for e in chaos.events if e[0] == "raise"]
     assert aborts, "the pinned (seed, rate) schedule must abort ticks"
     assert eng.stats["chaos_aborted_ticks"] == len(aborts)
+    # delays are *virtual* stall ticks (no wall clock): every consumed
+    # stall is counted, and none can exceed what the fired events accrued
+    delays = [e for e in chaos.events if e[0] == "delay"]
+    assert delays, "the pinned (seed, rate) schedule must fire delays"
+    assert 0 < eng.stats["chaos_delayed_ticks"] \
+        <= len(delays) * chaos.config.delay_ticks
     for u, f in zip(uids, fu):
         assert eng.status(u) == "finished"
         assert eng.result(u) == free.result(f)
@@ -246,7 +252,9 @@ def test_chaos_config_validation():
     with pytest.raises(ValueError):
         ChaosConfig(rate=-0.1)
     with pytest.raises(ValueError):
-        ChaosConfig(delay_s=-1.0)
+        ChaosConfig(delay_ticks=-1)
+    with pytest.raises(ValueError):
+        ChaosConfig(spill_pages=-1)
     with pytest.raises(ValueError):
         ChaosConfig(max_injections=-1)
 

@@ -1,0 +1,322 @@
+"""Crash-consistent engine checkpoint/restore conformance.
+
+The durability contract (engine module docstring): ``checkpoint()``
+snapshots the COMPLETE serving state — slots mid-prefill/mid-decode,
+queue, statuses, budgets, sampling seed, stats, device cache, prefix
+trie + pool + L2 blobs — with an atomic rename commit, and ``restore``
+resumes token-for-token: ticking the restored engine emits exactly the
+tokens the uninterrupted run would have. Coverage:
+
+* mid-stream checkpoint/restore token parity across all four mixer
+  kinds the engine serves: attention, A^3 attention, RG-LRU hybrid,
+  pure xLSTM — with requests caught queued, prefilling, and decoding,
+* the chaos ``crash`` site: kill mid-tick (EngineCrash propagates out
+  of ``run_to_completion``), restore from the last per-tick
+  checkpoint, continue — final tokens identical to a crash-free run,
+* torn/corrupt checkpoints fail LOUDLY (:class:`CheckpointError` on a
+  flipped state byte, truncated arrays, wrong model, wrong A^3 mode —
+  never a silently wrong resume), and an interrupted commit falls back
+  to the ``.old`` previous-complete checkpoint,
+* bookkeeping round trip: statuses, queue order, results of finished
+  requests, stats counters, and the L2 blob store all survive,
+* sampling state: a temperature>0 engine restores the same seed and
+  continues the same stochastic stream.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import A3Config, AttentionKind, BlockKind, ModelConfig
+from repro.models import decoder as dec
+from repro.serve.chaos import ChaosConfig, ChaosInjector, EngineCrash
+from repro.serve.engine import ServeEngine
+from repro.serve.page_store import CheckpointError
+
+TINY = ModelConfig("tiny", "dense", num_layers=2, d_model=64, num_heads=4,
+                   num_kv_heads=2, d_ff=128, vocab_size=256, head_dim=16,
+                   dtype="float32")
+TINY_RG = ModelConfig("tiny-rg", "hybrid", num_layers=3, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=256, head_dim=16,
+                      attention_kind=AttentionKind.SLIDING, window_size=24,
+                      block_pattern=(BlockKind.RGLRU, BlockKind.RGLRU,
+                                     BlockKind.ATTENTION),
+                      act="gelu", dtype="float32")
+TINY_XL = ModelConfig("tiny-xl", "ssm", num_layers=3, d_model=64,
+                      num_heads=4, num_kv_heads=4, d_ff=0, vocab_size=256,
+                      head_dim=16,
+                      block_pattern=(BlockKind.MLSTM, BlockKind.MLSTM,
+                                     BlockKind.SLSTM),
+                      dtype="float32")
+MAX_LEN = 96
+MAX_NEW = 6
+
+
+@pytest.fixture(scope="module")
+def all_params():
+    return {
+        "tiny": dec.init_params(jax.random.PRNGKey(0), TINY),
+        "tiny-rg": dec.init_params(jax.random.PRNGKey(1), TINY_RG),
+        "tiny-xl": dec.init_params(jax.random.PRNGKey(2), TINY_XL),
+    }
+
+
+def _prompts(vocab, seed=7, n=3):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, vocab, size=24)
+    return [np.concatenate([shared,
+                            rng.integers(0, vocab, size=4 + 3 * i)])
+            for i in range(n)]
+
+
+def _uninterrupted_tokens(params, cfg, prompts, a3=A3Config(), **kw):
+    eng = ServeEngine(params, cfg, a3=a3, **kw)
+    uids = [eng.submit(p, MAX_NEW) for p in prompts]
+    eng.run_to_completion()
+    return [eng.result(u) for u in uids]
+
+
+# ---------------------------------------------------------------------------
+# mid-stream restore: token parity across all four mixer kinds
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["attention", "a3", "rglru", "xlstm"])
+def test_checkpoint_restore_midstream_token_parity(all_params, tmp_path,
+                                                   kind):
+    cfg = {"attention": TINY, "a3": TINY, "rglru": TINY_RG,
+           "xlstm": TINY_XL}[kind]
+    a3 = A3Config.conservative() if kind == "a3" else A3Config()
+    params = all_params[cfg.name]
+    prompts = _prompts(cfg.vocab_size)
+    kw = dict(slots=2, max_len=MAX_LEN, prefill_chunk=8, page_size=8,
+              cache_pages=24, l2_bytes=1 << 22)
+    free = _uninterrupted_tokens(params, cfg, prompts, a3=a3, **kw)
+
+    eng = ServeEngine(params, cfg, a3=a3, **kw)
+    uids = [eng.submit(p, MAX_NEW) for p in prompts]
+    # catch the engine mid-flight: slots prefilling/decoding, one
+    # request still queued (3 requests, 2 slots)
+    for _ in range(3):
+        eng.step()
+    ck = str(tmp_path / "ckpt")
+    eng.checkpoint(ck)
+    restored = ServeEngine.restore(ck, params, cfg, a3=a3)
+    restored.run_to_completion()
+    for u, ref in zip(uids, free):
+        assert restored.status(u) == "finished"
+        assert restored.result(u) == ref
+    # the original continues identically too (checkpoint is read-only)
+    eng.run_to_completion()
+    for u, ref in zip(uids, free):
+        assert eng.result(u) == ref
+    assert restored.stats["restores"] == 1
+    assert restored._pc.referenced_nodes == 0
+
+
+def test_checkpoint_restore_preserves_sampling_stream(all_params,
+                                                      tmp_path):
+    """temperature > 0: the restored engine rebuilds the same PRNG key
+    from the saved seed, so the stochastic stream continues exactly."""
+    params = all_params["tiny"]
+    prompts = _prompts(TINY.vocab_size, n=2)
+    kw = dict(slots=2, max_len=MAX_LEN, prefill_chunk=8,
+              temperature=0.8, sample_seed=5)
+    free = _uninterrupted_tokens(params, TINY, prompts, **kw)
+    eng = ServeEngine(params, TINY, **kw)
+    uids = [eng.submit(p, MAX_NEW) for p in prompts]
+    for _ in range(4):
+        eng.step()
+    ck = str(tmp_path / "ckpt")
+    eng.checkpoint(ck)
+    restored = ServeEngine.restore(ck, params, TINY)
+    restored.run_to_completion()
+    for u, ref in zip(uids, free):
+        assert restored.result(u) == ref
+
+
+# ---------------------------------------------------------------------------
+# chaos crash -> restore -> continue
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["attention", "a3", "rglru", "xlstm"])
+def test_checkpoint_crash_mid_tick_continuation(all_params, tmp_path,
+                                                kind):
+    """Kill the engine mid-tick (EngineCrash at a pinned (seed, rate)
+    schedule), restore from the last per-tick checkpoint, continue —
+    the surviving process emits exactly the crash-free tokens."""
+    cfg = {"attention": TINY, "a3": TINY, "rglru": TINY_RG,
+           "xlstm": TINY_XL}[kind]
+    a3 = A3Config.conservative() if kind == "a3" else A3Config()
+    params = all_params[cfg.name]
+    prompts = _prompts(cfg.vocab_size)
+    kw = dict(slots=2, max_len=MAX_LEN, prefill_chunk=8, page_size=8,
+              cache_pages=24, l2_bytes=1 << 22)
+    free = _uninterrupted_tokens(params, cfg, prompts, a3=a3, **kw)
+
+    chaos = ChaosInjector(ChaosConfig(seed=3, rate=0.3,
+                                      corrupt_logits=False,
+                                      fail_gather=False,
+                                      raise_mid_tick=False,
+                                      crash_mid_tick=True))
+    eng = ServeEngine(params, cfg, a3=a3, chaos=chaos, **kw)
+    uids = [eng.submit(p, MAX_NEW) for p in prompts]
+    ck = str(tmp_path / "ckpt")
+    eng.checkpoint(ck)
+    crashes = 0
+    while eng.in_flight > 0:
+        try:
+            eng.step()
+            eng.checkpoint(ck)
+        except EngineCrash:
+            crashes += 1
+            # the restarted process runs chaos-free (the faulty host
+            # was replaced); state comes from the last durable commit
+            eng = ServeEngine.restore(ck, params, cfg, a3=a3)
+    assert crashes >= 1, "the pinned schedule must crash at least once"
+    for u, ref in zip(uids, free):
+        assert eng.status(u) == "finished"
+        assert eng.result(u) == ref
+    assert eng.stats["restores"] >= crashes
+
+
+def test_checkpoint_crash_propagates_out_of_run_to_completion(
+        all_params):
+    """EngineCrash is NOT absorbed the way tick-abort ChaosError is:
+    run_to_completion re-raises it (process death has no in-process
+    recovery — the recovery story is restore())."""
+    params = all_params["tiny"]
+    chaos = ChaosInjector(ChaosConfig(seed=0, rate=1.0,
+                                      corrupt_logits=False,
+                                      fail_gather=False,
+                                      raise_mid_tick=False,
+                                      crash_mid_tick=True))
+    eng = ServeEngine(params, TINY, slots=1, max_len=MAX_LEN,
+                      prefill_chunk=8, chaos=chaos)
+    eng.submit(_prompts(TINY.vocab_size, n=1)[0], 2)
+    with pytest.raises(EngineCrash):
+        eng.run_to_completion()
+
+
+# ---------------------------------------------------------------------------
+# torn / mismatched checkpoints fail loudly; .old fallback
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_corruption_raises_never_resumes_wrong(all_params,
+                                                          tmp_path):
+    params = all_params["tiny"]
+    eng = ServeEngine(params, TINY, slots=1, max_len=MAX_LEN,
+                      prefill_chunk=8, page_size=8, cache_pages=16)
+    eng.submit(_prompts(TINY.vocab_size, n=1)[0], MAX_NEW)
+    eng.step()
+    ck = str(tmp_path / "ckpt")
+    eng.checkpoint(ck)
+
+    # flipped byte in state.json -> checksum mismatch
+    sp = os.path.join(ck, "state.json")
+    raw = open(sp, "rb").read()
+    open(sp, "wb").write(raw[:-2] + bytes([raw[-2] ^ 0xFF]) + raw[-1:])
+    with pytest.raises(CheckpointError):
+        ServeEngine.restore(ck, params, TINY)
+    open(sp, "wb").write(raw)
+
+    # truncated arrays.bin -> IntegrityError surfaced as CheckpointError
+    ap = os.path.join(ck, "arrays.bin")
+    araw = open(ap, "rb").read()
+    open(ap, "wb").write(araw[:-7])
+    with pytest.raises(CheckpointError):
+        ServeEngine.restore(ck, params, TINY)
+    open(ap, "wb").write(araw)
+
+    # wrong model / wrong A^3 mode -> refused, not garbled
+    other = ModelConfig("tiny2", "dense", num_layers=2, d_model=64,
+                        num_heads=4, num_kv_heads=2, d_ff=128,
+                        vocab_size=256, head_dim=16, dtype="float32")
+    with pytest.raises(CheckpointError):
+        ServeEngine.restore(ck, params, other)
+    with pytest.raises(CheckpointError):
+        ServeEngine.restore(ck, params, TINY,
+                            a3=A3Config.conservative())
+
+    # missing directory entirely
+    with pytest.raises(CheckpointError):
+        ServeEngine.restore(str(tmp_path / "nowhere"), params, TINY)
+
+    # intact checkpoint still restores after the round of vandalism
+    ServeEngine.restore(ck, params, TINY).run_to_completion()
+
+
+def test_checkpoint_interrupted_commit_falls_back_to_old(all_params,
+                                                         tmp_path):
+    """A crash between the two commit renames leaves only ``.old`` —
+    restore must pick up the previous complete checkpoint."""
+    params = all_params["tiny"]
+    prompts = _prompts(TINY.vocab_size, n=2)
+    kw = dict(slots=1, max_len=MAX_LEN, prefill_chunk=8)
+    free = _uninterrupted_tokens(params, TINY, prompts, **kw)
+    eng = ServeEngine(params, TINY, **kw)
+    uids = [eng.submit(p, MAX_NEW) for p in prompts]
+    eng.step()
+    ck = str(tmp_path / "ckpt")
+    eng.checkpoint(ck)
+    # simulate the torn window: the old checkpoint was shuffled aside
+    # and the process died before the new one was renamed into place
+    os.rename(ck, ck + ".old")
+    restored = ServeEngine.restore(ck, params, TINY)
+    restored.run_to_completion()
+    for u, ref in zip(uids, free):
+        assert restored.result(u) == ref
+
+
+# ---------------------------------------------------------------------------
+# bookkeeping round trip
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_preserves_statuses_queue_results_and_l2(all_params,
+                                                            tmp_path):
+    params = all_params["tiny"]
+    prompts = _prompts(TINY.vocab_size, n=4)
+    eng = ServeEngine(params, TINY, slots=1, max_len=MAX_LEN,
+                      prefill_chunk=8, page_size=8, cache_pages=24,
+                      l2_bytes=1 << 22)
+    u_done = eng.submit(prompts[0], 3)
+    eng.run_to_completion()
+    done_toks = eng.result(u_done)
+    u_cancel = eng.submit(prompts[1], 3)
+    assert eng.cancel(u_cancel)
+    eng._pc.spill(10 ** 6)              # park blobs in L2
+    assert len(eng._pc.l2) > 0
+    # the in-flight pair must NOT share the spilled prefix, or admission
+    # would promote the blobs back out of L2 before the checkpoint
+    fresh = _prompts(TINY.vocab_size, seed=11, n=2)
+    u_a, u_b = eng.submit(fresh[0], 3), eng.submit(fresh[1], 3)
+    eng.step()
+    n_blobs = len(eng._pc.l2)           # measured AT checkpoint time
+    assert n_blobs > 0
+
+    ck = str(tmp_path / "ckpt")
+    eng.checkpoint(ck)
+    restored = ServeEngine.restore(ck, params, TINY)
+    # terminal bookkeeping survives
+    assert restored.status(u_done) == "finished"
+    assert restored.result(u_done) == done_toks
+    assert restored.status(u_cancel) == "cancelled"
+    # in-flight set survives (one on the slot, one queued)
+    assert restored.in_flight == eng.in_flight == 2
+    assert restored.status(u_a) == eng.status(u_a)
+    assert restored.status(u_b) == eng.status(u_b)
+    # L2 blobs survive byte-for-byte (they carry their own checksums)
+    assert len(restored._pc.l2) == n_blobs
+    assert dict(restored._pc.l2.raw_items()) == dict(eng._pc.l2.raw_items())
+    # conservation identity holds on the restored engine
+    s = restored.stats
+    assert s["submitted"] == (s["finished"] + s["rejected"]
+                              + s["cancelled"] + s["expired"]
+                              + s["failed"] + restored.in_flight)
+    restored.run_to_completion()
+    assert restored.status(u_a) == restored.status(u_b) == "finished"

@@ -307,6 +307,53 @@ def test_lifecycle_refcount_audit_after_mixed_terminals(params, prompts):
     assert len(pc) == 0             # every node evicted
 
 
+def test_lifecycle_l2_refcount_audit_with_checkpoint_restore(
+        params, prompts, tmp_path):
+    """The PR-6 audit extended to the durable tiers: after mixed
+    terminals + forced evictions (demote to L2) + warm promotions + a
+    full checkpoint/restore cycle, refcounts are back at 0, the FULL
+    device pool is drainable, and the two tiers never double-hold a
+    page (every L2 key is disjoint from the live trie — promotion pops
+    the blob, demotion drops the node)."""
+    shared = np.asarray(prompts[3], np.int32)       # 31 tokens
+    eng = ServeEngine(params, TINY, slots=2, max_len=MAX_LEN,
+                      prefill_chunk=8, page_size=8, cache_pages=12,
+                      l2_bytes=1 << 22)
+    u0 = eng.submit(shared, max_new_tokens=3)
+    eng.run_to_completion()
+    assert eng.status(u0) == "finished"
+    u1 = eng.submit(np.concatenate([shared, shared])[:48],
+                    max_new_tokens=3)
+    eng.step()
+    assert eng.cancel(u1)                           # cancel mid-prefill
+    # force-demote the whole trie, then warm re-admit: promotions must
+    # pop their blobs (a page lives in exactly one tier)
+    assert eng._pc.spill(10 ** 6) > 0
+    u2 = eng.submit(shared, max_new_tokens=3)
+    eng.run_to_completion()
+    assert eng.status(u2) == "finished"
+    assert eng.stats["l2_hits"] > 0
+    # checkpoint/restore cycle: refs re-derive from the restored slots
+    ck = str(tmp_path / "ckpt")
+    eng.checkpoint(ck)
+    eng = ServeEngine.restore(ck, params, TINY)
+    _check_conservation(eng)
+
+    pc = eng._pc
+    assert pc.referenced_nodes == 0
+    live = {pc._path_of(n) for n in pc._nodes}
+    assert all(k not in live for k in pc.l2.keys())
+    # full pool drainable (draining demotes — the disjointness must
+    # keep holding as nodes move tiers)
+    got = [pc._alloc_page() for _ in range(pc.capacity)]
+    assert all(p is not None for p in got)
+    assert sorted(got) == list(range(pc.capacity))
+    assert len(pc) == 0
+    live = {pc._path_of(n) for n in pc._nodes}
+    assert live == set()
+    assert len(pc.l2) > 0           # drain demoted, never destroyed
+
+
 def test_lifecycle_conservation_under_churn(params, prompts):
     """Randomized churn: submit/cancel/step interleavings keep the
     conservation identity at every tick."""

@@ -471,6 +471,33 @@ def test_prefix_stats_invariant_cold_equals_warm_plus_reused(all_params):
         stats["warm"]["prefix_tokens_reused"]
 
 
+def test_prefix_flash_crowd_batched_admission_one_dispatch(all_params):
+    """The flash-crowd shape: N same-prefix requests admitted on ONE
+    tick warm-admit through a single stacked gather dispatch —
+    ``gather_dispatches`` counts 1, not N — and each still gets exactly
+    its cold-path tokens."""
+    params = all_params["tiny"]
+    prompts = _shared_prefix_prompts(TINY.vocab_size, n=4, seed=17)
+    refs = [_reference_generate(params, TINY, p) for p in prompts]
+    eng = ServeEngine(params, TINY, slots=3, max_len=MAX_LEN,
+                      prefill_chunk=PAGE, page_size=PAGE,
+                      cache_pages=64)
+    u0 = eng.submit(prompts[0], max_new_tokens=MAX_NEW)
+    eng.run_to_completion()
+    assert eng.result(u0) == refs[0]
+    assert eng.stats["gather_dispatches"] == 0
+    # all three slots free, three same-prefix arrivals: one tick must
+    # admit all of them through one stacked copy dispatch
+    uids = [eng.submit(p, max_new_tokens=MAX_NEW) for p in prompts[1:]]
+    eng.step()
+    assert eng.stats["prefix_hits"] == 3
+    assert eng.stats["gather_dispatches"] == 1
+    eng.run_to_completion()
+    for u, ref in zip(uids, refs[1:]):
+        assert eng.result(u) == ref
+    _engine_invariants(eng)
+
+
 # ---------------------------------------------------------------------------
 # decoder-level: the gather restores exactly the cold-prefill cache
 # ---------------------------------------------------------------------------
