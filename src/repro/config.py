@@ -330,6 +330,16 @@ class ServeConfig:
     # in-graph sampling, and the host syncs once per block to harvest
     # the [slots, T] token ring — host syncs per token ~ 1/T.
     decode_block: int = 1
+    # Dispatch pipelining: how many decode-block ring harvests may stay
+    # in flight (device-side, unharvested) behind the tick loop. 0 is
+    # the synchronous engine — each tick blocks on its own ring
+    # (bit-identical to the historical behavior, pinned by test). At
+    # depth d, tick N's ring is harvested only after tick N+d's
+    # dispatches are issued, so the device pipelines d+1 blocks while
+    # the host does bookkeeping on the harvested (delayed) view; the
+    # next block's input tokens come from the device-resident carry, so
+    # no harvest ever sits on the dispatch critical path.
+    pipeline_depth: int = 0
     # Route decode attention through the fused single-pass Pallas kernel
     # (TPU; the jnp reference path is the CPU/CI default).
     use_kernel: bool = False
@@ -394,6 +404,10 @@ class ServeConfig:
         if self.decode_block < 1:
             raise ValueError(
                 f"decode_block must be >= 1, got {self.decode_block}")
+        if self.pipeline_depth < 0:
+            raise ValueError(
+                f"pipeline_depth must be >= 0, got {self.pipeline_depth} "
+                f"(0 = synchronous harvest)")
         if self.page_size < 1:
             raise ValueError(
                 f"page_size must be >= 1, got {self.page_size}")

@@ -168,8 +168,10 @@ def lower_decode_block(cfg: ModelConfig, shape: ShapeConfig, mesh,
     iterations per dispatch under one ``lax.scan`` with in-graph greedy
     sampling and (A^3) in-graph re-sort — the serving engine's blocked
     inner loop, with per-lane ``steps_left`` masking and a donated
-    cache, on the production mesh. Returns the [B, steps] token ring
-    plus the updated cache."""
+    cache, on the production mesh. Returns the [B, steps] token ring,
+    the [B] final-token carry (the device-resident value the pipelined
+    engine feeds to the next block's dispatch), plus the updated
+    cache."""
     from repro.models.common import activation_shardings
     from repro.sharding.rules import act_specs
     if cfg.frontend:
@@ -195,7 +197,7 @@ def lower_decode_block(cfg: ModelConfig, shape: ShapeConfig, mesh,
                 a3=a3, resort_every=resort_every if use_a3 else 0)
 
     jf = jax.jit(fn, in_shardings=(pspecs, cspecs, rep, rep, rep),
-                 out_shardings=(None, cspecs), donate_argnums=(1,))
+                 out_shardings=(None, None, cspecs), donate_argnums=(1,))
     vec = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
     return jf.lower(params_shape, cache_shape, vec, vec, vec)
 

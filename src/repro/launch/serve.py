@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import argparse
 import collections
+import json
 import time
 
 import jax
@@ -76,6 +77,17 @@ def main() -> None:
                     help="decode steps per jitted dispatch (lax.scan with "
                          "in-graph sampling + A^3 re-sort; the host syncs "
                          "once per block)")
+    ap.add_argument("--pipeline-depth", type=int, default=0,
+                    help="decode-block harvests allowed to stay in "
+                         "flight behind the tick loop: tick N's ring is "
+                         "read back only after tick N+depth's dispatches "
+                         "issue (the next block's tokens ride the "
+                         "device-resident carry); 0 = synchronous "
+                         "harvest (bit-identical historical behavior)")
+    ap.add_argument("--stats-json", default="",
+                    help="write the engine stats dict (counters + "
+                         "per-phase tick_ns_* timings) as JSON to this "
+                         "path after the run drains; empty = no dump")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route decode attention through the fused "
                          "single-pass Pallas kernel (TPU)")
@@ -126,7 +138,8 @@ def main() -> None:
                         shed_policy=args.shed_policy,
                         deadline_ticks=args.deadline_ticks or None,
                         kv_quant=args.kv_quant,
-                        l2_bytes=args.l2_bytes)
+                        l2_bytes=args.l2_bytes,
+                        pipeline_depth=args.pipeline_depth)
 
     chaos = None
     if args.chaos_rate > 0.0:
@@ -162,6 +175,10 @@ def main() -> None:
     if chaos is not None:
         print(f"chaos: seed={args.chaos_seed} rate={args.chaos_rate} "
               f"events={chaos.events} victims={sorted(chaos.injected_uids)}")
+    if args.stats_json:
+        with open(args.stats_json, "w") as f:
+            json.dump(engine.stats, f, indent=2, sort_keys=True)
+        print(f"wrote engine stats to {args.stats_json}")
     if args.checkpoint_dir:
         engine.checkpoint(args.checkpoint_dir)
         print(f"checkpointed engine to {args.checkpoint_dir}")

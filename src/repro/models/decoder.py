@@ -524,9 +524,19 @@ def decode_block(
     temperature: float = 0.0,
     rng: Optional[jax.Array] = None,
     sample_ids: Optional[jax.Array] = None,   # [B] per-request sample keys
-) -> Tuple[jax.Array, Dict[str, Any]]:
+) -> Tuple[jax.Array, jax.Array, Dict[str, Any]]:
     """Run ``steps`` autoregressive decode steps in ONE dispatch via
-    ``lax.scan`` -> (token ring [B, steps] int32, new cache).
+    ``lax.scan`` -> (token ring [B, steps] int32, token carry [B] int32,
+    new cache).
+
+    The *carry* is the scan's final per-lane token — exactly the value a
+    caller would feed as ``token`` to the next block. Returning it as a
+    device array lets a serving loop chain blocks without ever
+    harvesting the ring on the critical path: the next dispatch consumes
+    the carry directly and the ring read becomes deferrable
+    bookkeeping. Frozen lanes (budget spent, ``pos = -1`` ride-alongs,
+    poisoned) pass their input token through unchanged, so the carry is
+    valid for every lane that was valid on entry.
 
     The whole inner loop is device-resident: each scan step (a) re-sorts
     due lanes' A^3 key columns in-graph (:func:`resort_sorted_keys` —
@@ -581,10 +591,10 @@ def decode_block(
                               jnp.where(advance, remaining - 1, remaining))
         return (token, pos, remaining, cache), emit
 
-    (_, _, _, cache), ring = jax.lax.scan(
+    (tok_f, _, _, cache), ring = jax.lax.scan(
         one_step, (token.astype(jnp.int32), pos, steps_left, cache),
         None, length=steps)
-    return jnp.moveaxis(ring, 0, 1), cache
+    return jnp.moveaxis(ring, 0, 1), tok_f, cache
 
 
 # ---------------------------------------------------------------------------

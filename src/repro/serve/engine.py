@@ -86,6 +86,56 @@ runs the admission state machine::
   counts blocking device reads — one ring harvest per decode dispatch
   plus the rare direct handoff reads, so ``host_syncs <=
   decode_dispatches + handoff_syncs``.
+* **Pipelined tick loop — device-resident carry + deferred harvest.**
+  ``decode_block`` also returns each lane's *last* scan token as a
+  device array (the cross-block token carry): the next block's input
+  token vector is that carry, so back-to-back decode dispatches chain
+  entirely on device with no host readback in between. With
+  ``pipeline_depth = d > 0`` the ring harvest itself is *deferred* —
+  each dispatch's ``[slots, 1+T]`` harvest array is queued, and BEFORE
+  each tick's dispatch the loop force-lands only the over-``d`` oldest
+  rings (dispatched ``d+1`` ticks ago, so the device has normally long
+  finished them) plus any newer rings that already completed. Up to
+  ``d`` blocks therefore stay in flight behind the device at all
+  times: the pipe stays primed, the device never drains dry waiting on
+  host bookkeeping, and the blocking host reads mostly find their data
+  ready (``host_sync_stalls`` counts the ones that did not). Host
+  bookkeeping
+  acts on the one-tick-delayed view: slot ``pos``/``budget`` advance
+  optimistically at dispatch time (the advance is deterministic in the
+  control words), while finish/poison/A^3-resort accounting runs at
+  harvest, guarded by per-row ``uid`` checks and a per-slot ``pending``
+  count so stale rows from released slots are dropped and a slot is
+  only FINISHED once its rings have all landed. ``pipeline_depth = 0``
+  harvests synchronously and is bit-identical to the historical
+  engine. Timeline at ``d = 1`` (H(n) = deferred harvest of block n,
+  issued before that tick's dispatch; block n is always fully behind
+  the device by the time its forced read issues)::
+
+      tick:      1          2          3          4          5
+      device:  [block 1]  [block 2]  [block 3]  [block 4]  [block 5]
+      host:     dispatch   dispatch   H(1)       H(2)       H(3)
+                                      dispatch   dispatch   dispatch
+
+  Checkpoints drain all pending harvests first, so snapshots stay
+  host-consistent and ``pending`` never serializes. On hosts where
+  XLA compute timeshares the tick loop's cores (single-core CI) the
+  overlap cannot move wall clock; the
+  ``virtual_device_latency_s`` constructor knob emulates an
+  accelerator's completion latency per decode block (a GIL-releasing
+  readiness floor on each queued harvest) so benches and tests can
+  observe the pipeline hiding device time that a synchronous loop
+  serializes on. Token streams are never affected by the knob.
+* **Packed control-block uploads.** All per-tick host->device control
+  scalars (prefill start/len/sort/sample columns; decode pos/budget/
+  sample ids/handoff mask) ride ONE packed int32 ``[slots, CTRL_COLS]``
+  array per tick; both the prefill and decode jits slice their columns
+  in-graph, so a tick issues a single small upload plus the token
+  block instead of ~9 scattered transfers. Per-phase wall time lands
+  in ``stats["tick_ns_prefill"] / tick_ns_decode / tick_ns_harvest /
+  tick_ns_host``, and ``stats["host_sync_stalls"]`` counts harvests
+  that actually blocked on an unfinished device computation
+  (``is_ready()`` false at drain time).
 * **Cache donation.** Both the prefill-chunk and decode-block jits
   donate the cache argument, so ring buffers and recurrent states
   update in place instead of being copied each tick.
@@ -181,6 +231,7 @@ import dataclasses
 import json
 import os
 import shutil
+import time
 import zlib
 from typing import Any, Callable, Deque, Dict, List, NamedTuple, Optional, \
     Tuple
@@ -214,6 +265,25 @@ def make_serve_step(
     return step
 
 
+# Packed control-word layout: the per-tick scatter of small host int
+# vectors (prefill pos/length/sort/sample columns, decode pos/budget/
+# uid/handoff columns) collapses into ONE [slots, CTRL_COLS] int32
+# upload shared by the prefill and decode dispatches — each jit slices
+# the columns it needs in-graph, so a steady-state decode tick uploads
+# exactly one small array (the token vector rides the device-resident
+# carry and never leaves the device at all).
+CTRL_P_POS = 0        # prefill: per-lane chunk start position
+CTRL_P_LEN = 1        # prefill: per-lane chunk length (0 = ride-along)
+CTRL_P_SORT = 2       # prefill: 1 = final chunk (fold the A^3 sort)
+CTRL_P_SPOS = 3       # prefill: sampling position for the handoff draw
+CTRL_P_SIDS = 4       # prefill: sampling uid for the handoff draw
+CTRL_D_POS = 5        # decode: per-lane next position (-1 = ride-along)
+CTRL_D_STEPS = 6      # decode: per-lane steps_left budget for the block
+CTRL_D_IDS = 7        # decode: per-request sampling uid
+CTRL_D_HMASK = 8      # decode: 1 = take the handoff first-token lane
+CTRL_COLS = 9
+
+
 def make_decode_block_step(
     cfg: ModelConfig,
     a3: A3Config = A3Config(),
@@ -224,27 +294,44 @@ def make_decode_block_step(
     temperature: float = 0.0,
 ) -> Callable:
     """Returns the blocked-decode dispatch: step(params, cache,
-    token [B], pos [B], steps_left [B][, rng, sample_ids]) ->
-    (ring [B, steps], new_cache). ``steps`` decode iterations run
-    device-resident under one ``lax.scan`` — in-graph sampling feeds
-    each step's token from the previous step's logits, and
-    ``resort_every > 0`` folds due lanes' A^3 fresh tails into the
-    sorted key columns in-graph (no host watermark read). The ``rng``
-    and per-request ``sample_ids`` arguments exist only when
-    ``temperature > 0`` (greedy dispatches keep the production
-    signature the dry-run lowers)."""
+    token [B], first_tok [B], ctrl [B, CTRL_COLS][, rng]) ->
+    (harvest [B, 1+steps], carry [B], new_cache). ``steps`` decode
+    iterations run device-resident under one ``lax.scan`` — in-graph
+    sampling feeds each step's token from the previous step's logits,
+    and ``resort_every > 0`` folds due lanes' A^3 fresh tails into the
+    sorted key columns in-graph (no host watermark read).
+
+    All small per-lane scalars (pos / steps_left / sample uid / the
+    handoff mask) arrive packed in the ``ctrl`` int32 block and are
+    sliced in-graph (``CTRL_D_*`` columns), so one upload feeds the
+    whole dispatch. The prefill->decode handoff select also happens
+    in-graph: lanes with ``ctrl[:, CTRL_D_HMASK]`` set take their input
+    token from ``first_tok`` (the prefill dispatch's device-resident
+    output). The returned ``harvest`` prepends the effective input
+    token column to the ring — it is the ONE array a host ever reads
+    back, and the read is deferrable: ``carry`` is the scan's final
+    per-lane token, feeding the next block's ``token`` argument
+    directly so chained blocks never wait on a harvest. The ``rng``
+    argument exists only when ``temperature > 0`` (greedy dispatches
+    keep the production signature the dry-run lowers)."""
+
+    def _run(params, cache, token, first_tok, ctrl, rng=None):
+        token = jnp.where(ctrl[:, CTRL_D_HMASK] > 0, first_tok, token)
+        ring, carry, cache = decoder.decode_block(
+            params, cfg, cache, token, ctrl[:, CTRL_D_POS],
+            ctrl[:, CTRL_D_STEPS], steps=steps, a3=a3,
+            use_kernel=use_kernel, resort_every=resort_every,
+            temperature=temperature, rng=rng,
+            sample_ids=ctrl[:, CTRL_D_IDS])
+        harvest = jnp.concatenate([token[:, None], ring], axis=1)
+        return harvest, carry, cache
 
     if temperature > 0.0:
-        def step(params, cache, token, pos, steps_left, rng, sample_ids):
-            return decoder.decode_block(
-                params, cfg, cache, token, pos, steps_left, steps=steps,
-                a3=a3, use_kernel=use_kernel, resort_every=resort_every,
-                temperature=temperature, rng=rng, sample_ids=sample_ids)
+        def step(params, cache, token, first_tok, ctrl, rng):
+            return _run(params, cache, token, first_tok, ctrl, rng)
     else:
-        def step(params, cache, token, pos, steps_left):
-            return decoder.decode_block(
-                params, cfg, cache, token, pos, steps_left, steps=steps,
-                a3=a3, use_kernel=use_kernel, resort_every=resort_every)
+        def step(params, cache, token, first_tok, ctrl):
+            return _run(params, cache, token, first_tok, ctrl)
 
     return step
 
@@ -252,19 +339,21 @@ def make_decode_block_step(
 def make_prefill_chunk_step(cfg: ModelConfig, *, a3: bool = False,
                             update_sort: bool = True,
                             temperature: float = 0.0) -> Callable:
-    """Returns step(params, cache, tokens [B, C], pos [B], length [B],
-    sort_lanes [B], sample_pos [B], sample_ids [B][, rng]) ->
-    (first_tok [B], new_cache) — the ragged chunked-prefill dispatch
-    with the device-resident prefill->decode handoff: each lane's
-    next-token draw from its last valid position's logits happens
-    in-graph, so finishing lanes hand their first generated token
-    straight to the same tick's decode block without a blocking read
-    (non-finishing lanes' entries are meaningless and ignored).
-    ``sort_lanes`` marks lanes on their final chunk (A^3: fold the
-    completed prompt into the column sort); ``update_sort=False`` builds
-    the cheaper specialization that treats the sorted-key leaves as
-    read-only (dispatched on ticks where no lane finishes its prompt).
-    The ``rng`` argument exists only when ``temperature > 0`` (greedy
+    """Returns step(params, cache, tokens [B, C], ctrl [B, CTRL_COLS]
+    [, rng]) -> (first_tok [B], new_cache) — the ragged chunked-prefill
+    dispatch with the device-resident prefill->decode handoff: each
+    lane's next-token draw from its last valid position's logits
+    happens in-graph, so finishing lanes hand their first generated
+    token straight to the same tick's decode block without a blocking
+    read (non-finishing lanes' entries are meaningless and ignored).
+    The per-lane scalars ride the shared packed ``ctrl`` upload
+    (``CTRL_P_*`` columns): chunk start ``pos``, chunk ``length``,
+    ``sort_lanes`` marking lanes on their final chunk (A^3: fold the
+    completed prompt into the column sort), and the handoff draw's
+    sampling position / uid. ``update_sort=False`` builds the cheaper
+    specialization that treats the sorted-key leaves as read-only
+    (dispatched on ticks where no lane finishes its prompt). The
+    ``rng`` argument exists only when ``temperature > 0`` (greedy
     dispatches keep the production signature)."""
 
     def _mark_poison(tok, logits):
@@ -276,21 +365,24 @@ def make_prefill_chunk_step(cfg: ModelConfig, *, a3: bool = False,
         return jnp.where(finite, tok, decoder.POISON)
 
     if temperature > 0.0:
-        def step(params, cache, tokens, pos, length, sort_lanes,
-                 sample_pos, sample_ids, rng):
+        def step(params, cache, tokens, ctrl, rng):
             logits, cache = decoder.prefill_chunk(
-                params, cfg, cache, tokens, pos, length, a3=a3,
-                sort_lanes=sort_lanes, update_sort=update_sort)
+                params, cfg, cache, tokens, ctrl[:, CTRL_P_POS],
+                ctrl[:, CTRL_P_LEN], a3=a3,
+                sort_lanes=ctrl[:, CTRL_P_SORT] > 0,
+                update_sort=update_sort)
             tok = decoder.sample_logits(logits, temperature=temperature,
-                                        rng=rng, pos=sample_pos,
-                                        ids=sample_ids)
+                                        rng=rng,
+                                        pos=ctrl[:, CTRL_P_SPOS],
+                                        ids=ctrl[:, CTRL_P_SIDS])
             return _mark_poison(tok, logits), cache
     else:
-        def step(params, cache, tokens, pos, length, sort_lanes,
-                 sample_pos, sample_ids):
+        def step(params, cache, tokens, ctrl):
             logits, cache = decoder.prefill_chunk(
-                params, cfg, cache, tokens, pos, length, a3=a3,
-                sort_lanes=sort_lanes, update_sort=update_sort)
+                params, cfg, cache, tokens, ctrl[:, CTRL_P_POS],
+                ctrl[:, CTRL_P_LEN], a3=a3,
+                sort_lanes=ctrl[:, CTRL_P_SORT] > 0,
+                update_sort=update_sort)
             return _mark_poison(decoder.sample_logits(logits),
                                 logits), cache
 
@@ -348,6 +440,11 @@ class SlotState:
     # absolute tick by which the request must finish (None = never):
     # enforced at tick boundaries by the engine's expiry sweep
     deadline: Optional[int] = None
+    # number of in-flight (unharvested) ring blocks referencing this
+    # lane: ``pos``/``budget`` advance optimistically at dispatch, but
+    # the lane may not FINISH until every referencing harvest has
+    # landed (its tokens live only on the device until then)
+    pending: int = 0
 
     @property
     def active(self) -> bool:
@@ -357,6 +454,28 @@ class SlotState:
     @property
     def decoding(self) -> bool:
         return self.phase == DECODING
+
+
+@dataclasses.dataclass
+class _PendingHarvest:
+    """One dispatched decode block whose ring is still device-side.
+
+    ``full`` is the dispatch's harvest output ``[slots, 1+T]`` (input
+    token column + ring). The host bookkeeping needed to land it is
+    frozen at dispatch time: ``handoff`` lanes take their first token
+    from column 0, ``lanes`` carry (slot, uid, steps-this-block,
+    position-before-block) for the generated/extend + A^3 watermark
+    mirror, and ``refs`` maps every referenced slot to the uid it held
+    at dispatch — a lane released (cancel / expire / poison) while its
+    harvest was in flight fails the uid guard and its rows are
+    dropped, never misattributed to a successor request."""
+    full: Any
+    handoff: List[Tuple[int, int]]
+    lanes: List[Tuple[int, int, int, int]]
+    refs: Dict[int, int]
+    # virtual-device emulation: earliest monotonic time this block is
+    # allowed to be read (0.0 = no emulation, real readiness governs)
+    ready_at: float = 0.0
 
 
 class ServeEngine:
@@ -375,6 +494,8 @@ class ServeEngine:
                  max_queue: int = 0, shed_policy: str = "reject-new",
                  deadline_ticks: Optional[int] = None,
                  kv_quant: str = "none", l2_bytes: int = 0,
+                 pipeline_depth: int = 0,
+                 virtual_device_latency_s: float = 0.0,
                  chaos: Optional[ChaosInjector] = None):
         if cfg.frontend:
             # the engine admits token prompts; frontend archs (audio /
@@ -455,6 +576,24 @@ class ServeEngine:
                                if deadline_ticks is not None else None)
         self._chaos = chaos
         self._draining = False
+        if int(pipeline_depth) < 0:
+            raise ValueError(f"pipeline_depth must be >= 0, got "
+                             f"{pipeline_depth} (0 = synchronous "
+                             f"harvest)")
+        self.pipeline_depth = int(pipeline_depth)
+        # virtual-device emulation: each decode block's ring becomes
+        # readable no earlier than dispatch + this latency, modelling
+        # an accelerator whose completion the host must wait out. On a
+        # host where XLA compute timeshares the same cores as the tick
+        # loop (single-core CI), this is the only way to observe the
+        # host/device overlap the pipelined drain buys: the wait is a
+        # GIL-releasing sleep, so the synchronous engine serializes on
+        # it while a primed pipeline hides it behind tick work.
+        # Token streams are unaffected — only readiness timing shifts.
+        if float(virtual_device_latency_s) < 0.0:
+            raise ValueError(f"virtual_device_latency_s must be >= 0, "
+                             f"got {virtual_device_latency_s}")
+        self.virtual_device_latency_s = float(virtual_device_latency_s)
         self.decode_block = max(1, int(decode_block))
         self.use_kernel = use_kernel
         # temperature > 0 is THE sampling switch: 0 pins greedy argmax
@@ -499,6 +638,21 @@ class ServeEngine:
         # decode harvest (or a direct read if no decode block runs)
         self._handoff: set = set()
         self._first_tok = None
+        # pipelined harvest state: dispatched-but-unharvested decode
+        # blocks (at most pipeline_depth stay in flight across ticks;
+        # depth 0 drains every block the tick that dispatched it —
+        # the synchronous engine, bit-identical), plus the device-
+        # resident cross-block token carry: the previous block's final
+        # per-lane token, consumed as the next block's input without
+        # ever rebuilding the lane vector from host state
+        self._pending: Deque[_PendingHarvest] = collections.deque()
+        self._token_carry = None
+        self._carry_ok = np.zeros((slots,), bool)
+        # cached constant device buffers (built once, reused every
+        # tick): the zero first-token vector fed to decode dispatches
+        # on ticks with no prefill handoff (constant shape/value — no
+        # per-tick upload)
+        self._zero_tok = jnp.zeros((slots,), jnp.int32)
         self._queue: Deque[Request] = collections.deque()
         self._done: Dict[int, List[int]] = {}
         # request lifecycle: uid -> status (QUEUED / PREFILLING /
@@ -525,7 +679,14 @@ class ServeEngine:
                       # engine checkpoint/restore)
                       "l2_spills": 0, "l2_hits": 0, "l2_evictions": 0,
                       "l2_integrity_drops": 0, "checkpoints": 0,
-                      "restores": 0}
+                      "restores": 0,
+                      # per-phase tick timing (monotonic-clock ns;
+                      # chaos delays are virtual so they add no wall
+                      # time) + harvest reads that actually blocked on
+                      # an unfinished device block
+                      "tick_ns_prefill": 0, "tick_ns_decode": 0,
+                      "tick_ns_harvest": 0, "tick_ns_host": 0,
+                      "host_sync_stalls": 0}
         # paged prefix cache: shared-prefix reuse across all mixer kinds
         # (cache_pages == 0 disables it — admission is byte-identical to
         # the cache-less engine, and no pool memory is allocated)
@@ -564,6 +725,7 @@ class ServeEngine:
                    deadline_ticks=serve.deadline_ticks,
                    kv_quant=serve.kv_quant,
                    l2_bytes=serve.l2_bytes,
+                   pipeline_depth=serve.pipeline_depth,
                    chaos=chaos)
 
     # -- public API ---------------------------------------------------------
@@ -688,15 +850,24 @@ class ServeEngine:
         return len(self._queue) + sum(1 for s in self.slots if s.active)
 
     def step(self):
-        """One engine tick: expire -> admit -> chunked prefill ->
-        blocked decode (the A^3 re-sort runs *inside* the decode
-        dispatch). With a chaos injector attached the injector is
-        consulted at each phase boundary and may abort the tick with
+        """One engine tick: expire -> admit -> plan + pack -> chunked
+        prefill -> blocked decode (the A^3 re-sort runs *inside* the
+        decode dispatch) -> deferred harvest. Both dispatch phases are
+        *planned* first against the post-admission slot table, their
+        per-lane scalars packed into one ``[slots, CTRL_COLS]`` int32
+        upload, and the prefill + decode dispatches issued
+        back-to-back before any host sync; the ring harvest at the
+        tail lands every block older than ``pipeline_depth``. With a
+        chaos injector attached the injector is consulted at each
+        phase boundary and may abort the tick with
         :class:`~repro.serve.chaos.ChaosError` — every phase leaves the
         engine consistent, so the next tick simply resumes (the
         caller counts the abort; ``run_to_completion`` does)."""
         self.stats["ticks"] += 1
         tick = self.stats["ticks"]
+        t0 = time.monotonic_ns()
+        h0 = self.stats["tick_ns_harvest"]
+        p_ns = d_ns = 0
         ch = self._chaos
         if ch is not None:
             ch.phase(tick, "tick_start")
@@ -705,6 +876,7 @@ class ServeEngine:
                 # wall-clock-free replacement for the old time.sleep
                 # delay — deterministic, and deadlines still elapse)
                 self.stats["chaos_delayed_ticks"] += 1
+                self.stats["tick_ns_host"] += time.monotonic_ns() - t0
                 return
             spill = ch.pick_spill(tick)
             if spill and self._pc is not None:
@@ -713,11 +885,37 @@ class ServeEngine:
         self._admit()
         if ch is not None:
             ch.phase(tick, "pre_prefill")
-        self._prefill_tick()
+        if any(s.phase == PREFILLING for s in self.slots):
+            # an aborted tick (injected mid-tick raise) can leave
+            # handoff first tokens unharvested; resolve them with a
+            # direct read BEFORE the prefill dispatch overwrites
+            # ``_first_tok`` (and before planning reads slot state)
+            self._flush_stale_handoff()
+        # plan both dispatch phases, pack their control words into ONE
+        # transfer (the decode plan simulates the prefill plan's slot
+        # transitions, so it needs no sync in between)
+        ctrl = np.zeros((len(self.slots), CTRL_COLS), np.int32)
+        ctrl[:, CTRL_D_POS] = -1
+        plan_p = self._plan_prefill(ctrl)
+        plan_d = self._plan_decode(plan_p, ctrl)
+        ctrl_dev = (jnp.asarray(ctrl)
+                    if plan_p is not None or plan_d is not None else None)
+        tp = time.monotonic_ns()
+        self._prefill_tick(plan_p, ctrl_dev)
+        p_ns = time.monotonic_ns() - tp
         if ch is not None:
             ch.phase(tick, "pre_advance")
         self._corrupt_tick()
-        self._advance()
+        hd = self.stats["tick_ns_harvest"]
+        td = time.monotonic_ns()
+        self._advance(plan_d, ctrl_dev)
+        d_ns = max(0, time.monotonic_ns() - td
+                   - (self.stats["tick_ns_harvest"] - hd))
+        self.stats["tick_ns_prefill"] += p_ns
+        self.stats["tick_ns_decode"] += d_ns
+        self.stats["tick_ns_host"] += max(
+            0, time.monotonic_ns() - t0 - p_ns - d_ns
+            - (self.stats["tick_ns_harvest"] - h0))
 
     def run_to_completion(self, max_ticks: int = 10_000):
         """Tick until no work remains. Injected tick aborts
@@ -766,7 +964,10 @@ class ServeEngine:
                 "shed_policy": self.shed_policy,
                 "deadline_ticks": self.deadline_ticks,
                 "kv_quant": self.kv_quant,
-                "l2_bytes": self.l2_bytes}
+                "l2_bytes": self.l2_bytes,
+                "pipeline_depth": self.pipeline_depth,
+                "virtual_device_latency_s":
+                    self.virtual_device_latency_s}
 
     def checkpoint(self, path: str) -> None:
         """Snapshot the complete serving state to directory ``path``
@@ -784,9 +985,15 @@ class ServeEngine:
         blob, so a torn or bit-rotted checkpoint fails restore loudly
         (:class:`~repro.serve.page_store.CheckpointError`) instead of
         resuming with silently wrong state."""
-        # resolve any pending device-resident handoff tokens first:
-        # the snapshot must be host-consistent at a tick boundary
+        # land every in-flight ring harvest and resolve any pending
+        # device-resident handoff tokens first: the snapshot must be
+        # host-consistent at a tick boundary (a crash between a
+        # dispatch and its deferred harvest loses only post-checkpoint
+        # work — the restored engine re-decodes those tokens
+        # bit-identically)
+        self._drain_harvests()
         self._flush_stale_handoff()
+        self._finish_done_slots()
         slots_meta = []
         for s in self.slots:
             rec = None
@@ -965,6 +1172,7 @@ class ServeEngine:
         if s.rec_node is not None and self._pc is not None:
             self._pc.unref(s.rec_node)
         self._handoff.discard(si)
+        self._carry_ok[si] = False
         self._terminal(s.uid, status)
         self.slots[si] = SlotState()
 
@@ -1058,18 +1266,19 @@ class ServeEngine:
                                        deadline=req.deadline)
             self._status[req.uid] = PREFILLING
 
-    def _prefill_tick(self):
-        """Advance every PREFILLING slot by one prompt chunk in a single
-        ragged padded dispatch; finishing lanes' first tokens are
-        sampled in-graph and stay on device for the decode handoff."""
+    def _plan_prefill(self, ctrl: np.ndarray) -> Optional[Dict[str, Any]]:
+        """Plan this tick's chunked-prefill dispatch against the
+        post-admission slot table WITHOUT touching any state: compute
+        each PREFILLING lane's chunk ``take`` (page-boundary clamping
+        included) and write the ``CTRL_P_*`` columns of the shared
+        packed control block. Returns None when no lane prefills. The
+        decode plan consumes the result to simulate the prefill's
+        slot transitions, so both dispatches issue back-to-back off
+        one upload with no sync between them."""
         pre = [si for si, s in enumerate(self.slots)
                if s.phase == PREFILLING]
         if not pre:
-            return
-        # an aborted tick (injected mid-tick raise) can leave handoff
-        # first tokens unharvested; resolve them with a direct read
-        # BEFORE this dispatch overwrites ``_first_tok``
-        self._flush_stale_handoff()
+            return None
         n, c = len(self.slots), self._chunk
         # adaptive chunking: decoders active -> shrink the admission
         # stall to the floor; cold queue -> drain at the full chunk
@@ -1079,11 +1288,7 @@ class ServeEngine:
             self.stats["adaptive_shrink_ticks"] += 1
         ps = self.page_size
         tokens = np.zeros((n, c), np.int32)
-        pos = np.zeros((n,), np.int32)
-        length = np.zeros((n,), np.int32)
-        sort_lanes = np.zeros((n,), bool)
-        sample_pos = np.zeros((n,), np.int32)
-        sample_ids = np.zeros((n,), np.int32)
+        sort_any = False
         takes = {}
         for si in pre:
             s = self.slots[si]
@@ -1114,24 +1319,37 @@ class ServeEngine:
                     if aligned > s.cursor:
                         take = aligned - s.cursor
             tokens[si, :take] = s.prompt[s.cursor:s.cursor + take]
-            pos[si] = s.cursor
-            length[si] = take
+            ctrl[si, CTRL_P_POS] = s.cursor
+            ctrl[si, CTRL_P_LEN] = take
             takes[si] = take
             # A^3 sort amortization: fold into the column sort only on
             # the prompt's final chunk (one sort per admitted prompt).
-            sort_lanes[si] = s.cursor + take >= len(s.prompt)
+            if s.cursor + take >= len(s.prompt):
+                ctrl[si, CTRL_P_SORT] = 1
+                sort_any = True
             # sampling key for the in-graph first-token draw, keyed at
             # the producing position len(prompt)-1 (== cursor+take-1 on
             # the final chunk; meaningless and unused for other lanes)
-            sample_pos[si] = s.cursor + take - 1
-            sample_ids[si] = s.uid
+            ctrl[si, CTRL_P_SPOS] = s.cursor + take - 1
+            ctrl[si, CTRL_P_SIDS] = s.uid
+        return {"pre": pre, "takes": takes, "tokens": tokens,
+                "sort_any": sort_any}
+
+    def _prefill_tick(self, plan: Optional[Dict[str, Any]],
+                      ctrl_dev) -> None:
+        """Advance every PREFILLING slot by one prompt chunk in a single
+        ragged padded dispatch (planned by :meth:`_plan_prefill`);
+        finishing lanes' first tokens are sampled in-graph and stay on
+        device for the decode handoff."""
+        if plan is None:
+            return
+        pre, takes = plan["pre"], plan["takes"]
+        ps = self.page_size
         fn = self._prefill
-        if self._prefill_nosort is not None and not sort_lanes.any():
+        if self._prefill_nosort is not None and not plan["sort_any"]:
             fn = self._prefill_nosort
-        args = (self.params, self.cache, jnp.asarray(tokens),
-                jnp.asarray(pos), jnp.asarray(length),
-                jnp.asarray(sort_lanes), jnp.asarray(sample_pos),
-                jnp.asarray(sample_ids))
+        args = (self.params, self.cache, jnp.asarray(plan["tokens"]),
+                ctrl_dev)
         if self._sample_rng is not None:
             first_tok, self.cache = fn(*args, self._sample_rng)
         else:
@@ -1185,9 +1403,13 @@ class ServeEngine:
         direct read. Only an injected mid-tick abort between the
         prefill dispatch and the decode harvest leaves any — in normal
         operation the same tick's ``_advance`` always consumes the
-        handoff set, so this never fires (and never costs a sync)."""
+        handoff set, so this never fires (and never costs a sync).
+        Pending ring harvests land first so ``generated`` is current
+        before the finish check runs."""
         if not self._handoff:
             return
+        self._drain_harvests()
+        th = time.monotonic_ns()
         first = np.asarray(self._first_tok)
         self.stats["host_syncs"] += 1
         self.stats["handoff_syncs"] += 1
@@ -1200,25 +1422,70 @@ class ServeEngine:
                 self._release_slot(si, FAILED)
             else:
                 s.generated.append(tok)
+            # the lane's token never entered a decode block, so the
+            # device carry has no valid entry for it: the next block
+            # rebuilds its input from ``generated`` (cold path)
+            self._carry_ok[si] = False
         self._handoff = set()
         self._first_tok = None
+        self.stats["tick_ns_harvest"] += time.monotonic_ns() - th
         self._finish_done_slots()
 
-    def _advance(self):
+    def _plan_decode(self, plan_p: Optional[Dict[str, Any]],
+                     ctrl: np.ndarray) -> Optional[Dict[str, Any]]:
+        """Plan this tick's decode block against the slot table AS IT
+        WILL BE after the planned prefill dispatch lands: lanes on
+        their final prompt chunk join the handoff set with
+        ``pos = len(prompt)`` and one budget unit spent on the in-graph
+        first token. The simulation is exact (the prefill bookkeeping
+        applies the same ``takes``), which is what lets both dispatches
+        issue off one packed upload with no sync between them. Writes
+        the ``CTRL_D_*`` columns; returns None when no lane can
+        advance (the caller then handles any direct handoff reads)."""
+        handoff = set(self._handoff)
+        state: Dict[int, Tuple[int, int]] = {}
+        for si, s in enumerate(self.slots):
+            if s.decoding:
+                state[si] = (s.pos, s.budget)
+            elif plan_p is not None and si in plan_p["takes"]:
+                if s.cursor + plan_p["takes"][si] >= len(s.prompt):
+                    # finishes its prompt this tick: decodes from
+                    # pos = len(prompt) with the first token's budget
+                    # unit already spent (sampled in-graph)
+                    state[si] = (len(s.prompt), s.budget - 1)
+                    handoff.add(si)
+        active = [si for si in sorted(state)
+                  if state[si][1] > 0 and state[si][0] < self.max_len - 1]
+        # the handoff mask covers ALL handoff lanes — ride-along ones
+        # included, so their first token reaches the host via the
+        # harvest's input column even when they cannot advance
+        for si in handoff:
+            ctrl[si, CTRL_D_HMASK] = 1
+        if not active:
+            return None
+        n = len(self.slots)
+        steps_left = np.zeros((n,), np.int32)
+        pos0 = {}
+        for si in active:
+            p, b = state[si]
+            steps_left[si] = min(b, self.max_len - 1 - p)
+            pos0[si] = p
+            ctrl[si, CTRL_D_POS] = p
+            ctrl[si, CTRL_D_STEPS] = steps_left[si]
+            ctrl[si, CTRL_D_IDS] = self.slots[si].uid
+        return {"active": active, "steps_left": steps_left, "pos0": pos0}
+
+    def _advance(self, plan: Optional[Dict[str, Any]], ctrl_dev) -> None:
         handoff = self._handoff
         self._handoff = set()
-        # lanes that can advance at least one step: unexhausted budget
-        # and below the max_len clamp (a prompt of length >= max_len
-        # finishes with just its prefill token — it rides along at
-        # pos = -1 so its first token still arrives via the harvest)
-        active = [si for si, s in enumerate(self.slots)
-                  if s.decoding and s.budget > 0
-                  and s.pos < self.max_len - 1]
-        if not active:
+        if plan is None:
+            # nothing can advance: land anything still in flight, then
+            # resolve handoff lanes with a direct read (rare — every
+            # handoff lane finished with its prefill token, from
+            # budget == 1 or a max_len-length prompt)
+            self._drain_harvests()
             if handoff:
-                # no decode block to ride: read the first tokens directly
-                # (rare — every handoff lane finished with its prefill
-                # token, from budget == 1 or a max_len-length prompt)
+                th = time.monotonic_ns()
                 first = np.asarray(self._first_tok)
                 self.stats["host_syncs"] += 1
                 self.stats["handoff_syncs"] += 1
@@ -1232,46 +1499,55 @@ class ServeEngine:
                         self._release_slot(si, FAILED)
                     else:
                         s.generated.append(tok)
+                    self._carry_ok[si] = False
+                self.stats["tick_ns_harvest"] += time.monotonic_ns() - th
             self._finish_done_slots()
             return
         # blocked ragged decode: every advanceable slot moves up to
         # ``decode_block`` tokens in ONE jitted dispatch — sampling,
-        # token feedback, and the A^3 re-sort all happen in-graph, and
-        # the host syncs once per block to harvest the emitted-token
-        # ring. Idle/prefilling slots ride along at pos=-1 (dropped ring
-        # writes, masked recurrent state); lanes that exhaust their
-        # budget or hit max_len mid-block are masked off in-graph via
-        # ``steps_left``.
+        # token feedback, the handoff select, and the A^3 re-sort all
+        # happen in-graph off the packed ctrl upload. Idle/prefilling
+        # slots ride along at pos=-1 (dropped ring writes, masked
+        # recurrent state); lanes that exhaust their budget or hit
+        # max_len mid-block are masked off in-graph via ``steps_left``.
         n, t = len(self.slots), self.decode_block
-        tokens = np.zeros((n,), np.int32)
-        pos = np.full((n,), -1, np.int32)
-        steps_left = np.zeros((n,), np.int32)
-        for si in active:
-            s = self.slots[si]
-            if s.generated:
-                tokens[si] = s.generated[-1]
-            pos[si] = s.pos
-            steps_left[si] = min(s.budget, self.max_len - 1 - s.pos)
-        token_dev = jnp.asarray(tokens)
-        if handoff:
-            # handoff lanes' input token lives on device: select it into
-            # the lane vector without a blocking read (covers ALL
-            # handoff lanes — ride-along ones included, so their first
-            # token reaches the host via the harvest's input column)
-            hmask = np.zeros((n,), bool)
-            hmask[sorted(handoff)] = True
-            token_dev = jnp.where(jnp.asarray(hmask), self._first_tok,
-                                  token_dev)
-        args = (self.params, self.cache, token_dev,
-                jnp.asarray(pos), jnp.asarray(steps_left))
-        if self._sample_rng is not None:
-            ids = np.zeros((n,), np.int32)
-            for si in active:         # per-request key stream (fold by uid)
-                ids[si] = self.slots[si].uid
-            ring, self.cache = self._decode_block(*args, self._sample_rng,
-                                                  jnp.asarray(ids))
+        active, steps_left = plan["active"], plan["steps_left"]
+        # pipelined drain point (depth >= 1): land the over-depth
+        # OLDEST rings BEFORE this tick's dispatch, keeping up to
+        # ``depth`` blocks in flight behind the device. Draining only
+        # the excess is what keeps the pipe primed — the popped ring
+        # was dispatched depth+1 ticks ago and is (almost always)
+        # already computed, while the newer rings stay queued so the
+        # device never goes idle waiting on host bookkeeping. Depth 0
+        # instead drains synchronously after the dispatch below.
+        if self.pipeline_depth > 0:
+            self._drain_harvests(keep=self.pipeline_depth)
+        # input tokens: the previous block's device-resident carry, by
+        # construction the last emitted token of every lane that has
+        # ever decoded (handoff lanes take ``first_tok`` in-graph
+        # instead). Cold path — engine start, restore, or a lane whose
+        # carry a direct read invalidated — rebuilds the vector from
+        # host ``generated`` state, landing pending harvests first so
+        # that state is current.
+        if self._token_carry is None or \
+                any(not self._carry_ok[si] for si in active
+                    if si not in handoff):
+            self._drain_harvests()
+            tokens = np.zeros((n,), np.int32)
+            for si in active:
+                s = self.slots[si]
+                if s.decoding and s.generated:
+                    tokens[si] = s.generated[-1]
+            token_dev = jnp.asarray(tokens)
         else:
-            ring, self.cache = self._decode_block(*args)
+            token_dev = self._token_carry
+        first = self._first_tok if handoff else self._zero_tok
+        args = (self.params, self.cache, token_dev, first, ctrl_dev)
+        if self._sample_rng is not None:
+            full, carry, self.cache = self._decode_block(
+                *args, self._sample_rng)
+        else:
+            full, carry, self.cache = self._decode_block(*args)
         # decode_steps counts executed scan iterations (T per dispatch);
         # decode_steps_advanced counts sequential steps that advanced at
         # least one lane (the deepest lane's progress) — iterations past
@@ -1280,57 +1556,154 @@ class ServeEngine:
         self.stats["decode_steps_advanced"] += int(min(t, steps_left.max()))
         self.stats["decode_dispatches"] += 1
         self.stats["decode_blocks"] += 1
-        # THE host sync of the block: the ring prepended with the
-        # block's input tokens, which carries the handoff lanes' first
-        # tokens to the host for free
-        full = jnp.concatenate([token_dev[:, None], ring], axis=1)
-        ring_host = np.asarray(full)
-        self.stats["host_syncs"] += 1
-        for si in sorted(handoff):
+        # the carry is valid for every lane the block touched: active
+        # lanes end on their last emitted token, handoff lanes pass
+        # their first token through, every other previously-valid lane
+        # passes its carry through unchanged
+        self._token_carry = carry
+        for si in active:
+            self._carry_ok[si] = True
+        for si in handoff:
+            self._carry_ok[si] = True
+        # enqueue the harvest with its bookkeeping frozen at dispatch
+        # time, then advance pos/budget optimistically (``steps_left``
+        # is deterministic in them — the device executes exactly this
+        # schedule; only a poison release can cut a lane short, and
+        # the uid guard drops that lane's stale entries). Depth 0
+        # lands this block immediately (synchronous engine); depth d
+        # leaves it in flight for the pre-dispatch drain above, so
+        # finish/poison/deadline bookkeeping acts on the harvested
+        # (delayed) view while the device runs ahead.
+        entry = _PendingHarvest(
+            full=full,
+            handoff=[(si, self.slots[si].uid) for si in sorted(handoff)
+                     if self.slots[si].decoding],
+            lanes=[(si, self.slots[si].uid,
+                    int(min(t, steps_left[si])), plan["pos0"][si])
+                   for si in active if self.slots[si].decoding],
+            refs={},
+            ready_at=(time.monotonic() + self.virtual_device_latency_s
+                      if self.virtual_device_latency_s > 0.0 else 0.0))
+        for si, uid in entry.handoff:
+            entry.refs[si] = uid
+        for si, uid, nb, _pos0 in entry.lanes:
+            entry.refs[si] = uid
             s = self.slots[si]
-            if not s.decoding:
-                continue               # released while the token was stale
-            tok = int(ring_host[si, 0])
+            s.pos += nb
+            s.budget -= nb
+        for si in entry.refs:
+            self.slots[si].pending += 1
+        self._pending.append(entry)
+        if self.pipeline_depth == 0:
+            self._drain_harvests()
+        self._finish_done_slots()
+
+    def _drain_harvests(self, keep: int = 0):
+        """Land queued ring harvests oldest-first at ONE
+        synchronization point, leaving up to ``keep`` of the newest in
+        flight. The forced pops are the over-``keep`` excess — blocks
+        dispatched long enough ago that the device has normally
+        finished them — and any further blocks that already completed
+        ride along for free, so a drain batches as wide as the device
+        allows without ever waiting out work it just queued.
+        ``host_syncs`` grows once per drain event, not once per block;
+        ``host_sync_stalls`` counts drains where a forced block had
+        not finished computing when the read issued (a depth-0 drain
+        always stalls: it reads the block it just dispatched; a primed
+        pipeline's pre-dispatch drain mostly finds the data ready)."""
+        if len(self._pending) <= keep:
+            return
+        th = time.monotonic_ns()
+        now = time.monotonic()
+        entries = [self._pending.popleft()
+                   for _ in range(len(self._pending) - keep)]
+        if any(not _block_done(e.full) or e.ready_at > now
+               for e in entries):
+            self.stats["host_sync_stalls"] += 1
+        # opportunistic sweep: newer blocks that have already landed
+        # on-device cost nothing to read now and widen the gap to the
+        # next forced drain
+        while self._pending and _block_done(self._pending[0].full) \
+                and self._pending[0].ready_at <= now:
+            entries.append(self._pending.popleft())
+        self.stats["host_syncs"] += 1
+        for e in entries:
+            # virtual-device emulation: a block is unreadable before
+            # its emulated completion; the sleep releases the GIL, so
+            # real XLA compute (and nothing else, on the synchronous
+            # path) proceeds underneath it
+            wait = e.ready_at - time.monotonic()
+            if wait > 0.0:
+                time.sleep(wait)
+            self._apply_harvest(e, np.asarray(e.full))
+        self.stats["tick_ns_harvest"] += time.monotonic_ns() - th
+
+    def _apply_harvest(self, e: _PendingHarvest, h: np.ndarray):
+        """Run one block's deferred host bookkeeping against its
+        harvested rows: handoff first tokens off column 0, generated
+        extends + the A^3 watermark mirror off the ring columns, and
+        poison quarantine for lanes whose rows carry the sentinel.
+        Every row is uid-guarded — a lane released while the harvest
+        was in flight contributes nothing to its slot's successor."""
+        for si, uid in e.handoff:
+            s = self.slots[si]
+            if s.uid != uid or not s.decoding:
+                continue               # released while the block flew
+            tok = int(h[si, 0])
             if tok == decoder.POISON:
                 # non-finite prompt logits poisoned the handoff token:
                 # quarantine off the harvest the block already paid for
                 self._release_slot(si, FAILED)
             else:
                 s.generated.append(tok)
-        for si in active:
+        for si, uid, nb, pos0 in e.lanes:
             s = self.slots[si]
-            if not s.decoding:
-                continue               # failed via its handoff token above
-            nb = int(min(t, steps_left[si]))
-            row = ring_host[si, 1:1 + nb]
+            if s.uid != uid or not s.decoding:
+                continue               # failed via its handoff token,
+                                       # or released while the block flew
+            row = h[si, 1:1 + nb]
             if (row == decoder.POISON).any():
                 # the lane's logits went non-finite mid-block (POISON
                 # rode the existing harvest — no extra sync): FAIL the
                 # request and reclaim the slot; every other lane's
                 # tokens and cache state are bit-identical (the poison
-                # select is lane-local)
+                # select is lane-local, and a poisoned carry re-poisons
+                # any block the lane rode before this harvest landed)
                 self._release_slot(si, FAILED)
                 continue
             s.generated.extend(int(tok) for tok in row)
             if self._use_a3:
                 # mirror the in-graph watermark (checked before each
-                # step's ring write, exactly as resort_sorted_keys does)
-                for p in range(s.pos, s.pos + nb):
+                # step's ring write, exactly as resort_sorted_keys
+                # does) from the position the lane held at dispatch
+                for p in range(pos0, pos0 + nb):
                     if p - s.sorted_upto >= self.resort_every:
                         s.sorted_upto = p
                         self.stats["resorts"] += self._n_a3_segs
-            s.pos += nb
-            s.budget -= nb
-        self._finish_done_slots()
+        for si, uid in e.refs.items():
+            s = self.slots[si]
+            if s.uid == uid:
+                s.pending = max(0, s.pending - 1)
 
     def _finish_done_slots(self):
         for si, s in enumerate(self.slots):
-            if s.decoding and (s.budget <= 0
-                               or s.pos >= self.max_len - 1):
+            if s.decoding and s.pending == 0 \
+                    and (s.budget <= 0 or s.pos >= self.max_len - 1):
                 self._finish(si)
 
     def _finish(self, si: int):
         slot = self.slots[si]
         self._done[slot.uid] = slot.generated
         self._terminal(slot.uid, FINISHED)
+        self._carry_ok[si] = False
         self.slots[si] = SlotState()
+
+
+def _block_done(arr) -> bool:
+    """True when a dispatched block's output has finished computing
+    (so reading it back will not stall the host). Conservative: a
+    runtime without ``is_ready`` reports False (counts as a stall)."""
+    try:
+        return bool(arr.is_ready())
+    except AttributeError:             # pragma: no cover - runtime-dependent
+        return False

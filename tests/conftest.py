@@ -1,0 +1,23 @@
+"""Shared pytest plumbing.
+
+``jax.clear_caches()`` between test modules: a full-suite run in one
+process accumulates hundreds of compiled executables, and the CPU
+backend in this container segfaults inside ``backend_compile`` once
+enough of them pile up (reproducible at the same cumulative compile
+count regardless of which test is compiling — every module passes in
+isolation). Dropping jax's compilation caches at each module boundary
+keeps the per-process accumulation bounded; modules recompile their
+own jits, which they overwhelmingly do anyway (each builds engines
+against its own tiny configs), so the runtime cost is small.
+"""
+from __future__ import annotations
+
+import pytest
+
+import jax
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    jax.clear_caches()
+    yield

@@ -78,16 +78,20 @@ def test_chaos_poison_sentinel_rides_ring(params):
     first = jnp.argmax(logits, -1).astype(jnp.int32)
     pos = jnp.full((2,), 12, jnp.int32)
     left = jnp.full((2,), 4, jnp.int32)
-    ring_ok, _ = dec.decode_block(params, TINY, cache, first, pos, left,
-                                  steps=4)
-    ring_bad, _ = dec.decode_block(params, TINY,
-                                   corrupt_cache_lane(cache, 0),
-                                   first, pos, left, steps=4)
+    ring_ok, _, _ = dec.decode_block(params, TINY, cache, first, pos,
+                                     left, steps=4)
+    ring_bad, carry_bad, _ = dec.decode_block(params, TINY,
+                                              corrupt_cache_lane(cache, 0),
+                                              first, pos, left, steps=4)
     ring_ok, ring_bad = np.asarray(ring_ok), np.asarray(ring_bad)
     assert (ring_ok >= 0).all()
     assert ring_bad[0, 0] == dec.POISON          # poisoned once...
     assert (ring_bad[0, 1:] == -1).all()         # ...then frozen
     np.testing.assert_array_equal(ring_bad[1], ring_ok[1])
+    # the poisoned lane's carry froze at its input token — feeding it
+    # to a next block keeps the lane frozen (token != POISON guard is
+    # on the INPUT token; its non-finite logits re-poison regardless)
+    assert int(np.asarray(carry_bad)[0]) == int(first[0])
 
 
 def test_chaos_corrupt_cache_lane_targets_one_lane(params):
@@ -264,6 +268,12 @@ def test_chaos_rate_zero_is_injection_free(params, prompts):
     chaos = ChaosInjector(ChaosConfig(seed=9, rate=0.0))
     eng, uids = _run(params, prompts, chaos=chaos)
     assert chaos.events == []
-    assert eng.stats == free.stats
+    # stats must match counter-for-counter; the tick_ns_* keys are
+    # wall-clock timings and host_sync_stalls races the device's
+    # is_ready() against real time — both legitimately differ
+    strip = lambda st: {k: v for k, v in st.items()
+                        if not k.startswith("tick_ns")
+                        and k != "host_sync_stalls"}
+    assert strip(eng.stats) == strip(free.stats)
     for u, f in zip(uids, fu):
         assert eng.result(u) == free.result(f)

@@ -515,9 +515,14 @@ def test_decode_block_one_step_equals_decode_step(params):
     lg, cache_ref = dec.decode_step(params, TINY,
                                     jax.tree.map(lambda x: x, cache),
                                     tok, pos)
-    ring, cache_blk = dec.decode_block(params, TINY, cache, tok, pos,
-                                       jnp.asarray([1, 1], jnp.int32),
-                                       steps=1)
+    ring, carry, cache_blk = dec.decode_block(params, TINY, cache, tok,
+                                              pos,
+                                              jnp.asarray([1, 1],
+                                                          jnp.int32),
+                                              steps=1)
+    # the carry is the scan's final token — with one step, the ring's
+    # only column (the value the pipelined engine feeds the next block)
+    np.testing.assert_array_equal(np.asarray(carry), np.asarray(ring[:, 0]))
     np.testing.assert_array_equal(np.asarray(ring[:, 0]),
                                   np.asarray(jnp.argmax(lg, -1)))
     flat_b, _ = jax.tree_util.tree_flatten_with_path(cache_blk)
@@ -536,17 +541,21 @@ def test_decode_block_exhausted_lane_rides_along(params):
                            max_len=32)
     tok = jnp.asarray([5, 6], jnp.int32)
     pos = jnp.asarray([9, 9], jnp.int32)
-    ring, cache_blk = dec.decode_block(
+    ring, carry, cache_blk = dec.decode_block(
         params, TINY, jax.tree.map(lambda x: x, cache), tok, pos,
         jnp.asarray([4, 2], jnp.int32), steps=4)
-    ring = np.asarray(ring)
+    ring, carry = np.asarray(ring), np.asarray(carry)
     assert (ring[0] >= 0).all()
     assert (ring[1, :2] >= 0).all() and (ring[1, 2:] == -1).all()
+    # the carry holds each lane's LAST emitted token — the exhausted
+    # lane's froze at its final pre-exhaustion value, not at -1
+    assert carry[0] == ring[0, -1] and carry[1] == ring[1, 1]
     # lane 1's cache must equal a 2-step blocked decode of lane 1 alone
     cache1 = jax.tree.map(lambda x: x[:, 1:2], cache)
-    _, cache1_ref = dec.decode_block(params, TINY, cache1, tok[1:],
-                                     pos[1:], jnp.asarray([2], jnp.int32),
-                                     steps=2)
+    _, _, cache1_ref = dec.decode_block(params, TINY, cache1, tok[1:],
+                                        pos[1:],
+                                        jnp.asarray([2], jnp.int32),
+                                        steps=2)
     flat_b, _ = jax.tree_util.tree_flatten_with_path(cache_blk)
     flat_r, _ = jax.tree_util.tree_flatten_with_path(cache1_ref)
     for (ka, a), (kb, b) in zip(flat_b, flat_r):
