@@ -1,0 +1,88 @@
+"""Warn-only bench-trajectory guard: diff a fresh ``BENCH_serve.json``
+against the committed baseline's scenario headline numbers.
+
+  python benchmarks/check_regression.py --fresh /tmp/BENCH_serve.json \
+      [--baseline benchmarks/BENCH_serve.json] [--tolerance 0.30]
+
+Intended as a CI step AFTER regenerating the bench on the runner: it
+prints one line per headline (value, baseline, delta) and a ``WARN``
+marker when a headline moved past the tolerance in the bad direction.
+It ALWAYS exits 0 — CI bench hardware is noisy shared capacity, so
+the trajectory is surfaced, not enforced; a committed-baseline bump
+belongs in the PR that deliberately moves a headline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# (dotted path into BENCH_serve.json, direction) — the per-scenario
+# headline numbers worth watching. "higher" = bigger is better.
+HEADLINES = [
+    ("result.tok_per_s", "higher"),
+    ("result.tick_ms_p50", "lower"),
+    ("result.dispatches_per_tick", "lower"),
+    ("dispatch_compare.speedup", "higher"),
+    ("tail_latency.chunked.worst_over_decode_median", "lower"),
+    ("tail_latency_hybrid.chunked_ratio_growth", "lower"),
+    ("dispatch_pipeline.1.speedup_vs_sync", "higher"),
+    ("prefix_reuse.warm_admission_speedup", "higher"),
+    ("kv_quant.residency_ratio_at_equal_hbm", "higher"),
+    ("overload_shed.p99_improvement", "higher"),
+    ("l2_eviction_pressure.l2_hit_speedup_vs_cold", "higher"),
+]
+
+
+def _get(tree, dotted):
+    cur = tree
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur if isinstance(cur, (int, float)) else None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True,
+                    help="freshly generated BENCH_serve.json")
+    ap.add_argument("--baseline", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "BENCH_serve.json"))
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="relative regression past this fraction WARNs")
+    args = ap.parse_args()
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    warns = 0
+    for path, direction in HEADLINES:
+        fv, bv = _get(fresh, path), _get(base, path)
+        if fv is None or bv is None:
+            print(f"skip  {path}: missing "
+                  f"({'fresh' if fv is None else 'baseline'})")
+            continue
+        if bv == 0:
+            print(f"skip  {path}: zero baseline")
+            continue
+        rel = (fv - bv) / abs(bv)
+        regressed = rel < -args.tolerance if direction == "higher" \
+            else rel > args.tolerance
+        tag = "WARN " if regressed else "ok   "
+        warns += regressed
+        print(f"{tag}{path}: {fv:.4g} vs baseline {bv:.4g} "
+              f"({rel:+.1%}, {direction} is better)")
+    if warns:
+        print(f"{warns} headline(s) regressed past "
+              f"{args.tolerance:.0%} — warn-only, not failing the build")
+    else:
+        print("bench trajectory within tolerance")
+    return 0    # ALWAYS: this is a tripwire, not a gate
+
+
+if __name__ == "__main__":
+    sys.exit(main())

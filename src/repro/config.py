@@ -377,6 +377,23 @@ class ServeConfig:
     # to cold prefill, never wrong tokens). 0 disables the tier
     # (historical free-on-evict).
     l2_bytes: int = 0
+    # Telemetry plane (serve.telemetry): metrics registry + per-request
+    # span tracing + A^3 approximation-quality probes. Off (default) is
+    # bit-identical to the untelemetered engine; on adds host-side
+    # bookkeeping only — the A^3 probe rides the existing deferred ring
+    # harvest, so stats["host_syncs"] is pinned either way.
+    telemetry: bool = False
+    # Sample the in-graph A^3 quality probe on every N-th decode-block
+    # dispatch (1 = every block; larger = cheaper, sparser samples).
+    telemetry_every: int = 8
+    # Ring-buffer capacity of the structured trace-event log (oldest
+    # events drop first; the log is a flight recorder, not an archive).
+    trace_events: int = 4096
+    # Bounded retention of terminal per-request bookkeeping: keep at
+    # most this many terminal entries in the status/result maps (FIFO
+    # eviction), and pop results on first read. 0 = historical
+    # unbounded maps (a long-running engine grows without bound).
+    retain_results: int = 0
 
     def __post_init__(self):
         # fail at construction, not three layers deep in the engine: a
@@ -438,6 +455,17 @@ class ServeConfig:
             raise ValueError(
                 f"l2_bytes must be >= 0, got {self.l2_bytes} "
                 f"(0 disables the host-RAM L2 page tier)")
+        if self.telemetry_every < 1:
+            raise ValueError(
+                f"telemetry_every must be >= 1, got "
+                f"{self.telemetry_every}")
+        if self.trace_events < 1:
+            raise ValueError(
+                f"trace_events must be >= 1, got {self.trace_events}")
+        if self.retain_results < 0:
+            raise ValueError(
+                f"retain_results must be >= 0, got "
+                f"{self.retain_results} (0 = unbounded retention)")
 
 
 @dataclass(frozen=True)

@@ -80,6 +80,7 @@ def a3_decode_attention_compact(
     sk_scale: Optional[jax.Array] = None,     # [B, Hkv, NS, D] fp32
     k_scale: Optional[jax.Array] = None,      # [B, Hkv, S] fp32 per row
     v_scale: Optional[jax.Array] = None,      # [B, Hkv, S] fp32 per row
+    return_probe: bool = False,
 ) -> jax.Array:
     """A^3 decode with **sharded compaction** (SSPerf H3.v4).
 
@@ -106,6 +107,17 @@ def a3_decode_attention_compact(
     K/V blocks may be int8 too; scales are gathered along with the
     ``idx`` winners and applied to just the [C] compacted candidates —
     the exact softmax then runs in f32 over dequantized values.
+
+    **Quality probe** (``return_probe=True``): additionally returns a
+    ``[B, 2]`` float32 leaf of per-lane telemetry — mean candidate
+    count per kv head, and the *captured score mass* ratio (softmax
+    mass over the kept candidate set / full softmax mass over every
+    valid ring row, both measured against the full-score max in f32,
+    so the ratio is in [0, 1] by construction and 1.0 means the
+    approximation lost nothing this step). The probe scores the full
+    ring once (an exact-attention-score-sized einsum), so callers
+    sample it rather than running it every step. The attention output
+    itself is computed by the identical ops either way.
     """
     b, hq, d = q.shape
     _, hkv, s_len, dv = v.shape
@@ -224,4 +236,37 @@ def a3_decode_attention_compact(
     vcat = vc.astype(vdt).reshape(b, hkv, ns * c_loc, dv)
     out = jnp.einsum("bhgc,bhcd->bhgd", w.astype(vdt), vcat,
                      preferred_element_type=jnp.float32)
-    return out.reshape(b, hq, dv).astype(vdt)
+    out = out.reshape(b, hq, dv).astype(vdt)
+    if not return_probe:
+        return out
+
+    # ---- captured-score-mass probe: score the FULL ring once in f32,
+    # then compare the softmax mass at the kept candidate positions
+    # against the total. Both masses use the full-score values and the
+    # full-score max, so sel <= full holds exactly (candidate blocks
+    # are disjoint and top_k indices are distinct — no double counting).
+    kbf = kb.astype(jnp.float32)
+    if k_scale is not None:
+        kbf = kbf * k_scale.reshape(b, hkv, ns, sl)[..., None]
+    fs = jnp.einsum("bhgd,bhnld->bhgnl", qg, kbf,
+                    preferred_element_type=jnp.float32)
+    fs = jnp.where(valid_b[:, :, None], fs, -jnp.inf)  # [B,Hkv,G,NS,SL]
+    mxf = jnp.max(fs, axis=(3, 4), keepdims=True)      # [B,Hkv,G,1,1]
+    finite = jnp.isfinite(mxf)
+    full_mass = jnp.sum(
+        jnp.where(finite & (fs > -jnp.inf), jnp.exp(fs - mxf), 0.0),
+        axis=(3, 4))                                   # [B,Hkv,G]
+    idx_g = jnp.broadcast_to(idx[:, :, None],
+                             (b, hkv, group, ns, c_loc))
+    fsel = jnp.take_along_axis(fs, idx_g, axis=4)      # [B,Hkv,G,NS,Cl]
+    kept = (keep.reshape(b, hkv, group, ns, c_loc)
+            & live[:, :, None])
+    sel_mass = jnp.sum(
+        jnp.where(kept & finite & (fsel > -jnp.inf),
+                  jnp.exp(fsel - mxf), 0.0), axis=(3, 4))
+    ratio = jnp.where(full_mass > 0.0, sel_mass
+                      / jnp.maximum(full_mass, 1e-20), 0.0)
+    cand = jnp.sum(live, axis=(2, 3)).astype(jnp.float32)   # [B,Hkv]
+    probe = jnp.stack([jnp.mean(cand, axis=1),
+                       jnp.mean(ratio, axis=(1, 2))], axis=1)
+    return out, probe

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import argparse
 import collections
+import dataclasses
 import json
 import time
 
@@ -85,9 +86,36 @@ def main() -> None:
                          "device-resident carry); 0 = synchronous "
                          "harvest (bit-identical historical behavior)")
     ap.add_argument("--stats-json", default="",
-                    help="write the engine stats dict (counters + "
-                         "per-phase tick_ns_* timings) as JSON to this "
-                         "path after the run drains; empty = no dump")
+                    help="write a versioned engine-stats snapshot "
+                         "(schema tag + config echo + counters + "
+                         "metrics-registry dump when telemetry is on) "
+                         "as JSON to this path after the run drains; "
+                         "empty = no dump")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="enable the serving telemetry plane: metrics "
+                         "registry (TTFT/TPOT/queue-sojourn "
+                         "histograms), per-request span tracing, and "
+                         "in-graph A^3 quality probes (candidate "
+                         "count + captured-score-mass ratio, sampled "
+                         "per --telemetry-every). Adds zero host "
+                         "syncs; token streams are bit-identical")
+    ap.add_argument("--telemetry-every", type=int, default=8,
+                    help="sample the A^3 quality probe on every N-th "
+                         "decode-block dispatch")
+    ap.add_argument("--metrics-json", default="",
+                    help="write the metrics-registry snapshot "
+                         "(counters/gauges/histograms + the legacy "
+                         "stats view) as JSON to this path after the "
+                         "run; implies --telemetry")
+    ap.add_argument("--trace-out", default="",
+                    help="write the request-lifecycle event log as "
+                         "Chrome-trace JSON (chrome://tracing / "
+                         "Perfetto) to this path after the run; "
+                         "implies --telemetry")
+    ap.add_argument("--retain-results", type=int, default=0,
+                    help="bound terminal per-request bookkeeping to "
+                         "this many entries (FIFO eviction; results "
+                         "pop on first read); 0 = unbounded")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route decode attention through the fused "
                          "single-pass Pallas kernel (TPU)")
@@ -125,6 +153,7 @@ def main() -> None:
         cfg = smoke_variant(cfg)
     a3 = {"off": A3Config(), "conservative": A3Config.conservative(),
           "aggressive": A3Config.aggressive()}[args.a3]
+    telemetry = bool(args.telemetry or args.metrics_json or args.trace_out)
     serve = ServeConfig(slots=args.slots, max_len=args.max_len,
                         prefill_chunk=args.prefill_chunk or None,
                         prefill_chunk_min=args.prefill_chunk_min or None,
@@ -139,7 +168,10 @@ def main() -> None:
                         deadline_ticks=args.deadline_ticks or None,
                         kv_quant=args.kv_quant,
                         l2_bytes=args.l2_bytes,
-                        pipeline_depth=args.pipeline_depth)
+                        pipeline_depth=args.pipeline_depth,
+                        telemetry=telemetry,
+                        telemetry_every=args.telemetry_every,
+                        retain_results=args.retain_results)
 
     chaos = None
     if args.chaos_rate > 0.0:
@@ -176,9 +208,30 @@ def main() -> None:
         print(f"chaos: seed={args.chaos_seed} rate={args.chaos_rate} "
               f"events={chaos.events} victims={sorted(chaos.injected_uids)}")
     if args.stats_json:
+        snapshot = {
+            # versioned schema so bench/reanalyze tooling can diff
+            # runs (the flat dict lives under "stats", unchanged)
+            "schema": "a3-serve-stats/v2",
+            "config": {"arch": cfg.name, "a3": args.a3,
+                       "smoke": bool(args.smoke),
+                       "requests": args.requests,
+                       "prompt_len": args.prompt_len,
+                       "max_new": args.max_new,
+                       "seed": args.seed,
+                       "serve": dataclasses.asdict(serve)},
+            "stats": dict(engine.stats),
+        }
+        if engine.tm is not None:
+            snapshot["metrics"] = engine.tm.metrics_snapshot()
         with open(args.stats_json, "w") as f:
-            json.dump(engine.stats, f, indent=2, sort_keys=True)
+            json.dump(snapshot, f, indent=2, sort_keys=True)
         print(f"wrote engine stats to {args.stats_json}")
+    if args.metrics_json and engine.tm is not None:
+        engine.tm.write_metrics(args.metrics_json)
+        print(f"wrote metrics snapshot to {args.metrics_json}")
+    if args.trace_out and engine.tm is not None:
+        engine.tm.write_trace(args.trace_out)
+        print(f"wrote chrome trace to {args.trace_out}")
     if args.checkpoint_dir:
         engine.checkpoint(args.checkpoint_dir)
         print(f"checkpointed engine to {args.checkpoint_dir}")

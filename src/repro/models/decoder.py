@@ -365,12 +365,13 @@ def init_page_pool(cfg: ModelConfig, pages: int, page_size: int,
 
 def _decode_block(lp: Params, cache_slice: Dict[str, jax.Array],
                   h: jax.Array, pos: jax.Array, cfg: ModelConfig,
-                  seg: SegmentSpec, a3: A3Config, use_kernel: bool):
+                  seg: SegmentSpec, a3: A3Config, use_kernel: bool,
+                  probe: bool = False):
     h = shard_act(h, "hidden")
     hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
     o, new_slice = MIXERS[seg.kind].decode_step(
         lp, cache_slice, hn, cfg=cfg, seg=seg, pos=pos, a3=a3,
-        use_kernel=use_kernel)
+        use_kernel=use_kernel, probe=probe)
     h = h + o
     h, aux = _ffn_block(lp, h, cfg, seg)
     return h, new_slice, aux
@@ -386,6 +387,7 @@ def decode_step(
     input_embed: Optional[jax.Array] = None,    # [B, D]
     a3: A3Config = A3Config(),
     use_kernel: bool = False,
+    probe: bool = False,
 ) -> Tuple[jax.Array, Dict[str, Any]]:
     """One autoregressive step -> (logits [B, Vp], new cache).
 
@@ -394,6 +396,12 @@ def decode_step(
     token at its own ring slot and masks its own valid window, so a
     continuous-batching engine can advance slots at arbitrary position
     skew in a single dispatch.
+
+    ``probe=True`` (A^3 global-attention segments only) additionally
+    returns ``(logits, cache, (probe_sum [B, 2], n_probed_layers))``:
+    the per-layer (candidate count, captured-score-mass ratio) leaves
+    summed over every probed layer, for telemetry sampling. The logits
+    and cache are computed by the identical ops either way.
     """
     if input_embed is not None:
         h = input_embed[:, None, :].astype(jnp.dtype(cfg.dtype))
@@ -401,6 +409,7 @@ def decode_step(
         h = embed_tokens(params, cfg, token[:, None])
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (h.shape[0],))
     new_cache: Dict[str, Any] = {}
+    probe_sum, probe_layers = None, 0
     _RO = ("sk_vals", "sk_rows", "sorted_upto")
     for si, seg in enumerate(build_segments(cfg)):
         seg_cache = cache[f"seg{si}"]
@@ -410,12 +419,22 @@ def decode_step(
         def body(carry, xs):
             lp, cs, ro_s = xs
             out, ns, aux = _decode_block(lp, {**cs, **ro_s}, carry, pos,
-                                         cfg, seg, a3, use_kernel)
+                                         cfg, seg, a3, use_kernel,
+                                         probe=probe)
             return out, ns
 
         h, new_seg = jax.lax.scan(body, h, (params[f"seg{si}"], mut, ro))
+        if probe and "_probe" in new_seg:
+            pr = new_seg.pop("_probe")           # [L_seg, B, 2]
+            probe_sum = probe_sum + pr.sum(axis=0) if probe_sum is not None \
+                else pr.sum(axis=0)
+            probe_layers += pr.shape[0]
         new_cache[f"seg{si}"] = {**new_seg, **ro}
     logits = unembed(params, cfg, h)[:, 0]
+    if probe:
+        if probe_sum is None:
+            probe_sum = jnp.zeros((h.shape[0], 2), jnp.float32)
+        return logits, new_cache, (probe_sum, probe_layers)
     return logits, new_cache
 
 
@@ -524,6 +543,7 @@ def decode_block(
     temperature: float = 0.0,
     rng: Optional[jax.Array] = None,
     sample_ids: Optional[jax.Array] = None,   # [B] per-request sample keys
+    probe: bool = False,
 ) -> Tuple[jax.Array, jax.Array, Dict[str, Any]]:
     """Run ``steps`` autoregressive decode steps in ONE dispatch via
     ``lax.scan`` -> (token ring [B, steps] int32, token carry [B] int32,
@@ -559,6 +579,13 @@ def decode_block(
     so poison detection costs no extra sync and healthy lanes stay
     bit-identical. With ``steps=1`` this is exactly one
     :func:`decode_step` plus in-graph sampling.
+
+    ``probe=True`` (A^3 telemetry) returns a 4-tuple ``(ring, carry,
+    cache, probe [B, 3])`` where the probe accumulates, over the
+    block's *advanced* steps only, ``(samples, sum of per-step mean
+    candidate count, sum of per-step captured-score-mass ratio)`` per
+    lane — in-graph state that lands with the same ring harvest the
+    host already performs. The token/cache path runs the identical ops.
     """
     b = token.shape[0]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
@@ -566,13 +593,21 @@ def decode_block(
     do_resort = resort_every > 0 and a3.mode != A3Mode.OFF
 
     def one_step(carry, _):
-        token, pos, remaining, cache = carry
+        if probe:
+            token, pos, remaining, cache, acc = carry
+        else:
+            token, pos, remaining, cache = carry
         active = (pos >= 0) & (remaining > 0)
         eff_pos = jnp.where(active, pos, -1)
         if do_resort:
             cache = resort_sorted_keys(cache, eff_pos, resort_every)
-        logits, cache = decode_step(params, cfg, cache, token, eff_pos,
-                                    a3=a3, use_kernel=use_kernel)
+        if probe:
+            logits, cache, (psum, players) = decode_step(
+                params, cfg, cache, token, eff_pos, a3=a3,
+                use_kernel=use_kernel, probe=True)
+        else:
+            logits, cache = decode_step(params, cfg, cache, token, eff_pos,
+                                        a3=a3, use_kernel=use_kernel)
         nxt = sample_logits(logits, temperature=temperature, rng=rng,
                             pos=eff_pos, ids=sample_ids)
         # poison quarantine: a lane whose logits went non-finite — or
@@ -589,11 +624,24 @@ def decode_block(
         pos = jnp.where(advance, pos + 1, pos)
         remaining = jnp.where(poisoned, 0,
                               jnp.where(advance, remaining - 1, remaining))
+        if probe:
+            nl = max(players, 1)
+            step_row = jnp.stack(
+                [jnp.ones((b,), jnp.float32),
+                 psum[:, 0] / nl,
+                 jnp.clip(psum[:, 1] / nl, 0.0, 1.0)], axis=1)
+            acc = acc + jnp.where(advance[:, None], step_row, 0.0)
+            return (token, pos, remaining, cache, acc), emit
         return (token, pos, remaining, cache), emit
 
+    init = (token.astype(jnp.int32), pos, steps_left, cache)
+    if probe:
+        init = init + (jnp.zeros((b, 3), jnp.float32),)
+        (tok_f, _, _, cache, acc), ring = jax.lax.scan(
+            one_step, init, None, length=steps)
+        return jnp.moveaxis(ring, 0, 1), tok_f, cache, acc
     (tok_f, _, _, cache), ring = jax.lax.scan(
-        one_step, (token.astype(jnp.int32), pos, steps_left, cache),
-        None, length=steps)
+        one_step, init, None, length=steps)
     return jnp.moveaxis(ring, 0, 1), tok_f, cache
 
 

@@ -343,7 +343,8 @@ def _attn_prefill_chunk(lp: Params, state: Dict[str, jax.Array],
 
 def _attn_decode_step(lp: Params, state: Dict[str, jax.Array],
                       hn: jax.Array, *, cfg: ModelConfig, seg: SegmentSpec,
-                      pos: jax.Array, a3: A3Config, use_kernel: bool, **_
+                      pos: jax.Array, a3: A3Config, use_kernel: bool,
+                      probe: bool = False, **_
                       ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     b = hn.shape[0]
     hd = cfg.resolved_head_dim
@@ -381,8 +382,19 @@ def _attn_decode_step(lp: Params, state: Dict[str, jax.Array],
         fresh = slot_pos >= state["sorted_upto"][:, None]       # [B, w]
         sk = SortedKeys(values=shard_act(state["sk_vals"], "kv_cache"),
                         rows=shard_act(state["sk_rows"], "kv_cache"))
-        o = a3_decode_attention_compact(
-            q[:, :, 0], kc, vc, valid, a3, sk, fresh_mask=fresh)
+        if probe:
+            # A^3 quality probe (telemetry): captured-score-mass and
+            # candidate-count leaves ride the scan ys like any other
+            # mutable state and land with the ring harvest — zero
+            # extra host syncs. The attention output ops are identical
+            # with or without the probe.
+            o, pr = a3_decode_attention_compact(
+                q[:, :, 0], kc, vc, valid, a3, sk, fresh_mask=fresh,
+                return_probe=True)
+            new_state["_probe"] = pr
+        else:
+            o = a3_decode_attention_compact(
+                q[:, :, 0], kc, vc, valid, a3, sk, fresh_mask=fresh)
     elif use_a3:
         from repro.core.candidate_selection import sort_key_columns
         # no cached sort available: build inline (single-shot use)

@@ -215,6 +215,41 @@ queued`` sheds the head of the queue (freshest-first service under
 overload). ``drain()`` enters graceful shutdown: queued work is
 cancelled, in-flight work finishes, new submits are rejected.
 
+Telemetry span lifecycle
+------------------------
+
+With ``telemetry=True`` every request leaves a timeline in the ring-
+buffered trace (:mod:`repro.serve.telemetry`; Chrome-trace export).
+Spans and instants per request, in lifecycle order — tracks (``tid``)
+are the queue lane or the slot index the request occupies::
+
+    track "queue":  submit ▸──────[ queued ]──────▸ admit
+                      │   (queue-sojourn histogram, by terminal)
+    track slot i:         admit ▸ [prefill c0][prefill c1]...[prefill cN]
+                                  (one span per chunk dispatch, shared
+                                   ragged-dispatch wall time)
+                          ▸ first_token        (TTFT histogram keyed by
+                                                terminal state; sampled
+                                                in-graph, stamped when
+                                                the harvest lands)
+                          ▸ [decode_block][decode_block]...
+                                  (span = dispatch -> harvest: a
+                                   deferred-harvest stall is a visible
+                                   gap; TPOT histogram at terminal)
+                          ▸ terminal {finished|cancelled|expired|failed}
+    track "engine": host_sync_stall / checkpoint / restore /
+                    chaos_{delay,corrupt,spill,abort,gather_fail} /
+                    prefix-cache + L2 events (hit/evict/demote/promote)
+
+Metrics land in the registry (``serve_ttft_ns{terminal=...}``,
+``serve_tpot_ns``, ``serve_queue_sojourn_ns{...}``, A^3
+``serve_a3_captured_mass`` / ``serve_a3_candidates`` probe histograms
+sampled every ``telemetry_every`` decode dispatches), with the legacy
+``stats`` dict exported as ``serve_*`` counters through a zero-cost
+compatibility view. Telemetry off is bit-identical to the
+untelemetered engine; telemetry on adds **zero host syncs** — probes
+ride the deferred ring drain the host already performs.
+
 Chaos injection: constructed with a ``serve.chaos.ChaosInjector`` the
 engine consults the injector at tick phase boundaries (delay / abort),
 before decode dispatches (corrupt one decoding lane's mixer state so
@@ -247,6 +282,7 @@ from repro.serve.chaos import ChaosError, ChaosInjector, EngineCrash, \
 from repro.serve.page_store import CheckpointError, IntegrityError, \
     deserialize_tree, serialize_tree
 from repro.serve.prefix_cache import PrefixCache
+from repro.serve.telemetry import Telemetry
 
 
 def make_serve_step(
@@ -292,6 +328,7 @@ def make_decode_block_step(
     use_kernel: bool = False,
     resort_every: int = 0,
     temperature: float = 0.0,
+    probe: bool = False,
 ) -> Callable:
     """Returns the blocked-decode dispatch: step(params, cache,
     token [B], first_tok [B], ctrl [B, CTRL_COLS][, rng]) ->
@@ -313,16 +350,29 @@ def make_decode_block_step(
     per-lane token, feeding the next block's ``token`` argument
     directly so chained blocks never wait on a harvest. The ``rng``
     argument exists only when ``temperature > 0`` (greedy dispatches
-    keep the production signature the dry-run lowers)."""
+    keep the production signature the dry-run lowers).
+
+    ``probe=True`` builds the A^3 telemetry variant: the dispatch
+    returns ``(harvest, probe [B, 3], carry, new_cache)`` where the
+    probe accumulates in-graph (samples, candidate-count sum,
+    captured-score-mass-ratio sum) per lane over the block's advanced
+    steps — harvested alongside the ring at the same deferred read, so
+    sampling it adds zero host syncs. The token path runs identical
+    ops (see :func:`repro.models.decoder.decode_block`)."""
 
     def _run(params, cache, token, first_tok, ctrl, rng=None):
         token = jnp.where(ctrl[:, CTRL_D_HMASK] > 0, first_tok, token)
-        ring, carry, cache = decoder.decode_block(
+        out = decoder.decode_block(
             params, cfg, cache, token, ctrl[:, CTRL_D_POS],
             ctrl[:, CTRL_D_STEPS], steps=steps, a3=a3,
             use_kernel=use_kernel, resort_every=resort_every,
             temperature=temperature, rng=rng,
-            sample_ids=ctrl[:, CTRL_D_IDS])
+            sample_ids=ctrl[:, CTRL_D_IDS], probe=probe)
+        if probe:
+            ring, carry, cache, pr = out
+            harvest = jnp.concatenate([token[:, None], ring], axis=1)
+            return harvest, pr, carry, cache
+        ring, carry, cache = out
         harvest = jnp.concatenate([token[:, None], ring], axis=1)
         return harvest, carry, cache
 
@@ -476,6 +526,12 @@ class _PendingHarvest:
     # virtual-device emulation: earliest monotonic time this block is
     # allowed to be read (0.0 = no emulation, real readiness governs)
     ready_at: float = 0.0
+    # telemetry: the A^3 quality-probe array ([slots, 3], present only
+    # on sampled dispatches — it rides the same drain as ``full``, so
+    # reading it adds no host sync event) and the dispatch timestamp
+    # (monotonic ns) anchoring the block's trace span
+    probe: Any = None
+    t_dispatch: int = 0
 
 
 class ServeEngine:
@@ -496,6 +552,8 @@ class ServeEngine:
                  kv_quant: str = "none", l2_bytes: int = 0,
                  pipeline_depth: int = 0,
                  virtual_device_latency_s: float = 0.0,
+                 telemetry: bool = False, telemetry_every: int = 8,
+                 trace_events: int = 4096, retain_results: int = 0,
                  chaos: Optional[ChaosInjector] = None):
         if cfg.frontend:
             # the engine admits token prompts; frontend archs (audio /
@@ -594,6 +652,30 @@ class ServeEngine:
             raise ValueError(f"virtual_device_latency_s must be >= 0, "
                              f"got {virtual_device_latency_s}")
         self.virtual_device_latency_s = float(virtual_device_latency_s)
+        # telemetry plane: metrics registry + request tracing + A^3
+        # quality probes. OFF is the default and keeps every hot path
+        # byte-identical to the untelemetered engine (each hook sits
+        # behind one ``self._tm is not None`` check); ON adds host-side
+        # bookkeeping only — probe arrays ride the existing deferred
+        # ring drain, so ``stats["host_syncs"]`` is pinned either way.
+        if int(telemetry_every) < 1:
+            raise ValueError(f"telemetry_every must be >= 1, got "
+                             f"{telemetry_every}")
+        if int(trace_events) < 1:
+            raise ValueError(f"trace_events must be >= 1, got "
+                             f"{trace_events}")
+        if int(retain_results) < 0:
+            raise ValueError(f"retain_results must be >= 0, got "
+                             f"{retain_results} (0 = unbounded "
+                             f"retention)")
+        self.telemetry = bool(telemetry)
+        self.telemetry_every = int(telemetry_every)
+        self.trace_events = int(trace_events)
+        self.retain_results = int(retain_results)
+        self._tm: Optional[Telemetry] = None
+        if self.telemetry:
+            self._tm = Telemetry(trace_events=self.trace_events,
+                                 telemetry_every=self.telemetry_every)
         self.decode_block = max(1, int(decode_block))
         self.use_kernel = use_kernel
         # temperature > 0 is THE sampling switch: 0 pins greedy argmax
@@ -620,6 +702,19 @@ class ServeEngine:
                 resort_every=self.resort_every if self._use_a3 else 0,
                 temperature=self.temperature),
             donate_argnums=(1,))
+        # A^3 quality-probe variant: identical token/cache ops plus the
+        # in-graph (candidate count, captured-score-mass) accumulator.
+        # Built only when telemetry is on AND sorted-key state exists;
+        # dispatched every ``telemetry_every``-th decode block.
+        self._decode_block_probe = None
+        if self._tm is not None and self._use_a3 and self._n_a3_segs > 0:
+            self._decode_block_probe = jax.jit(
+                make_decode_block_step(
+                    cfg, a3, steps=self.decode_block,
+                    use_kernel=use_kernel,
+                    resort_every=self.resort_every,
+                    temperature=self.temperature, probe=True),
+                donate_argnums=(1,))
         self._prefill = jax.jit(
             make_prefill_chunk_step(cfg, a3=self._use_a3,
                                     temperature=self.temperature),
@@ -687,6 +782,16 @@ class ServeEngine:
                       "tick_ns_prefill": 0, "tick_ns_decode": 0,
                       "tick_ns_harvest": 0, "tick_ns_host": 0,
                       "host_sync_stalls": 0}
+        if self._tm is not None:
+            # compatibility view: the legacy stats dict is exported by
+            # the registry at exposition time (read by reference — the
+            # dict stays a plain dict, so checkpointing and the
+            # PrefixCache shared-stats contract are untouched)
+            self._tm.registry.attach_stats("serve_", self.stats)
+        # bounded retention of terminal bookkeeping (uid -> status /
+        # result): FIFO order of terminal transition; 0 = historical
+        # unbounded maps
+        self._terminal_order: Deque[int] = collections.deque()
         # paged prefix cache: shared-prefix reuse across all mixer kinds
         # (cache_pages == 0 disables it — admission is byte-identical to
         # the cache-less engine, and no pool memory is allocated)
@@ -699,6 +804,7 @@ class ServeEngine:
                                    kv_quant=self.kv_quant,
                                    l2_bytes=self.l2_bytes,
                                    stats=self.stats)
+            self._pc.tm = self._tm
             if self._pc.l2 is not None and chaos is not None:
                 # restore_corrupt site: flip a blob byte right before
                 # its verified L2 restore (checksum must catch it)
@@ -726,6 +832,10 @@ class ServeEngine:
                    kv_quant=serve.kv_quant,
                    l2_bytes=serve.l2_bytes,
                    pipeline_depth=serve.pipeline_depth,
+                   telemetry=serve.telemetry,
+                   telemetry_every=serve.telemetry_every,
+                   trace_events=serve.trace_events,
+                   retain_results=serve.retain_results,
                    chaos=chaos)
 
     # -- public API ---------------------------------------------------------
@@ -783,6 +893,8 @@ class ServeEngine:
         uid = self._uid
         self._uid += 1
         self.stats["submitted"] += 1
+        if self._tm is not None:
+            self._tm.on_submit(uid)
         if self._draining:
             self._terminal(uid, REJECTED)
             return uid
@@ -800,7 +912,15 @@ class ServeEngine:
 
     def result(self, uid: int) -> Optional[List[int]]:
         """Generated tokens for a FINISHED request, else None (still in
-        flight, or terminated rejected/cancelled/expired/failed)."""
+        flight, or terminated rejected/cancelled/expired/failed).
+
+        With bounded retention (``retain_results > 0``) a fetched
+        result is popped — the first read returns the tokens and
+        releases the engine's copy (later reads return None), so a
+        long-running engine's result map holds only unread results,
+        and at most ``retain_results`` of those."""
+        if self.retain_results > 0:
+            return self._done.pop(uid, None)
         return self._done.get(uid)
 
     def status(self, uid: int) -> str:
@@ -845,6 +965,11 @@ class ServeEngine:
         return self._draining
 
     @property
+    def tm(self) -> Optional[Telemetry]:
+        """The telemetry bundle (None unless ``telemetry=True``)."""
+        return self._tm
+
+    @property
     def in_flight(self) -> int:
         """Requests not yet terminal: queued plus on-slot."""
         return len(self._queue) + sum(1 for s in self.slots if s.active)
@@ -876,10 +1001,14 @@ class ServeEngine:
                 # wall-clock-free replacement for the old time.sleep
                 # delay — deterministic, and deadlines still elapse)
                 self.stats["chaos_delayed_ticks"] += 1
+                if self._tm is not None:
+                    self._tm.event("chaos_delay", tick=tick)
                 self.stats["tick_ns_host"] += time.monotonic_ns() - t0
                 return
             spill = ch.pick_spill(tick)
             if spill and self._pc is not None:
+                if self._tm is not None:
+                    self._tm.event("chaos_spill", tick=tick, pages=spill)
                 self._pc.spill(spill)
         self._expire_tick()
         self._admit()
@@ -934,6 +1063,9 @@ class ServeEngine:
                 raise
             except ChaosError:
                 self.stats["chaos_aborted_ticks"] += 1
+                if self._tm is not None:
+                    self._tm.event("chaos_abort",
+                                   tick=self.stats["ticks"])
             ticks += 1
         if self.in_flight:
             self.stats["max_ticks_exhausted"] += 1
@@ -967,7 +1099,11 @@ class ServeEngine:
                 "l2_bytes": self.l2_bytes,
                 "pipeline_depth": self.pipeline_depth,
                 "virtual_device_latency_s":
-                    self.virtual_device_latency_s}
+                    self.virtual_device_latency_s,
+                "telemetry": self.telemetry,
+                "telemetry_every": self.telemetry_every,
+                "trace_events": self.trace_events,
+                "retain_results": self.retain_results}
 
     def checkpoint(self, path: str) -> None:
         """Snapshot the complete serving state to directory ``path``
@@ -991,6 +1127,7 @@ class ServeEngine:
         # dispatch and its deferred harvest loses only post-checkpoint
         # work — the restored engine re-decodes those tokens
         # bit-identically)
+        t_ck = time.monotonic_ns()
         self._drain_harvests()
         self._flush_stale_handoff()
         self._finish_done_slots()
@@ -1022,6 +1159,11 @@ class ServeEngine:
                        "max_new": r.max_new_tokens,
                        "deadline": r.deadline} for r in self._queue],
             "slots": slots_meta}
+        if self._tm is not None:
+            # histogram/counter state round-trips so a restored
+            # engine's latency distributions continue instead of
+            # resetting (optional key: older checkpoints lack it)
+            state["telemetry"] = self._tm.dump_state()
         arrays: Dict[str, Any] = {"cache": self.cache}
         l2_blobs: List[bytes] = []
         if self._pc is not None:
@@ -1054,6 +1196,10 @@ class ServeEngine:
         os.rename(tmp, path)
         shutil.rmtree(old, ignore_errors=True)
         self.stats["checkpoints"] += 1
+        if self._tm is not None:
+            now = time.monotonic_ns()
+            self._tm.span("checkpoint", ts_ns=t_ck, dur_ns=now - t_ck,
+                          path=path)
 
     @classmethod
     def restore(cls, path: str, params: Any, cfg: ModelConfig,
@@ -1152,14 +1298,29 @@ class ServeEngine:
                     eng._pc.ref(node)
             eng.slots[si] = s
         eng.stats["restores"] += 1
+        if eng._tm is not None:
+            if "telemetry" in state:
+                eng._tm.load_state(state["telemetry"])
+            eng._tm.event("restore", tick=int(eng.stats["ticks"]))
         return eng
 
     # -- internals ------------------------------------------------------------
     def _terminal(self, uid: int, status: str):
         """Move a request to a terminal status exactly once and bump
-        the matching conservation counter."""
+        the matching conservation counter. With ``retain_results > 0``
+        the oldest terminal entries beyond the bound are dropped from
+        the status/result maps (the conservation counters above are
+        the durable record; the maps are a serving-window view)."""
         self._status[uid] = status
         self.stats[_TERMINAL[status]] += 1
+        if self._tm is not None:
+            self._tm.on_terminal(uid, status)
+        if self.retain_results > 0:
+            self._terminal_order.append(uid)
+            while len(self._terminal_order) > self.retain_results:
+                old = self._terminal_order.popleft()
+                self._status.pop(old, None)
+                self._done.pop(old, None)
 
     def _release_slot(self, si: int, status: str):
         """Reclaim a slot from ANY in-flight phase (cancel / expire /
@@ -1210,6 +1371,9 @@ class ServeEngine:
             self.stats["ticks"], sorted(decoding))
         if victim is None:
             return
+        if self._tm is not None:
+            self._tm.event("chaos_corrupt", uid=victim,
+                           track=decoding[victim])
         self.cache = corrupt_cache_lane(self.cache, decoding[victim])
 
     def _admit(self):
@@ -1240,6 +1404,9 @@ class ServeEngine:
                             # untouched and no trie ref was taken —
                             # fail the request, keep the slot free for
                             # the next one
+                            if self._tm is not None:
+                                self._tm.event("chaos_gather_fail",
+                                               uid=req.uid)
                             self._terminal(req.uid, FAILED)
                             continue
                     # pin the matched chain NOW: a later assignment's
@@ -1265,6 +1432,8 @@ class ServeEngine:
                                        sorted_upto=t, rec_node=node,
                                        deadline=req.deadline)
             self._status[req.uid] = PREFILLING
+            if self._tm is not None:
+                self._tm.on_admit(req.uid, si, reused_tokens=t)
 
     def _plan_prefill(self, ctrl: np.ndarray) -> Optional[Dict[str, Any]]:
         """Plan this tick's chunked-prefill dispatch against the
@@ -1350,11 +1519,21 @@ class ServeEngine:
             fn = self._prefill_nosort
         args = (self.params, self.cache, jnp.asarray(plan["tokens"]),
                 ctrl_dev)
+        t_disp = time.monotonic_ns() if self._tm is not None else 0
         if self._sample_rng is not None:
             first_tok, self.cache = fn(*args, self._sample_rng)
         else:
             first_tok, self.cache = fn(*args)
         self.stats["prefill_dispatches"] += 1
+        if self._tm is not None:
+            # one ragged dispatch serves every prefilling lane; each
+            # lane gets a span of the shared dispatch wall time
+            dur = time.monotonic_ns() - t_disp
+            for si in pre:
+                s = self.slots[si]
+                self._tm.on_prefill_chunk(s.uid, si, ts_ns=t_disp,
+                                          dur_ns=dur, pos=s.cursor,
+                                          chunk=takes[si])
         for si in pre:
             s = self.slots[si]
             s.cursor += takes[si]
@@ -1422,6 +1601,8 @@ class ServeEngine:
                 self._release_slot(si, FAILED)
             else:
                 s.generated.append(tok)
+                if self._tm is not None:
+                    self._tm.on_first_token(s.uid)
             # the lane's token never entered a decode block, so the
             # device carry has no valid entry for it: the next block
             # rebuilds its input from ``generated`` (cold path)
@@ -1499,6 +1680,8 @@ class ServeEngine:
                         self._release_slot(si, FAILED)
                     else:
                         s.generated.append(tok)
+                        if self._tm is not None:
+                            self._tm.on_first_token(s.uid)
                     self._carry_ok[si] = False
                 self.stats["tick_ns_harvest"] += time.monotonic_ns() - th
             self._finish_done_slots()
@@ -1543,11 +1726,24 @@ class ServeEngine:
             token_dev = self._token_carry
         first = self._first_tok if handoff else self._zero_tok
         args = (self.params, self.cache, token_dev, first, ctrl_dev)
+        # A^3 telemetry sampling: every telemetry_every-th decode
+        # dispatch routes through the probe jit — identical token ops
+        # plus the in-graph quality accumulator, harvested on the same
+        # deferred drain (zero extra syncs, bit-identical streams)
+        probe_out = None
+        fn = self._decode_block
+        if self._decode_block_probe is not None and \
+                self.stats["decode_dispatches"] % self.telemetry_every == 0:
+            fn = self._decode_block_probe
+        t_disp = time.monotonic_ns() if self._tm is not None else 0
         if self._sample_rng is not None:
-            full, carry, self.cache = self._decode_block(
-                *args, self._sample_rng)
+            out = fn(*args, self._sample_rng)
         else:
-            full, carry, self.cache = self._decode_block(*args)
+            out = fn(*args)
+        if fn is self._decode_block:
+            full, carry, self.cache = out
+        else:
+            full, probe_out, carry, self.cache = out
         # decode_steps counts executed scan iterations (T per dispatch);
         # decode_steps_advanced counts sequential steps that advanced at
         # least one lane (the deepest lane's progress) — iterations past
@@ -1583,7 +1779,8 @@ class ServeEngine:
                    for si in active if self.slots[si].decoding],
             refs={},
             ready_at=(time.monotonic() + self.virtual_device_latency_s
-                      if self.virtual_device_latency_s > 0.0 else 0.0))
+                      if self.virtual_device_latency_s > 0.0 else 0.0),
+            probe=probe_out, t_dispatch=t_disp)
         for si, uid in entry.handoff:
             entry.refs[si] = uid
         for si, uid, nb, _pos0 in entry.lanes:
@@ -1620,6 +1817,12 @@ class ServeEngine:
         if any(not _block_done(e.full) or e.ready_at > now
                for e in entries):
             self.stats["host_sync_stalls"] += 1
+            if self._tm is not None:
+                # the stall shows on the timeline as the gap between
+                # this instant and the stalled blocks' span ends
+                self._tm.event("host_sync_stall",
+                               forced_blocks=len(entries),
+                               in_flight=len(self._pending))
         # opportunistic sweep: newer blocks that have already landed
         # on-device cost nothing to read now and widen the gap to the
         # next forced drain
@@ -1645,6 +1848,21 @@ class ServeEngine:
         poison quarantine for lanes whose rows carry the sentinel.
         Every row is uid-guarded — a lane released while the harvest
         was in flight contributes nothing to its slot's successor."""
+        tm = self._tm
+        if tm is not None:
+            now = time.monotonic_ns()
+            tm.on_decode_block(
+                [(si, uid) for si, uid, _nb, _p0 in e.lanes],
+                ts_ns=e.t_dispatch or now,
+                dur_ns=now - e.t_dispatch if e.t_dispatch else 0,
+                steps=max((nb for _si, _u, nb, _p0 in e.lanes),
+                          default=0),
+                deferred=self.pipeline_depth > 0)
+            if e.probe is not None:
+                # the probe array computed in the same dispatch as the
+                # ring: np.asarray here is part of the same drain
+                # event, so ``host_syncs`` does not grow
+                tm.on_a3_probe(np.asarray(e.probe))
         for si, uid in e.handoff:
             s = self.slots[si]
             if s.uid != uid or not s.decoding:
@@ -1656,6 +1874,8 @@ class ServeEngine:
                 self._release_slot(si, FAILED)
             else:
                 s.generated.append(tok)
+                if tm is not None:
+                    tm.on_first_token(s.uid)
         for si, uid, nb, pos0 in e.lanes:
             s = self.slots[si]
             if s.uid != uid or not s.decoding:
@@ -1672,6 +1892,8 @@ class ServeEngine:
                 self._release_slot(si, FAILED)
                 continue
             s.generated.extend(int(tok) for tok in row)
+            if tm is not None and nb > 0:
+                tm.on_decode_steps(s.uid, nb)
             if self._use_a3:
                 # mirror the in-graph watermark (checked before each
                 # step's ring write, exactly as resort_sorted_keys

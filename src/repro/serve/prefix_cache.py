@@ -253,6 +253,10 @@ class PrefixCache:
         # chaos hook: called with the blob key before each L2 restore;
         # returning True corrupts the blob first (restore_corrupt site)
         self.l2_fault_hook: Optional[Any] = None
+        # telemetry bundle (serve.telemetry.Telemetry), set by the
+        # engine when tracing is on: cache events (hits, evictions,
+        # COW dedupes, L2 demote/promote) land on the shared timeline
+        self.tm: Optional[Any] = None
         self._jit_record = jax.jit(self._record_fn, donate_argnums=(0,))
         self._jit_gather_many = jax.jit(
             functools.partial(gather_many_fn, self.segs, self.a3),
@@ -414,6 +418,9 @@ class PrefixCache:
         if not node.parent.children:
             self._push(node.parent)     # parent may now be evictable
         self.stats["pages_evicted"] += 1
+        if self.tm is not None:
+            self.tm.event("page_evict", track="cache",
+                          demoted=self.l2 is not None, end=node.end)
 
     def spill(self, n: int) -> int:
         """Force-evict up to ``n`` LRU evictable nodes (the chaos
@@ -470,6 +477,8 @@ class PrefixCache:
         self.l2.put(self._path_of(node),
                     {"page": page, "snap": snap, "sk": sk,
                      "meta": {"snap_valid": np.uint8(node.snap_valid)}})
+        if self.tm is not None:
+            self.tm.event("l2_demote", track="cache", end=node.end)
 
     def _promote(self, parent: _TrieNode, edge: Tuple[int, ...]
                  ) -> Optional[_TrieNode]:
@@ -513,6 +522,9 @@ class PrefixCache:
                 self._free.append(pid)
             self.l2.discard(key)
             self.stats["l2_integrity_drops"] += 1
+            if self.tm is not None:
+                self.tm.event("l2_integrity_drop", track="cache",
+                              tokens=len(key))
             return None
         finally:
             self.unref(parent)
@@ -543,6 +555,8 @@ class PrefixCache:
                 child.sk_snap = {
                     name: {k: jnp.asarray(v) for k, v in h.items()}
                     for name, h in sk_host.items()}
+        if self.tm is not None:
+            self.tm.event("l2_promote", track="cache", end=child.end)
         return child
 
     # -- admission -----------------------------------------------------------
@@ -610,6 +624,9 @@ class PrefixCache:
         self.stats["prefix_hits"] += len(entries)
         self.stats["prefix_tokens_reused"] += sum(t for _, t, _ in entries)
         self.stats["gather_dispatches"] += 1
+        if self.tm is not None:
+            self.tm.event("prefix_hit", track="cache", hits=len(entries),
+                          tokens=sum(t for _, t, _ in entries))
         return cache
 
     # -- recording -----------------------------------------------------------
@@ -632,12 +649,17 @@ class PrefixCache:
                                                        boundary])
         child = parent.children.get(key)
         if child is not None:
+            # copy-on-write dedupe: the page already exists, so this
+            # lane shares it instead of recording a duplicate
             self._touch(child)
             if carry and not child.snap_valid:
                 if self._has_rec:
                     child.snap = self._jit_snapshot(
                         cache, jnp.asarray(si, jnp.int32))
                 child.snap_valid = True
+            if self.tm is not None:
+                self.tm.event("page_dedupe", track="cache",
+                              end=child.end)
             return child
         page_id = self._alloc_page()
         if page_id is None:

@@ -66,3 +66,37 @@ def test_dryrun_cli_list():
     p = _run(["repro.launch.dryrun", "--list"], timeout=300)
     assert p.returncode == 0, p.stderr[-2000:]
     assert "grok-1-314b" in p.stdout and "long_500k" in p.stdout
+
+@pytest.mark.slow
+def test_serve_cli_telemetry_artifacts(tmp_path):
+    """--stats-json (versioned v2 schema + config echo + metrics dump),
+    --metrics-json, and --trace-out all land as valid JSON from one
+    telemetered A^3 run."""
+    import json
+    stats = str(tmp_path / "stats.json")
+    metrics = str(tmp_path / "metrics.json")
+    trace = str(tmp_path / "trace.json")
+    p = _run(["repro.launch.serve", "--arch", "phi4-mini-3.8b", "--smoke",
+              "--requests", "2", "--prompt-len", "12", "--max-new", "4",
+              "--max-len", "64", "--a3", "conservative",
+              "--decode-block", "2", "--telemetry-every", "1",
+              "--stats-json", stats, "--metrics-json", metrics,
+              "--trace-out", trace])
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "requests=2/2" in p.stdout
+    with open(stats) as f:
+        snap = json.load(f)
+    assert snap["schema"] == "a3-serve-stats/v2"
+    assert snap["config"]["a3"] == "conservative"
+    assert snap["config"]["serve"]["telemetry"] is True
+    assert snap["stats"]["finished"] == 2
+    # --metrics-json implies --telemetry, so the dump is present twice
+    assert snap["metrics"]["schema"] == "a3-serve-metrics/v1"
+    with open(metrics) as f:
+        m = json.load(f)
+    assert m["counters"]["serve_a3_probe_dispatches"] >= 1
+    assert m["counters"]["serve_finished"] == 2
+    with open(trace) as f:
+        tr = json.load(f)
+    assert tr["otherData"]["schema"] == "a3-serve-trace/v1"
+    assert any(e["name"] == "terminal" for e in tr["traceEvents"])

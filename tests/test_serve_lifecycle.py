@@ -377,3 +377,76 @@ def test_lifecycle_conservation_under_churn(params, prompts):
     assert eng.in_flight == 0
     terminal = {"finished", "rejected", "cancelled", "expired", "failed"}
     assert all(eng.status(u) in terminal for u in uids)
+
+
+# ---------------------------------------------------------------------------
+# bounded retention (retain_results)
+# ---------------------------------------------------------------------------
+
+def test_retention_result_pops_on_read(params, prompts):
+    eng = ServeEngine(params, TINY, slots=2, max_len=MAX_LEN,
+                      prefill_chunk=8, retain_results=8)
+    u = eng.submit(prompts[0], max_new_tokens=3)
+    eng.run_to_completion()
+    toks = eng.result(u)
+    assert toks is not None and len(toks) == 3
+    # first read released the engine's copy
+    assert eng.result(u) is None
+    _check_conservation(eng)
+
+
+def test_retention_evicts_oldest_terminal(params, prompts):
+    eng = ServeEngine(params, TINY, slots=2, max_len=MAX_LEN,
+                      prefill_chunk=8, retain_results=2)
+    uids = [eng.submit(p, max_new_tokens=2) for p in prompts[:4]]
+    eng.run_to_completion()
+    # only the newest 2 terminal entries survive; evicted uids forget
+    # both their status and their result
+    kept = [u for u in uids if u in eng._status]
+    assert len(kept) == 2 and kept == sorted(uids)[-2:]
+    assert eng.result(uids[0]) is None
+    with pytest.raises(KeyError):
+        eng.status(uids[0])
+    assert eng.result(kept[-1]) is not None
+    # conservation is counter-based, so eviction does not break it
+    _check_conservation(eng)
+    assert eng.stats["finished"] == 4
+
+
+def test_retention_conservation_over_10k_request_churn(params):
+    """Long-running-service memory bound: 10k one-token requests
+    through a retain_results window keep the engine's per-request maps
+    at O(window), conserve every lifecycle counter, and (with
+    telemetry on) drain the request-tracking map — nothing grows with
+    total requests served."""
+    retain = 64
+    eng = ServeEngine(params, TINY, slots=8, max_len=MAX_LEN,
+                      prefill_chunk=16, retain_results=retain,
+                      telemetry=True, trace_events=256)
+    rng = np.random.default_rng(3)
+    total, waves = 10_000, 10
+    for w in range(waves):
+        uids = [eng.submit(rng.integers(0, TINY.vocab_size,
+                                        size=int(rng.integers(2, 6))),
+                           max_new_tokens=1)
+                for _ in range(total // waves)]
+        eng.run_to_completion()
+        # sample a few results: present exactly once, then popped
+        for u in uids[-4:]:
+            assert len(eng.result(u)) == 1
+            assert eng.result(u) is None
+        _check_conservation(eng)
+        assert len(eng._status) <= retain
+        assert len(eng._done) <= retain
+        assert len(eng._terminal_order) <= retain
+        assert not eng.tm._reqs            # per-request tracks drained
+        assert len(eng.tm.tracer.events) <= 256
+    s = eng.stats
+    assert s["submitted"] == s["finished"] == total
+    assert eng.in_flight == 0
+    # the metrics plane kept the full count even though the result
+    # maps only ever held the serving window
+    snap = eng.tm.metrics_snapshot()
+    assert snap["counters"]["serve_finished"] == total
+    ttft = snap["histograms"]["serve_ttft_ns{terminal=finished}"]
+    assert ttft["total"] == total
